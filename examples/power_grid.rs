@@ -1,0 +1,53 @@
+//! Power-network scaling study (ACTIVSg-like): sweep grid sizes, compile,
+//! simulate, and report throughput/utilization/energy — the paper's
+//! scalability angle on Fig. 12.
+//!
+//! Run: `cargo run --release --example power_grid`
+
+use mgd_sptrsv::arch::ArchConfig;
+use mgd_sptrsv::compiler::{compile, CompilerConfig};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::sim::{Accelerator, EnergyModel};
+use mgd_sptrsv::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchConfig::default();
+    let model = EnergyModel::paper_28nm();
+    let mut table = Table::new(vec![
+        "grid",
+        "n",
+        "nnz",
+        "cycles",
+        "GOPS",
+        "util %",
+        "power mW",
+        "GOPS/W",
+        "compile ms",
+    ]);
+    for side in [16usize, 32, 48, 64, 96, 128] {
+        let m = gen::grid2d(side, side, true, GenSeed(7));
+        let cfg = CompilerConfig {
+            arch,
+            ..CompilerConfig::default()
+        };
+        let prog = compile(&m, &cfg)?;
+        let mut acc = Accelerator::new(arch);
+        let run = acc.run(&prog, &vec![1.0f32; m.n])?;
+        run.stats.verify_against(&prog.predicted)?;
+        let gops = run.gops(&arch, prog.flops());
+        let e = model.estimate(&run.stats, &arch);
+        table.row(vec![
+            format!("{side}x{side}"),
+            m.n.to_string(),
+            m.nnz().to_string(),
+            run.stats.cycles.to_string(),
+            format!("{gops:.2}"),
+            format!("{:.1}", 100.0 * run.stats.utilization(arch.num_cus())),
+            format!("{:.1}", e.avg_power_w * 1e3),
+            format!("{:.1}", e.gops_per_watt(gops)),
+            format!("{:.1}", prog.compile.compile_seconds * 1e3),
+        ]);
+    }
+    println!("{table}");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""AOT export: lower the L2 ``level_step`` to HLO *text* artifacts.
+
+HLO text, NOT serialized protos: jax >= 0.5 emits HloModuleProtos with
+64-bit instruction ids that the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+
+One executable is emitted per (batch, edge-budget) variant; the rust
+runtime picks the variant per level. ``manifest.txt`` lists them.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.level_mac_multi import level_mac_multi
+from .model import level_step
+
+# (batch rows, edge budget) variants compiled ahead of time. The small
+# variant serves narrow levels with low padding waste; the large one
+# amortizes dispatch on wide levels.
+VARIANTS = [(64, 16), (256, 32)]
+
+# (rhs batch, rows, edges) multi-RHS variants (EXPERIMENTS.md §Perf:
+# amortize PJRT dispatch across a transient simulation's RHS stream).
+MULTI_VARIANTS = [(8, 64, 16)]
+
+
+def multi_step(vals, xg, b, dinv):
+    """The exported multi-RHS computation (1-tuple, like level_step)."""
+    return (level_mac_multi(vals, xg, b, dinv),)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch: int, edges: int) -> str:
+    mat = jax.ShapeDtypeStruct((batch, edges), jnp.float32)
+    vec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(level_step).lower(mat, mat, vec, vec)
+    return to_hlo_text(lowered)
+
+
+def lower_multi_variant(rhs: int, batch: int, edges: int) -> str:
+    vals = jax.ShapeDtypeStruct((batch, edges), jnp.float32)
+    xg = jax.ShapeDtypeStruct((rhs, batch, edges), jnp.float32)
+    b = jax.ShapeDtypeStruct((rhs, batch), jnp.float32)
+    dinv = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(multi_step).lower(vals, xg, b, dinv)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for batch, edges in VARIANTS:
+        text = lower_variant(batch, edges)
+        name = f"level_mac_{batch}x{edges}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {batch} {edges}")
+        print(f"wrote {len(text)} chars to {path}")
+    multi_manifest = []
+    for rhs, batch, edges in MULTI_VARIANTS:
+        text = lower_multi_variant(rhs, batch, edges)
+        name = f"level_mac_multi_{rhs}x{batch}x{edges}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        multi_manifest.append(f"{name} {rhs} {batch} {edges}")
+        print(f"wrote {len(text)} chars to {path}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    with open(os.path.join(args.out_dir, "manifest_multi.txt"), "w") as f:
+        f.write("\n".join(multi_manifest) + "\n")
+    print(f"manifest: {len(manifest)} scalar + {len(multi_manifest)} multi variants")
+
+
+if __name__ == "__main__":
+    main()

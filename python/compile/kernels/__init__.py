@@ -1,0 +1,4 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .level_mac import level_mac, vmem_footprint_bytes  # noqa: F401
+from .ref import level_mac_ref, solve_levels_ref  # noqa: F401

@@ -1,0 +1,78 @@
+"""L1 — the Pallas level-MAC kernel.
+
+The accelerator's PE computes ``psum += L_ij * x_j`` streams followed by
+``x_i = (b_i - psum) * L_ii^-1`` (paper eq. 2). On a TPU-shaped target the
+numeric hot loop of a *level* (a set of independent rows) is a padded
+segmented multiply-accumulate: rows are packed into a ``(B, E)`` tile
+(``E`` = padded edge budget per row, zero-filled), staged HBM->VMEM with a
+``BlockSpec`` over the row dimension, and reduced on the VPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ASIC
+feeds PEs from stream FIFOs; the TPU analog is VMEM tiling — the
+``BlockSpec`` below expresses the HBM->VMEM schedule the ASIC did with
+FIFOs. The reduction is deliberately VPU-shaped, not MXU-shaped: every
+``L`` value is used exactly once, so a systolic matmul would waste the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics
+(see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block. 8 f32 sublanes x 128 lanes is the natural TPU tile;
+# 32 rows x E<=64 edges keeps the block well under VMEM budgets
+# (32*64*4B*2 buffers = 16 KiB << 16 MiB VMEM).
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _kernel(vals_ref, xg_ref, b_ref, dinv_ref, out_ref):
+    """One (TB, E) block: out = (b - sum(vals * xg, axis=1)) * dinv."""
+    acc = jnp.sum(vals_ref[...] * xg_ref[...], axis=1)
+    out_ref[...] = (b_ref[...] - acc) * dinv_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def level_mac(vals, xg, b, dinv, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Solve one padded level.
+
+    Args:
+      vals: ``(B, E)`` f32 — off-diagonal values, zero-padded per row.
+      xg:   ``(B, E)`` f32 — gathered solutions ``x[colidx]``, zero-padded.
+      b:    ``(B,)``  f32 — right-hand sides of the level's rows.
+      dinv: ``(B,)``  f32 — reciprocal diagonals.
+      block_rows: VMEM block height (must divide B).
+
+    Returns:
+      ``(B,)`` f32 — the level's solutions.
+    """
+    bsz, esz = vals.shape
+    assert xg.shape == (bsz, esz) and b.shape == (bsz,) and dinv.shape == (bsz,)
+    tb = min(block_rows, bsz)
+    assert bsz % tb == 0, f"block_rows {tb} must divide B {bsz}"
+    grid = (bsz // tb,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, esz), lambda i: (i, 0)),
+            pl.BlockSpec((tb, esz), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(vals, xg, b, dinv)
+
+
+def vmem_footprint_bytes(block_rows: int, e: int) -> int:
+    """Estimated VMEM bytes for one block (2 operand tiles + 3 vectors),
+    double-buffered. Used by the DESIGN.md roofline discussion."""
+    tile = block_rows * e * 4
+    vecs = 3 * block_rows * 4
+    return 2 * (2 * tile + vecs)

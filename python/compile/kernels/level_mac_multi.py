@@ -1,0 +1,67 @@
+"""L1 — multi-RHS level-MAC Pallas kernel.
+
+The paper's motivating applications solve the same factor against a stream
+of right-hand sides (transient simulation, iterative refinement). The
+scalar kernel is dispatch-bound on thin levels (EXPERIMENTS.md §Perf:
+~100 us/level through PJRT), so this variant processes ``R`` RHS per
+dispatch: the ``vals`` tile (matrix structure) is shared, the gathered
+``xg`` and ``b`` carry an RHS axis, amortizing both dispatch and the
+HBM->VMEM staging of ``vals`` across the batch — the same reuse argument
+as the accelerator's stream memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, xg_ref, b_ref, dinv_ref, out_ref):
+    """One (TB, E) block against R RHS.
+
+    Shapes inside the block: vals (TB, E); xg (R, TB, E); b (R, TB);
+    dinv (TB,); out (R, TB).
+    """
+    acc = jnp.sum(vals_ref[...][None, :, :] * xg_ref[...], axis=2)
+    out_ref[...] = (b_ref[...] - acc) * dinv_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def level_mac_multi(vals, xg, b, dinv, *, block_rows: int = 32):
+    """Solve one padded level for a batch of RHS.
+
+    Args:
+      vals: ``(B, E)`` f32 — shared off-diagonal values, zero-padded.
+      xg:   ``(R, B, E)`` f32 — per-RHS gathered solutions.
+      b:    ``(R, B)`` f32 — per-RHS right-hand sides.
+      dinv: ``(B,)`` f32 — shared reciprocal diagonals.
+
+    Returns:
+      ``(R, B)`` f32.
+    """
+    bsz, esz = vals.shape
+    r = xg.shape[0]
+    assert xg.shape == (r, bsz, esz) and b.shape == (r, bsz) and dinv.shape == (bsz,)
+    tb = min(block_rows, bsz)
+    assert bsz % tb == 0
+    grid = (bsz // tb,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, esz), lambda i: (i, 0)),
+            pl.BlockSpec((r, tb, esz), lambda i: (0, i, 0)),
+            pl.BlockSpec((r, tb), lambda i: (0, i)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((r, tb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, bsz), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(vals, xg, b, dinv)
+
+
+def level_mac_multi_ref(vals, xg, b, dinv):
+    """Pure-jnp oracle."""
+    acc = jnp.sum(vals[None, :, :] * xg, axis=2)
+    return (b - acc) * dinv[None, :]

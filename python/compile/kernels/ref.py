@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the level-MAC kernel (no Pallas)."""
+
+import jax.numpy as jnp
+
+
+def level_mac_ref(vals, xg, b, dinv):
+    """Reference: out = (b - sum(vals * xg, axis=1)) * dinv."""
+    return (b - jnp.sum(vals * xg, axis=1)) * dinv
+
+
+def solve_levels_ref(rowptr, colidx, values, b):
+    """Full level-scheduled SpTRSV in plain numpy-style python — the golden
+    numeric model for the L2 tests. Diagonal-last CSR convention."""
+    import numpy as np
+
+    n = len(rowptr) - 1
+    x = np.zeros(n, dtype=np.float32)
+    for i in range(n):
+        lo, hi = rowptr[i], rowptr[i + 1] - 1
+        s = np.float32(0.0)
+        for k in range(lo, hi):
+            s += np.float32(values[k]) * x[colidx[k]]
+        x[i] = (np.float32(b[i]) - s) / np.float32(values[hi])
+    return x

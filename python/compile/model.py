@@ -1,0 +1,94 @@
+"""L2 — the JAX compute graph of level-scheduled SpTRSV.
+
+The model is the numeric counterpart of the rust accelerator: the matrix
+structure is preprocessed (levels, per-row gather indices, padding) and the
+per-level compute is the L1 Pallas kernel. The exported artifact is the
+fixed-shape ``level_step`` below; the rust runtime marshals each level into
+the padded ``(B, E)`` tile and executes the compiled executable per level
+(python never runs on the request path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import level_mac
+
+
+def level_step(vals, xg, b, dinv):
+    """One padded-level solve (the exported computation).
+
+    All arguments are fixed-shape; rows beyond the level's real size must
+    be padded with ``vals = 0``, ``b = 0``, ``dinv = 1`` so they produce 0.
+    """
+    return (level_mac(vals, xg, b, dinv),)
+
+
+def plan_levels(rowptr, colidx, n):
+    """Preprocess a diagonal-last CSR structure into a level plan.
+
+    Returns a list of levels; each level is ``(rows, cols)`` where ``rows``
+    is the array of row ids and ``cols[r, e]`` the gather indices padded
+    with 0 (gathering ``x[0]`` against a 0 value is harmless).
+    """
+    level_of = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        lo, hi = rowptr[i], rowptr[i + 1] - 1
+        lv = 0
+        for k in range(lo, hi):
+            lv = max(lv, level_of[colidx[k]] + 1)
+        level_of[i] = lv
+    plans = []
+    for lv in range(level_of.max() + 1 if n else 0):
+        rows = np.nonzero(level_of == lv)[0]
+        plans.append(rows)
+    return level_of, plans
+
+
+def solve(rowptr, colidx, values, b, batch=64, edge_budget=16):
+    """Full solve by repeated ``level_step`` calls (the python-side mirror
+    of what the rust runtime does; used for L2 tests).
+
+    Rows whose in-degree exceeds ``edge_budget`` fall back to a split
+    accumulation over several kernel invocations.
+    """
+    n = len(rowptr) - 1
+    rowptr = np.asarray(rowptr)
+    colidx = np.asarray(colidx)
+    values = np.asarray(values, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    x = np.zeros(n, dtype=np.float32)
+    _, plans = plan_levels(rowptr, colidx, n)
+    for rows in plans:
+        for start in range(0, len(rows), batch):
+            chunk = rows[start : start + batch]
+            bsz = batch
+            vals = np.zeros((bsz, edge_budget), dtype=np.float32)
+            xg = np.zeros((bsz, edge_budget), dtype=np.float32)
+            bb = np.zeros(bsz, dtype=np.float32)
+            dinv = np.ones(bsz, dtype=np.float32)
+            # Partial sums for rows with more edges than the budget.
+            carry = np.zeros(bsz, dtype=np.float32)
+            for r, i in enumerate(chunk):
+                lo, hi = rowptr[i], rowptr[i + 1] - 1
+                k = hi - lo
+                cols = colidx[lo:hi]
+                vs = values[lo:hi]
+                if k > edge_budget:
+                    # Fold the overflow serially into the carry.
+                    extra = k - edge_budget
+                    carry[r] = np.dot(
+                        vs[edge_budget:], x[cols[edge_budget:]]
+                    ).astype(np.float32)
+                    k = edge_budget
+                vals[r, :k] = vs[:k]
+                xg[r, :k] = x[cols[:k]]
+                bb[r] = b[i] - carry[r]
+                dinv[r] = 1.0 / values[hi]
+            (out,) = level_step(
+                jnp.asarray(vals), jnp.asarray(xg), jnp.asarray(bb), jnp.asarray(dinv)
+            )
+            out = np.asarray(out)
+            for r, i in enumerate(chunk):
+                x[i] = out[r]
+    return x

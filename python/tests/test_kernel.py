@@ -1,0 +1,98 @@
+"""L1 kernel tests: Pallas level-MAC vs the pure-jnp oracle, with
+hypothesis sweeps over shapes and values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import level_mac, level_mac_ref, vmem_footprint_bytes
+
+
+def _rand(shape, seed, lo=-2.0, hi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("bsz,esz", [(32, 8), (64, 16), (256, 32), (32, 1)])
+def test_matches_ref(bsz, esz):
+    vals = _rand((bsz, esz), 1)
+    xg = _rand((bsz, esz), 2)
+    b = _rand((bsz,), 3)
+    dinv = _rand((bsz,), 4, lo=0.5, hi=1.5)
+    got = level_mac(vals, xg, b, dinv)
+    want = level_mac_ref(vals, xg, b, dinv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_zero_padding_is_identity():
+    # Padded rows (vals=0, b=0, dinv=1) must produce exactly 0.
+    bsz, esz = 64, 16
+    vals = jnp.zeros((bsz, esz), jnp.float32)
+    xg = _rand((bsz, esz), 5)  # garbage gathers are harmless against 0
+    b = jnp.zeros((bsz,), jnp.float32)
+    dinv = jnp.ones((bsz,), jnp.float32)
+    out = np.asarray(level_mac(vals, xg, b, dinv))
+    np.testing.assert_array_equal(out, np.zeros(bsz, np.float32))
+
+
+def test_block_rows_variants_agree():
+    bsz, esz = 128, 16
+    vals, xg = _rand((bsz, esz), 6), _rand((bsz, esz), 7)
+    b, dinv = _rand((bsz,), 8), _rand((bsz,), 9, lo=0.5, hi=1.5)
+    a = np.asarray(level_mac(vals, xg, b, dinv, block_rows=32))
+    c = np.asarray(level_mac(vals, xg, b, dinv, block_rows=128))
+    np.testing.assert_allclose(a, c, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bsz=st.sampled_from([8, 32, 64]),
+    esz=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shape_sweep(bsz, esz, seed):
+    vals = _rand((bsz, esz), seed)
+    xg = _rand((bsz, esz), seed + 1)
+    b = _rand((bsz,), seed + 2)
+    dinv = _rand((bsz,), seed + 3, lo=0.25, hi=4.0)
+    got = np.asarray(level_mac(vals, xg, b, dinv, block_rows=8))
+    want = np.asarray(level_mac_ref(vals, xg, b, dinv))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_value_scaling(scale, seed):
+    # Numeric robustness across magnitudes.
+    bsz, esz = 32, 8
+    vals = _rand((bsz, esz), seed) * scale
+    xg = _rand((bsz, esz), seed + 1)
+    b = _rand((bsz,), seed + 2) * scale
+    dinv = _rand((bsz,), seed + 3, lo=0.5, hi=1.5) / scale
+    got = np.asarray(level_mac(vals, xg, b, dinv, block_rows=8))
+    want = np.asarray(level_mac_ref(vals, xg, b, dinv))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_vmem_footprint_under_budget():
+    # 16 MiB VMEM on current TPUs; our default block must be far below.
+    assert vmem_footprint_bytes(32, 64) < 64 * 1024
+    assert vmem_footprint_bytes(256, 32) < 256 * 1024
+
+
+def test_jit_cache_stable():
+    # Two calls with the same shapes must not retrace (guard for the AOT
+    # path: one executable per variant).
+    bsz, esz = 64, 16
+    vals, xg = _rand((bsz, esz), 10), _rand((bsz, esz), 11)
+    b, dinv = _rand((bsz,), 12), _rand((bsz,), 13, lo=0.5, hi=1.5)
+    f = jax.jit(lambda *a: level_mac(*a))
+    _ = f(vals, xg, b, dinv)
+    n0 = f._cache_size()
+    _ = f(vals, xg, b, dinv)
+    assert f._cache_size() == n0

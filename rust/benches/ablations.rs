@@ -1,0 +1,90 @@
+//! Ablations of the design choices DESIGN.md calls out: allocation policy,
+//! operand forwarding, bank coloring, ICR, and medium-node splitting
+//! (paper §V.E future work).
+
+use mgd_sptrsv::arch::ArchConfig;
+use mgd_sptrsv::bench_harness::workloads;
+use mgd_sptrsv::compiler::{schedule_only, split, AllocationPolicy, CompilerConfig};
+use mgd_sptrsv::util::Table;
+
+fn gops(m: &mgd_sptrsv::matrix::CsrMatrix, cfg: &CompilerConfig) -> f64 {
+    let s = schedule_only(m, cfg).expect("schedule");
+    let flops = (2 * m.nnz() - m.n) as f64;
+    flops / (s.stats.cycles as f64 / cfg.arch.clock_hz) / 1e9
+}
+
+fn main() {
+    let arch = ArchConfig::default();
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let suite = if scale == "full" {
+        workloads::suite()
+    } else {
+        workloads::suite_small(8)
+    };
+    let base = CompilerConfig {
+        arch,
+        ..CompilerConfig::default()
+    };
+    let mut table = Table::new(vec![
+        "benchmark",
+        "base GOPS",
+        "least-loaded",
+        "no forwarding",
+        "no coloring",
+        "no ICR",
+        "split(16)",
+    ]);
+    for w in &suite {
+        let m = &w.matrix;
+        let b = gops(m, &base);
+        let ll = gops(
+            m,
+            &CompilerConfig {
+                allocation: AllocationPolicy::LeastLoaded,
+                ..base.clone()
+            },
+        );
+        let nf = gops(
+            m,
+            &CompilerConfig {
+                forwarding: false,
+                ..base.clone()
+            },
+        );
+        let nc = gops(
+            m,
+            &CompilerConfig {
+                use_coloring: false,
+                ..base.clone()
+            },
+        );
+        let ni = gops(
+            m,
+            &CompilerConfig {
+                use_icr: false,
+                ..base.clone()
+            },
+        );
+        // Medium-node splitting: solve the rewritten system; throughput is
+        // original flops over the (larger) split system's cycles.
+        let sp = match split::split_heavy_nodes(m, 16) {
+            Ok(s) if s.intermediates > 0 => {
+                let sched = schedule_only(&s.matrix, &base).expect("split schedule");
+                let flops = (2 * m.nnz() - m.n) as f64;
+                flops / (sched.stats.cycles as f64 / arch.clock_hz) / 1e9
+            }
+            _ => b,
+        };
+        table.row(vec![
+            w.name.to_string(),
+            format!("{b:.2}"),
+            format!("{ll:.2}"),
+            format!("{nf:.2}"),
+            format!("{nc:.2}"),
+            format!("{ni:.2}"),
+            format!("{sp:.2}"),
+        ]);
+    }
+    println!("==== ablations (scale={scale}) ====");
+    println!("{table}");
+}

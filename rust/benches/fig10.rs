@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig10` — regenerates the paper's fig10 (DESIGN.md §3).
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("fig10", &scale) {
+        Ok(out) => {
+            println!("==== fig10 (scale={scale}) ====");
+            println!("{out}");
+            println!("[fig10 completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig10 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

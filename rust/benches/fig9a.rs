@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig9a` — regenerates the paper's fig9a (DESIGN.md §3).
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("fig9a", &scale) {
+        Ok(out) => {
+            println!("==== fig9a (scale={scale}) ====");
+            println!("{out}");
+            println!("[fig9a completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("fig9a failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Microbenchmarks of the hot paths (the §Perf profiling harness):
+//! scheduler cycles/s, simulator cycles/s, full compile, and the PJRT
+//! level-kernel dispatch.
+
+use mgd_sptrsv::compiler::{compile, schedule_only, CompilerConfig};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::runtime::{LevelSolver, PjrtRuntime};
+use mgd_sptrsv::sim::Accelerator;
+use mgd_sptrsv::util::timing::fmt_duration;
+use std::time::Instant;
+
+fn main() {
+    let m = gen::circuit(20_000, 6, 0.8, GenSeed(3));
+    let cfg = CompilerConfig::default();
+    println!("workload: n={} nnz={}", m.n, m.nnz());
+
+    // Scheduler throughput.
+    let t0 = Instant::now();
+    let s = schedule_only(&m, &cfg).expect("schedule");
+    let dt = t0.elapsed();
+    let cu_cycles = s.stats.cycles * 64;
+    println!(
+        "schedule_only: {} ({} cycles, {:.1} M CU-cycles/s)",
+        fmt_duration(dt),
+        s.stats.cycles,
+        cu_cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // Full compile (both passes + coloring + emission).
+    let t0 = Instant::now();
+    let prog = compile(&m, &cfg).expect("compile");
+    let dt = t0.elapsed();
+    println!(
+        "compile: {} ({:.2} ns/nnz)",
+        fmt_duration(dt),
+        dt.as_nanos() as f64 / m.nnz() as f64
+    );
+
+    // Simulator throughput.
+    let b = vec![1.0f32; m.n];
+    let mut acc = Accelerator::new(cfg.arch);
+    let t0 = Instant::now();
+    let run = acc.run(&prog, &b).expect("sim");
+    let dt = t0.elapsed();
+    run.stats
+        .verify_against(&prog.predicted)
+        .expect("double entry");
+    println!(
+        "simulate: {} ({:.1} M CU-cycles/s)",
+        fmt_duration(dt),
+        (run.stats.cycles * 64) as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // PJRT numeric path (if artifacts are built).
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtRuntime::load(&artifacts) {
+        Ok(rt) => {
+            let solver = LevelSolver::new(&m);
+            let t0 = Instant::now();
+            let x = solver.solve(&rt, &b).expect("pjrt solve");
+            let dt = t0.elapsed();
+            std::hint::black_box(&x);
+            println!(
+                "pjrt solve: {} ({} levels, {:.1} us/level)",
+                fmt_duration(dt),
+                solver.num_levels(),
+                dt.as_micros() as f64 / solver.num_levels() as f64
+            );
+        }
+        Err(e) => println!("pjrt solve: skipped ({e})"),
+    }
+}

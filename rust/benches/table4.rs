@@ -1,0 +1,18 @@
+//! `cargo bench --bench table4` — regenerates the paper's table4 (DESIGN.md §3).
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("table4", &scale) {
+        Ok(out) => {
+            println!("==== table4 (scale={scale}) ====");
+            println!("{out}");
+            println!("[table4 completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("table4 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

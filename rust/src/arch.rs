@@ -1,0 +1,115 @@
+//! Architecture parameters of the accelerator (paper §III.B, Fig. 4/5 and
+//! the synthesis configuration of §V.A).
+//!
+//! The hyperparameters mirror Table I's `N/M/K/T`:
+//! `2^N` compute units, `2^M`-word `x_i` register files and `2^K`-word `psum`
+//! register files per CU, and a data memory addressed with `T` bits.
+
+/// Static configuration of one accelerator instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchConfig {
+    /// `N`: number of CUs is `2^N` (paper default: 6 → 64 CUs).
+    pub log2_cus: u32,
+    /// `M`: `x_i` register file words per CU is `2^M` (default: 6 → 64).
+    pub log2_xi_words: u32,
+    /// `psum` register file words per CU (paper default 8). Kept as a plain
+    /// count (not forced to a power of two) because Fig. 9(b)/(c) sweeps
+    /// capacities including 0 = caching disabled.
+    pub psum_words: u32,
+    /// Data memory words (paper default 8192). Logical solves larger than
+    /// this spill to host DRAM in a real system; the simulator treats the
+    /// data memory as an append log per CU and reports occupancy.
+    pub dm_words: u32,
+    /// Instruction memory words (paper default 65536). Reported, not
+    /// enforced.
+    pub imem_words: u32,
+    /// Stream memory words (paper default 65536). Reported, not enforced.
+    pub smem_words: u32,
+    /// Accelerator clock in Hz (paper: 150 MHz).
+    pub clock_hz: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            log2_cus: 6,
+            log2_xi_words: 6,
+            psum_words: 8,
+            dm_words: 8192,
+            imem_words: 65536,
+            smem_words: 65536,
+            clock_hz: 150e6,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Number of compute units (`2^N`).
+    pub fn num_cus(&self) -> usize {
+        1usize << self.log2_cus
+    }
+
+    /// `x_i` register-file words per CU (`2^M`).
+    pub fn xi_words(&self) -> usize {
+        1usize << self.log2_xi_words
+    }
+
+    /// Architecture peak throughput in GOPS: each CU retires one
+    /// multiply+add per cycle (the PE is a serial fp-mul → fp-add pair).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.num_cus() as f64 * self.clock_hz / 1e9
+    }
+
+    /// Clock period in seconds.
+    pub fn clock_period(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// CDU threshold used for Table III statistics: 20% of the maximum
+    /// parallelism (paper §V.B).
+    pub fn cdu_threshold(&self) -> usize {
+        ((self.num_cus() as f64) * crate::graph::CDU_THRESHOLD_FRACTION).ceil() as usize
+    }
+
+    /// The paper-faithful VLIW word length in bits (Fig. 5(a)):
+    /// psum(1+K) + xi(1+M+1) + dm(1+T) + I/O_en(2N) + S34(2) + PE_en(2) +
+    /// S12(2) + ct(1) + block(1).
+    pub fn paper_word_bits(&self) -> u32 {
+        let k = (self.psum_words.max(2) as f64).log2().ceil() as u32;
+        let t = (self.dm_words as f64).log2().ceil() as u32;
+        (1 + k) + (1 + self.log2_xi_words + 1) + (1 + t) + 2 * self.log2_cus + 2 + 2 + 2 + 1 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_synthesis() {
+        let a = ArchConfig::default();
+        assert_eq!(a.num_cus(), 64);
+        assert_eq!(a.xi_words(), 64);
+        assert_eq!(a.psum_words, 8);
+        // 64 CU × 2 flop × 150 MHz = 19.2 GOPS (Table IV "Peak throughput").
+        assert!((a.peak_gops() - 19.2).abs() < 1e-9);
+        assert_eq!(a.cdu_threshold(), 13);
+    }
+
+    #[test]
+    fn word_bits_reasonable() {
+        let a = ArchConfig::default();
+        // K=3, M=6, T=13, N=6 → 4 + 8 + 14 + 12 + 8 = 46 bits.
+        assert_eq!(a.paper_word_bits(), 46);
+    }
+
+    #[test]
+    fn small_config() {
+        let a = ArchConfig {
+            log2_cus: 2,
+            ..ArchConfig::default()
+        };
+        assert_eq!(a.num_cus(), 4);
+        assert_eq!(a.cdu_threshold(), 1);
+    }
+}

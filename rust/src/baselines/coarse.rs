@@ -1,0 +1,172 @@
+//! The coarse dataflow baseline (paper §V.B).
+//!
+//! "The coarse dataflow represents the dataflow used by the
+//! synchronization-free method. For a fair comparison, the coarse dataflow
+//! is implemented on our architecture, excluding the effect of cache misses
+//! and thread synchronizations on GPUs."
+//!
+//! A coarse node is the minimal *task scheduling* unit: a CU may only start
+//! a node once **all** of its predecessors are solved, then it computes the
+//! node's edges one per cycle plus the final self-update. Node→CU
+//! allocation is identical to the medium dataflow (topological
+//! round-robin), ports are idealized — exactly the paper's fig. 9(a)
+//! comparison setup.
+
+use crate::compiler::allocation::Allocation;
+use crate::graph::Dag;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Cycle count and utilization of a coarse-dataflow run.
+#[derive(Debug, Clone)]
+pub struct CoarseResult {
+    /// Total cycles.
+    pub cycles: u64,
+    /// Executed op slots (== nnz).
+    pub exec: u64,
+    /// Blocked CU-cycles.
+    pub blocked: u64,
+}
+
+impl CoarseResult {
+    /// PE utilization.
+    pub fn utilization(&self, num_cus: usize) -> f64 {
+        self.exec as f64 / (self.cycles.max(1) as f64 * num_cus as f64)
+    }
+
+    /// Throughput in GOPS at `clock_hz` for `flops` binary ops.
+    pub fn gops(&self, clock_hz: f64, flops: u64) -> f64 {
+        flops as f64 / (self.cycles as f64 / clock_hz) / 1e9
+    }
+}
+
+/// Simulate the coarse dataflow cycle count.
+pub fn simulate(g: &Dag, alloc: &Allocation) -> Result<CoarseResult> {
+    let n = g.n;
+    let num_cus = alloc.tasks.len();
+    // Per node: number of unsolved predecessors.
+    let mut unsolved_preds: Vec<u32> = (0..n).map(|i| g.in_degree(i) as u32).collect();
+    let mut solved = vec![false; n];
+    // Per CU: fully-ready unstarted nodes (ascending id = task order).
+    let mut ready: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); num_cus];
+    for i in 0..n {
+        if unsolved_preds[i] == 0 {
+            ready[alloc.cu_of[i] as usize].insert(i as u32);
+        }
+    }
+    // Per CU: (node, remaining ops) of the node in flight.
+    let mut in_flight: Vec<Option<(u32, u32)>> = vec![None; num_cus];
+    let mut done = 0usize;
+    let mut cycles = 0u64;
+    let mut exec = 0u64;
+    let mut blocked = 0u64;
+    while done < n {
+        if cycles > 4 * (g.num_edges() as u64 + n as u64) + 16 {
+            bail!("coarse dataflow did not converge");
+        }
+        let mut solved_now: Vec<u32> = Vec::new();
+        for cu in 0..num_cus {
+            if in_flight[cu].is_none() {
+                if let Some(&u) = ready[cu].iter().next() {
+                    ready[cu].remove(&u);
+                    // ops = edges + final.
+                    in_flight[cu] = Some((u, g.in_degree(u as usize) as u32 + 1));
+                }
+            }
+            match in_flight[cu].as_mut() {
+                None => blocked += 1,
+                Some((node, remaining)) => {
+                    exec += 1;
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        solved_now.push(*node);
+                        in_flight[cu] = None;
+                    }
+                }
+            }
+        }
+        for &j in &solved_now {
+            solved[j as usize] = true;
+            done += 1;
+            for &dst in g.succs(j as usize) {
+                unsolved_preds[dst as usize] -= 1;
+                if unsolved_preds[dst as usize] == 0 {
+                    ready[alloc.cu_of[dst as usize] as usize].insert(dst);
+                }
+            }
+        }
+        cycles += 1;
+    }
+    Ok(CoarseResult {
+        cycles,
+        exec,
+        blocked,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::allocation::{allocate, AllocationPolicy};
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::CsrMatrix;
+
+    fn run(m: &CsrMatrix, cus: usize) -> CoarseResult {
+        let g = Dag::from_csr(m);
+        let alloc = allocate(&g, cus, AllocationPolicy::RoundRobin);
+        simulate(&g, &alloc).unwrap()
+    }
+
+    #[test]
+    fn exec_slots_equal_nnz() {
+        let m = gen::circuit(300, 5, 0.8, GenSeed(1));
+        let r = run(&m, 16);
+        assert_eq!(r.exec as usize, m.nnz());
+    }
+
+    #[test]
+    fn chain_is_fully_serial() {
+        let m = gen::chain(30, GenSeed(2));
+        let r = run(&m, 8);
+        // Node 0: 1 op; others: 2 ops each, strictly sequential.
+        assert_eq!(r.cycles, 1 + 29 * 2);
+    }
+
+    #[test]
+    fn wide_dag_gets_parallel_speedup() {
+        let m = gen::shallow(2000, 0.2, GenSeed(3));
+        let r1 = run(&m, 1);
+        let r64 = run(&m, 64);
+        assert!(r64.cycles * 16 < r1.cycles, "{} vs {}", r64.cycles, r1.cycles);
+    }
+
+    #[test]
+    fn coarse_never_beats_medium() {
+        // The medium dataflow starts edges as soon as any dependency is
+        // ready; coarse must wait for all. On CDU-heavy DAGs medium wins.
+        use crate::compiler::{schedule_only, CompilerConfig};
+        let m = gen::banded(400, 8, 0.6, GenSeed(4));
+        let cfg = CompilerConfig {
+            arch: crate::arch::ArchConfig {
+                log2_cus: 4,
+                ..Default::default()
+            },
+            ..CompilerConfig::default()
+        };
+        let medium = schedule_only(&m, &cfg).unwrap();
+        let coarse = run(&m, 16);
+        assert!(
+            medium.stats.cycles <= coarse.cycles,
+            "medium {} vs coarse {}",
+            medium.stats.cycles,
+            coarse.cycles
+        );
+    }
+
+    #[test]
+    fn accounting_sums() {
+        let m = gen::grid2d(20, 20, false, GenSeed(5));
+        let r = run(&m, 16);
+        assert_eq!(r.exec + r.blocked, r.cycles * 16);
+    }
+}

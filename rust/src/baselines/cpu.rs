@@ -1,0 +1,170 @@
+//! CPU baseline (the paper's MKL `mkl_sparse_s_trsv` stand-in).
+//!
+//! Two algorithm classes are measured natively on this host:
+//!
+//! - [`serial_gops`] — Algorithm 1, one thread (MKL's small-matrix path);
+//! - [`level_scheduled_gops`] — level scheduling with per-level barriers
+//!   (Anderson/Saad), the classic multicore SpTRSV.
+//!
+//! Absolute numbers differ from the paper's Xeon E5-2698v4 (different
+//! host), but the *shape* — sub-GOPS throughput dominated by dependency
+//! stalls and synchronization — is what the comparison needs (DESIGN.md
+//! "Substitutions").
+
+use crate::graph::{Dag, Levels};
+use crate::matrix::triangular::solve_serial;
+use crate::matrix::CsrMatrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// Measured throughput of one CPU solver.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuResult {
+    /// Best-of-`reps` solve seconds.
+    pub seconds: f64,
+    /// Throughput in GOPS (binary ops / time).
+    pub gops: f64,
+}
+
+fn flops(m: &CsrMatrix) -> f64 {
+    (2 * m.nnz() - m.n) as f64
+}
+
+/// Serial forward substitution, best-of-`reps` wallclock.
+pub fn serial_gops(m: &CsrMatrix, b: &[f32], reps: usize) -> CpuResult {
+    let mut best = f64::MAX;
+    let mut sink = 0f32;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let x = solve_serial(m, b);
+        best = best.min(t0.elapsed().as_secs_f64());
+        sink += x[m.n - 1];
+    }
+    std::hint::black_box(sink);
+    CpuResult {
+        seconds: best,
+        gops: flops(m) / best / 1e9,
+    }
+}
+
+/// Level-scheduled solve with `threads` worker threads and per-level
+/// barriers. Returns both the measured throughput and the solution (so
+/// tests can verify correctness).
+pub fn level_scheduled(
+    m: &CsrMatrix,
+    b: &[f32],
+    threads: usize,
+    reps: usize,
+) -> (CpuResult, Vec<f32>) {
+    let g = Dag::from_csr(m);
+    let lv = Levels::compute(&g);
+    let threads = threads.max(1);
+    let mut best = f64::MAX;
+    let mut x_out = vec![0f32; m.n];
+    for _ in 0..reps.max(1) {
+        let x: Vec<f32> = vec![0f32; m.n];
+        let x = Arc::new(XSlot(std::cell::UnsafeCell::new(x)));
+        let barrier = Arc::new(Barrier::new(threads));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let x = Arc::clone(&x);
+                let barrier = Arc::clone(&barrier);
+                let counter = Arc::clone(&counter);
+                let lv = &lv;
+                let m = &m;
+                let b = &b;
+                scope.spawn(move || {
+                    for l in 0..lv.num_levels() {
+                        let nodes = lv.level(l);
+                        // Dynamic chunking over the level.
+                        loop {
+                            let k = counter.fetch_add(8, Ordering::Relaxed);
+                            if k >= nodes.len() {
+                                break;
+                            }
+                            let hi = (k + 8).min(nodes.len());
+                            // SAFETY: nodes within a level are disjoint rows
+                            // whose inputs were finalized by prior-level
+                            // barriers.
+                            let xs = unsafe { &mut *x.0.get() };
+                            for &i in &nodes[k..hi] {
+                                let i = i as usize;
+                                let ie = m.rowptr[i + 1] - 1;
+                                let mut sum = 0f32;
+                                for j in m.rowptr[i]..ie {
+                                    sum += m.values[j] * xs[m.colidx[j] as usize];
+                                }
+                                xs[i] = (b[i] - sum) / m.values[ie];
+                            }
+                        }
+                        let w = barrier.wait();
+                        if w.is_leader() {
+                            counter.store(0, Ordering::Relaxed);
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+        x_out = Arc::try_unwrap(x).map(|c| c.0.into_inner()).unwrap_or_default();
+    }
+    (
+        CpuResult {
+            seconds: best,
+            gops: flops(m) / best / 1e9,
+        },
+        x_out,
+    )
+}
+
+/// Interior-mutable solution buffer shared across level workers.
+/// Levels are data-race-free by construction (disjoint rows per level,
+/// barriers between levels).
+struct XSlot(std::cell::UnsafeCell<Vec<f32>>);
+unsafe impl Sync for XSlot {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::assert_close_to_reference;
+
+    #[test]
+    fn serial_gops_positive() {
+        let m = gen::circuit(2000, 5, 0.8, GenSeed(1));
+        let b = vec![1.0f32; m.n];
+        let r = serial_gops(&m, &b, 3);
+        assert!(r.gops > 0.0 && r.seconds > 0.0);
+    }
+
+    #[test]
+    fn level_scheduled_is_correct() {
+        let m = gen::grid2d(30, 30, true, GenSeed(2));
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 9) as f32 - 4.0).collect();
+        for threads in [1, 2, 4] {
+            let (_, x) = level_scheduled(&m, &b, threads, 1);
+            assert_close_to_reference(&m, &b, &x, 1e-3);
+        }
+    }
+
+    #[test]
+    fn level_scheduled_chain_correct() {
+        // Degenerate: n levels of width 1.
+        let m = gen::chain(200, GenSeed(3));
+        let b = vec![2.0f32; m.n];
+        let (_, x) = level_scheduled(&m, &b, 4, 1);
+        assert_close_to_reference(&m, &b, &x, 1e-3);
+    }
+
+    #[test]
+    fn single_thread_level_matches_serial_result() {
+        let m = gen::circuit(500, 5, 0.8, GenSeed(4));
+        let b = vec![1.0f32; m.n];
+        let (_, x) = level_scheduled(&m, &b, 1, 1);
+        assert_close_to_reference(&m, &b, &x, 1e-4);
+    }
+}

@@ -1,0 +1,126 @@
+//! GPU baseline — an analytic model of the synchronization-free method
+//! (cuSPARSE `csrsv_solve` class, Liu et al.).
+//!
+//! We have no CUDA device in this image, so the GPU comparator is a latency
+//! model of the mechanism the paper identifies as the bottleneck (§II.A):
+//! warp-per-node execution where each node spins on its dependencies
+//! through L2, gathers its operands with poor locality (one useful word per
+//! 32-word cache line), and then performs its MACs at warp width.
+//!
+//! Model: `finish(i) = max_{j∈preds(i)} finish(j) + t_dep + t_edge·⌈k/32⌉·32`
+//! with a whole-solve floor of `total_bytes / bandwidth`, plus a fixed
+//! kernel-launch latency. Constants are calibrated so the 245-benchmark
+//! average lands near cuSPARSE's published ≈1 GOPS on an RTX 2080Ti
+//! (Table IV) — see DESIGN.md "Substitutions".
+
+use crate::graph::Dag;
+
+/// Model constants.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuModel {
+    /// Kernel-launch + tail latency (s).
+    pub t_launch: f64,
+    /// Dependent-chain step latency: spin-loop observation of a
+    /// just-produced value through L2 (s).
+    pub t_dep: f64,
+    /// Per-32-wide-MAC-batch latency within a warp (s): one gather of a
+    /// sparse cache line per lane.
+    pub t_batch: f64,
+    /// Effective memory bandwidth for the streaming floor (bytes/s).
+    pub bandwidth: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        Self {
+            t_launch: 4e-6,
+            // ~L2-roundtrip-dominated dependent step on Turing.
+            t_dep: 450e-9,
+            // One gather+MAC batch per 32 edges.
+            t_batch: 60e-9,
+            // Sparse-access effective bandwidth ≪ 616 GB/s peak: one useful
+            // word per line on the x gathers.
+            bandwidth: 60e9,
+        }
+    }
+}
+
+/// Result of the GPU model.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuResult {
+    /// Modeled solve time (s).
+    pub seconds: f64,
+    /// Throughput in GOPS.
+    pub gops: f64,
+}
+
+/// Evaluate the model on a DAG.
+pub fn simulate(g: &Dag, model: &GpuModel) -> GpuResult {
+    let n = g.n;
+    // Critical path with per-node service times.
+    let mut finish = vec![0f64; n];
+    let mut crit: f64 = 0.0;
+    for i in 0..n {
+        let k = g.in_degree(i);
+        let service = model.t_dep + (k.div_ceil(32).max(1)) as f64 * model.t_batch;
+        let mut start: f64 = 0.0;
+        for &p in g.preds(i) {
+            start = start.max(finish[p as usize]);
+        }
+        finish[i] = start + service;
+        crit = crit.max(finish[i]);
+    }
+    // Streaming floor: every nonzero's (value, colidx) plus the x and b
+    // traffic, at sparse-effective bandwidth.
+    let nnz = g.num_edges() + n;
+    let bytes = (nnz * 8 + n * 8) as f64;
+    let floor = bytes / model.bandwidth;
+    let seconds = model.t_launch + crit.max(floor);
+    let flops = (2 * nnz - n) as f64;
+    GpuResult {
+        seconds,
+        gops: flops / seconds / 1e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    fn gops(m: &crate::matrix::CsrMatrix) -> f64 {
+        simulate(&Dag::from_csr(m), &GpuModel::default()).gops
+    }
+
+    #[test]
+    fn chain_is_terrible_on_gpu() {
+        // Fully sequential: every node pays the dependent-step latency.
+        let m = gen::chain(2000, GenSeed(1));
+        assert!(gops(&m) < 0.1, "{}", gops(&m));
+    }
+
+    #[test]
+    fn wide_dag_is_much_better() {
+        let wide = gen::shallow(20000, 0.2, GenSeed(2));
+        let deep = gen::chain(2000, GenSeed(1));
+        assert!(gops(&wide) > 5.0 * gops(&deep));
+    }
+
+    #[test]
+    fn typical_circuit_matrix_in_cusparse_range() {
+        // Calibration guard: mid-size circuit-like DAGs should land in the
+        // ~0.1–5 GOPS band the paper reports for the GPU.
+        let m = gen::circuit(4000, 6, 0.8, GenSeed(3));
+        let v = gops(&m);
+        assert!((0.05..5.0).contains(&v), "{v}");
+    }
+
+    #[test]
+    fn monotone_in_dep_latency() {
+        let m = gen::banded(2000, 6, 0.5, GenSeed(4));
+        let g = Dag::from_csr(&m);
+        let fast = simulate(&g, &GpuModel { t_dep: 100e-9, ..Default::default() });
+        let slow = simulate(&g, &GpuModel { t_dep: 900e-9, ..Default::default() });
+        assert!(fast.gops > slow.gops);
+    }
+}

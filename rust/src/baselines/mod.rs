@@ -1,0 +1,15 @@
+//! Comparator implementations for the paper's evaluation:
+//!
+//! - [`coarse`] — the synchronization-free *coarse* dataflow run on the
+//!   same accelerator (a node is the minimal scheduling unit), Fig. 9(a).
+//! - [`fine`] — a DPU-v2-style *fine* dataflow model: binary-DAG conversion
+//!   mapped onto tree-shaped PE arrays at 2× clock, Figs. 9(a)/11/12.
+//! - [`cpu`] — serial and level-scheduled multithreaded solvers measured
+//!   natively on this host (the MKL stand-in), Figs. 11/12, Table IV.
+//! - [`gpu`] — an analytic synchronization-free GPU model calibrated to
+//!   cuSPARSE's published behaviour, Figs. 11/12, Table IV.
+
+pub mod coarse;
+pub mod cpu;
+pub mod fine;
+pub mod gpu;

@@ -1,0 +1,72 @@
+//! Fig. 10: instruction breakdown (execute / Bnop / Pnop / Dnop / Lnop).
+
+use super::workloads::Workload;
+use crate::arch::ArchConfig;
+use crate::compiler::{schedule_only, CompilerConfig};
+use crate::util::Table;
+use anyhow::Result;
+
+/// One benchmark's instruction mix (fractions summing to 1).
+#[derive(Debug, Clone)]
+pub struct Fig10Row {
+    /// Workload name.
+    pub name: &'static str,
+    /// Executed fraction.
+    pub exec: f64,
+    /// Bank-conflict nops.
+    pub bnop: f64,
+    /// psum-capacity nops.
+    pub pnop: f64,
+    /// Dependency nops.
+    pub dnop: f64,
+    /// Load-imbalance nops.
+    pub lnop: f64,
+}
+
+/// Compute the Fig. 10 breakdown for the suite.
+pub fn fig10(suite: &[Workload], arch: &ArchConfig) -> Result<(Table, Vec<Fig10Row>)> {
+    let mut table = Table::new(vec!["benchmark", "exec%", "Bnop%", "Pnop%", "Dnop%", "Lnop%"]);
+    let mut rows = Vec::new();
+    for w in suite {
+        let cfg = CompilerConfig {
+            arch: *arch,
+            ..CompilerConfig::default()
+        };
+        let s = schedule_only(&w.matrix, &cfg)?;
+        let slots = (s.stats.cycles * arch.num_cus() as u64) as f64;
+        let row = Fig10Row {
+            name: w.name,
+            exec: s.stats.exec as f64 / slots,
+            bnop: s.stats.bnop as f64 / slots,
+            pnop: s.stats.pnop as f64 / slots,
+            dnop: s.stats.dnop as f64 / slots,
+            lnop: s.stats.lnop as f64 / slots,
+        };
+        table.row(vec![
+            w.name.to_string(),
+            format!("{:.1}", 100.0 * row.exec),
+            format!("{:.1}", 100.0 * row.bnop),
+            format!("{:.1}", 100.0 * row.pnop),
+            format!("{:.1}", 100.0 * row.dnop),
+            format!("{:.1}", 100.0 * row.lnop),
+        ]);
+        rows.push(row);
+    }
+    Ok((table, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads::suite_small;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let (_, rows) = fig10(&suite_small(4), &ArchConfig::default()).unwrap();
+        for r in rows {
+            let total = r.exec + r.bnop + r.pnop + r.dnop + r.lnop;
+            assert!((total - 1.0).abs() < 1e-9, "{}: {total}", r.name);
+            assert!(r.exec > 0.0);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Figs. 11/12: throughput comparison CPU / GPU / DPU-v2 / this work, on
+//! the named suite (Fig. 11) and the 245-benchmark sweep (Fig. 12).
+
+use super::workloads::Workload;
+use crate::arch::ArchConfig;
+use crate::baselines::{cpu, fine, gpu};
+use crate::compiler::{schedule_only, CompilerConfig};
+use crate::graph::Dag;
+use crate::util::{stats::geomean, Table};
+use anyhow::Result;
+
+/// One platform-comparison row.
+#[derive(Debug, Clone)]
+pub struct PlatformRow {
+    /// Workload name.
+    pub name: &'static str,
+    /// Binary-node count (Fig. 12 x-axis).
+    pub binary_nodes: usize,
+    /// CPU GOPS (native serial, MKL small-matrix stand-in).
+    pub cpu_gops: f64,
+    /// GPU GOPS (analytic sync-free model).
+    pub gpu_gops: f64,
+    /// DPU-v2 GOPS (fine-dataflow model).
+    pub dpu_gops: f64,
+    /// This work GOPS (full medium dataflow: psum caching + ICR +
+    /// coloring).
+    pub this_gops: f64,
+}
+
+/// Run the comparison over a set of workloads.
+pub fn compare(suite: &[Workload], arch: &ArchConfig, cpu_reps: usize) -> Result<(Table, Vec<PlatformRow>)> {
+    let mut table = Table::new(vec![
+        "benchmark",
+        "binary nodes",
+        "CPU GOPS",
+        "GPU GOPS",
+        "DPU-v2 GOPS",
+        "this work GOPS",
+    ]);
+    let mut rows = Vec::new();
+    for w in suite {
+        let m = &w.matrix;
+        let flops = m.binary_nodes() as u64;
+        let g = Dag::from_csr(m);
+        let b = vec![1.0f32; m.n];
+        let cpu_gops = cpu::serial_gops(m, &b, cpu_reps).gops;
+        let gpu_gops = gpu::simulate(&g, &gpu::GpuModel::default()).gops;
+        let fine_cfg = fine::FineConfig::default();
+        let dpu_gops = fine::simulate(&g, &fine_cfg)?.gops(&fine_cfg);
+        let cfg = CompilerConfig {
+            arch: *arch,
+            ..CompilerConfig::default()
+        };
+        let s = schedule_only(m, &cfg)?;
+        let this_gops = flops as f64 / (s.stats.cycles as f64 / arch.clock_hz) / 1e9;
+        table.row(vec![
+            w.name.to_string(),
+            m.binary_nodes().to_string(),
+            format!("{cpu_gops:.2}"),
+            format!("{gpu_gops:.2}"),
+            format!("{dpu_gops:.2}"),
+            format!("{this_gops:.2}"),
+        ]);
+        rows.push(PlatformRow {
+            name: w.name,
+            binary_nodes: m.binary_nodes(),
+            cpu_gops,
+            gpu_gops,
+            dpu_gops,
+            this_gops,
+        });
+    }
+    Ok((table, rows))
+}
+
+/// Summary speedups (geometric mean and max, this-work vs each platform).
+pub fn speedup_summary(rows: &[PlatformRow]) -> Table {
+    let mut table = Table::new(vec!["vs", "geomean speedup", "max speedup"]);
+    for (name, get) in [
+        ("CPU", Box::new(|r: &PlatformRow| r.cpu_gops) as Box<dyn Fn(&PlatformRow) -> f64>),
+        ("GPU", Box::new(|r: &PlatformRow| r.gpu_gops)),
+        ("DPU-v2", Box::new(|r: &PlatformRow| r.dpu_gops)),
+    ] {
+        let ratios: Vec<f64> = rows
+            .iter()
+            .filter(|r| get(r) > 0.0)
+            .map(|r| r.this_gops / get(r))
+            .collect();
+        let max = ratios.iter().cloned().fold(0.0f64, f64::max);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}x", geomean(&ratios)),
+            format!("{max:.2}x"),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads::suite_small;
+
+    #[test]
+    fn this_work_beats_baselines_on_average() {
+        let (_, rows) = compare(&suite_small(6), &ArchConfig::default(), 1).unwrap();
+        let this_avg = geomean(&rows.iter().map(|r| r.this_gops).collect::<Vec<_>>());
+        let dpu_avg = geomean(&rows.iter().map(|r| r.dpu_gops).collect::<Vec<_>>());
+        let gpu_avg = geomean(&rows.iter().map(|r| r.gpu_gops).collect::<Vec<_>>());
+        assert!(this_avg > dpu_avg, "this {this_avg} vs dpu {dpu_avg}");
+        assert!(this_avg > gpu_avg, "this {this_avg} vs gpu {gpu_avg}");
+    }
+
+    #[test]
+    fn summary_has_three_rows() {
+        let (_, rows) = compare(&suite_small(3), &ArchConfig::default(), 1).unwrap();
+        let t = speedup_summary(&rows);
+        assert_eq!(t.len(), 3);
+    }
+}

@@ -1,0 +1,173 @@
+//! Fig. 9 experiments: (a) dataflow comparison, (b)/(c) psum capacity
+//! sweep, (d)/(e)/(f) ICR ablation.
+
+use super::workloads::Workload;
+use crate::arch::ArchConfig;
+use crate::baselines::{coarse, fine};
+use crate::compiler::allocation::{allocate, AllocationPolicy};
+use crate::compiler::{schedule_only, CompilerConfig};
+use crate::graph::Dag;
+use crate::util::Table;
+use anyhow::Result;
+
+/// One Fig. 9(a) row.
+#[derive(Debug, Clone)]
+pub struct Fig9aRow {
+    /// Workload name.
+    pub name: &'static str,
+    /// Coarse dataflow GOPS.
+    pub coarse_gops: f64,
+    /// Fine (DPU-v2 model) GOPS.
+    pub fine_gops: f64,
+    /// This-work (medium) GOPS — psum caching *off*, per the paper.
+    pub medium_gops: f64,
+}
+
+/// Fig. 9(a): throughput of coarse / fine / this-work dataflows.
+pub fn fig9a(suite: &[Workload], arch: &ArchConfig) -> Result<(Table, Vec<Fig9aRow>)> {
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec!["benchmark", "coarse GOPS", "fine GOPS", "this-work GOPS"]);
+    for w in suite {
+        let g = Dag::from_csr(&w.matrix);
+        let flops = w.matrix.binary_nodes() as u64;
+        let alloc = allocate(&g, arch.num_cus(), AllocationPolicy::RoundRobin);
+        let c = coarse::simulate(&g, &alloc)?;
+        let coarse_gops = c.gops(arch.clock_hz, flops);
+        let fine_cfg = fine::FineConfig::default();
+        let f = fine::simulate(&g, &fine_cfg)?;
+        let fine_gops = f.gops(&fine_cfg);
+        // "This work dataflow does not utilize the partial sum caching
+        // mechanism" in Fig. 9(a).
+        let cfg = CompilerConfig {
+            arch: ArchConfig {
+                psum_words: 0,
+                ..*arch
+            },
+            ..CompilerConfig::default()
+        };
+        let s = schedule_only(&w.matrix, &cfg)?;
+        let medium_gops = flops as f64 / (s.stats.cycles as f64 / arch.clock_hz) / 1e9;
+        table.row(vec![
+            w.name.to_string(),
+            format!("{coarse_gops:.2}"),
+            format!("{fine_gops:.2}"),
+            format!("{medium_gops:.2}"),
+        ]);
+        rows.push(Fig9aRow {
+            name: w.name,
+            coarse_gops,
+            fine_gops,
+            medium_gops,
+        });
+    }
+    Ok((table, rows))
+}
+
+/// Fig. 9(b)/(c): total and blocking cycles vs psum capacity (normalized
+/// to capacity 0).
+pub fn fig9bc(
+    suite: &[Workload],
+    arch: &ArchConfig,
+    capacities: &[u32],
+) -> Result<Table> {
+    let mut table = Table::new(
+        std::iter::once("benchmark".to_string())
+            .chain(capacities.iter().flat_map(|c| {
+                [format!("total@{c}"), format!("block@{c}")]
+            }))
+            .collect::<Vec<_>>(),
+    );
+    for w in suite {
+        let mut cells = vec![w.name.to_string()];
+        let mut base_total = 0f64;
+        let mut base_block = 0f64;
+        for (i, &cap) in capacities.iter().enumerate() {
+            let cfg = CompilerConfig {
+                arch: ArchConfig {
+                    psum_words: cap,
+                    ..*arch
+                },
+                ..CompilerConfig::default()
+            };
+            let s = schedule_only(&w.matrix, &cfg)?;
+            let total = s.stats.cycles as f64;
+            let block = (s.stats.bnop + s.stats.pnop + s.stats.dnop + s.stats.lnop) as f64;
+            if i == 0 {
+                base_total = total;
+                base_block = block.max(1.0);
+            }
+            cells.push(format!("{:.3}", total / base_total));
+            cells.push(format!("{:.3}", block / base_block));
+        }
+        table.row(cells);
+    }
+    Ok(table)
+}
+
+/// Fig. 9(d)/(e)/(f): constraints, bank conflicts and data reuse with and
+/// without ICR.
+pub fn fig9def(suite: &[Workload], arch: &ArchConfig) -> Result<Table> {
+    let mut table = Table::new(vec![
+        "benchmark",
+        "constraints noICR",
+        "constraints ICR",
+        "conflicts noICR",
+        "conflicts ICR",
+        "reuse noICR",
+        "reuse ICR",
+    ]);
+    for w in suite {
+        let mut vals = Vec::new();
+        for icr in [false, true] {
+            let cfg = CompilerConfig {
+                arch: *arch,
+                use_icr: icr,
+                ..CompilerConfig::default()
+            };
+            let s = schedule_only(&w.matrix, &cfg)?;
+            vals.push((s.stats.constraints, s.stats.conflicts, s.stats.reuse_fraction()));
+        }
+        table.row(vec![
+            w.name.to_string(),
+            vals[0].0.to_string(),
+            vals[1].0.to_string(),
+            vals[0].1.to_string(),
+            vals[1].1.to_string(),
+            format!("{:.3}", vals[0].2),
+            format!("{:.3}", vals[1].2),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads::suite_small;
+
+    #[test]
+    fn fig9a_medium_wins_on_average() {
+        let arch = ArchConfig::default();
+        let suite = suite_small(6);
+        let (_, rows) = fig9a(&suite, &arch).unwrap();
+        let med: f64 = rows.iter().map(|r| r.medium_gops).sum();
+        let coarse: f64 = rows.iter().map(|r| r.coarse_gops).sum();
+        assert!(med > coarse, "medium {med} vs coarse {coarse}");
+    }
+
+    #[test]
+    fn fig9bc_capacity_monotone_trend() {
+        let arch = ArchConfig::default();
+        let suite = suite_small(3);
+        let t = fig9bc(&suite, &arch, &[0, 4, 8]).unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn fig9def_runs() {
+        let arch = ArchConfig::default();
+        let suite = suite_small(3);
+        let t = fig9def(&suite, &arch).unwrap();
+        assert_eq!(t.len(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Regenerates every table and figure of the paper's evaluation
+//! (per-experiment index in DESIGN.md §3).
+//!
+//! Numbers are produced on synthetic SuiteSparse analogs (DESIGN.md
+//! "Substitutions"); the comparison *shape* — who wins, by what factor,
+//! where the crossovers fall — is the reproduction target, not absolute
+//! values from the authors' testbed.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig9;
+pub mod report;
+pub mod tables;
+pub mod workloads;
+
+pub use workloads::{suite, sweep_245, Workload};

@@ -1,0 +1,72 @@
+//! Experiment runner used by the CLI and the `cargo bench` targets: maps an
+//! experiment id (DESIGN.md §3) to its harness and prints the rows.
+
+use super::{fig10, fig11, fig9, tables, workloads};
+use crate::arch::ArchConfig;
+use anyhow::{bail, Result};
+
+/// Run one experiment by id; `scale` ∈ {"small", "full"} controls the
+/// workload count so CI stays fast.
+pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
+    let arch = ArchConfig::default();
+    let suite = match scale {
+        "small" => workloads::suite_small(6),
+        _ => workloads::suite(),
+    };
+    let out = match id {
+        "fig9a" => fig9::fig9a(&suite, &arch)?.0.render(),
+        "fig9bc" => fig9::fig9bc(&suite, &arch, &[0, 1, 2, 4, 8, 16])?.render(),
+        "fig9def" => fig9::fig9def(&suite, &arch)?.render(),
+        "fig10" => fig10::fig10(&suite, &arch)?.0.render(),
+        "fig11" => {
+            let (t, rows) = fig11::compare(&suite, &arch, 3)?;
+            format!("{}\n{}", t.render(), fig11::speedup_summary(&rows).render())
+        }
+        "fig12" => {
+            let max_n = if scale == "small" { 8_000 } else { 85_392 };
+            let sweep = workloads::sweep_245(max_n);
+            let (t, rows) = fig11::compare(&sweep, &arch, 1)?;
+            format!("{}\n{}", t.render(), fig11::speedup_summary(&rows).render())
+        }
+        "table2" => tables::table2(&suite, &arch)?.render(),
+        "table3" => tables::table3(&suite, &arch)?.render(),
+        "table4" => {
+            let (_, rows) = fig11::compare(&suite, &arch, 3)?;
+            // Average compile time over the suite.
+            let mut total = 0.0;
+            for w in &suite {
+                let cfg = crate::compiler::CompilerConfig {
+                    arch,
+                    ..Default::default()
+                };
+                total += crate::compiler::compile(&w.matrix, &cfg)?
+                    .compile
+                    .compile_seconds;
+            }
+            tables::table4(&rows, &arch, total / suite.len() as f64).render()
+        }
+        other => bail!("unknown experiment id {other} (see DESIGN.md §3)"),
+    };
+    Ok(out)
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig9a", "fig9bc", "fig9def", "fig10", "fig11", "fig12", "table2", "table3", "table4",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run_experiment("fig99", "small").is_err());
+    }
+
+    #[test]
+    fn fig10_small_runs() {
+        let s = run_experiment("fig10", "small").unwrap();
+        assert!(s.contains("exec%"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Tables II, III and IV of the paper.
+
+use super::fig11::PlatformRow;
+use super::workloads::Workload;
+use crate::arch::ArchConfig;
+use crate::baselines::fine;
+use crate::compiler::{compile, CompilerConfig};
+use crate::graph::{Dag, DagStats, Levels};
+use crate::sim::{Accelerator, EnergyModel};
+use crate::util::{stats::geomean, Table};
+use anyhow::Result;
+
+/// Table II: area/power breakdown (the model's coefficients) plus the
+/// activity-scaled measured power for a representative workload.
+pub fn table2(suite: &[Workload], arch: &ArchConfig) -> Result<Table> {
+    let model = EnergyModel::paper_28nm();
+    let mut table = Table::new(vec!["component", "area mm2", "power mW (peak)", "power mW (measured)"]);
+    // Representative run: first suite workload.
+    let w = &suite[0];
+    let cfg = CompilerConfig {
+        arch: *arch,
+        ..CompilerConfig::default()
+    };
+    let prog = compile(&w.matrix, &cfg)?;
+    let mut acc = Accelerator::new(*arch);
+    let run = acc.run(&prog, &vec![1.0f32; w.matrix.n])?;
+    let rep = model.estimate(&run.stats, arch);
+    for (c, (name, watts, _)) in crate::sim::energy::PAPER_TABLE2.iter().zip(&rep.per_component) {
+        table.row(vec![
+            c.name.to_string(),
+            format!("{:.2}", c.area_mm2),
+            format!("{:.2}", c.power_mw),
+            format!("{:.2} ({})", watts * 1e3, name),
+        ]);
+    }
+    table.row(vec![
+        "TOTAL".to_string(),
+        format!("{:.2}", model.total_area_mm2()),
+        format!("{:.2}", model.peak_power_w() * 1e3),
+        format!("{:.2}", rep.avg_power_w * 1e3),
+    ]);
+    Ok(table)
+}
+
+/// Table III: benchmark characteristics + compile time.
+pub fn table3(suite: &[Workload], arch: &ArchConfig) -> Result<Table> {
+    let mut table = Table::new(vec![
+        "name",
+        "N",
+        "NNZ",
+        "binary nodes",
+        "CDU nodes %",
+        "CDU edges %",
+        "CDU levels %",
+        "edges/CDU node",
+        "load balance",
+        "peak GOPS",
+        "compile ms",
+    ]);
+    for w in suite {
+        let m = &w.matrix;
+        let g = Dag::from_csr(m);
+        let lv = Levels::compute(&g);
+        let st = DagStats::compute(&g, &lv, arch.num_cus());
+        let cfg = CompilerConfig {
+            arch: *arch,
+            ..CompilerConfig::default()
+        };
+        let prog = compile(m, &cfg)?;
+        let peak = crate::graph::stats::peak_throughput_gops(m.n, m.nnz(), arch.num_cus(), arch.clock_hz);
+        table.row(vec![
+            w.name.to_string(),
+            m.n.to_string(),
+            m.nnz().to_string(),
+            st.binary_nodes.to_string(),
+            format!("{:.1}", st.cdu_nodes_pct),
+            format!("{:.1}", st.cdu_edges_pct),
+            format!("{:.1}", st.cdu_levels_pct),
+            format!("{:.1}", st.cdu_avg_edges_per_node),
+            format!("{:.1}", prog.compile.load_balance_degree),
+            format!("{peak:.1}"),
+            format!("{:.1}", prog.compile.compile_seconds * 1e3),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table IV: platform summary over a (possibly large) comparison run.
+pub fn table4(rows: &[PlatformRow], arch: &ArchConfig, avg_compile_s: f64) -> Table {
+    let mut table = Table::new(vec!["metric", "CPU", "GPU", "DPU-v2", "This work"]);
+    let avg = |f: &dyn Fn(&PlatformRow) -> f64| {
+        geomean(&rows.iter().map(f).filter(|&v| v > 0.0).collect::<Vec<_>>())
+    };
+    let cpu = avg(&|r: &PlatformRow| r.cpu_gops);
+    let gpu = avg(&|r: &PlatformRow| r.gpu_gops);
+    let dpu = avg(&|r: &PlatformRow| r.dpu_gops);
+    let this = avg(&|r: &PlatformRow| r.this_gops);
+    let fine_cfg = fine::FineConfig::default();
+    let fine_peak = (fine_cfg.trees * ((1 << fine_cfg.depth) - 1)) as f64 * fine_cfg.clock_hz / 1e9;
+    table.row(vec![
+        "Peak throughput (GOPS)".to_string(),
+        "(host)".to_string(),
+        "13447.7 (model)".to_string(),
+        format!("{fine_peak:.1}"),
+        format!("{:.1}", arch.peak_gops()),
+    ]);
+    table.row(vec![
+        "Avg. throughput (GOPS, geomean)".to_string(),
+        format!("{cpu:.2}"),
+        format!("{gpu:.2}"),
+        format!("{dpu:.2}"),
+        format!("{this:.2}"),
+    ]);
+    table.row(vec![
+        "Speedup vs CPU".to_string(),
+        "1.00x".to_string(),
+        format!("{:.2}x", gpu / cpu),
+        format!("{:.2}x", dpu / cpu),
+        format!("{:.2}x", this / cpu),
+    ]);
+    let model = EnergyModel::paper_28nm();
+    table.row(vec![
+        "Power (W)".to_string(),
+        ">50 (paper)".to_string(),
+        ">50 (paper)".to_string(),
+        "0.109 (paper)".to_string(),
+        format!("{:.3} (peak model)", model.peak_power_w()),
+    ]);
+    table.row(vec![
+        "Avg. energy eff. (GOPS/W)".to_string(),
+        "<0.01".to_string(),
+        "<0.01".to_string(),
+        format!("{:.1}", dpu / 0.109),
+        format!("{:.1}", this / model.peak_power_w()),
+    ]);
+    table.row(vec![
+        "Avg. compile time (s)".to_string(),
+        "-".to_string(),
+        "~0.02 (paper)".to_string(),
+        "103.4 (paper, O(nnz^2))".to_string(),
+        format!("{avg_compile_s:.4}"),
+    ]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::fig11::compare;
+    use crate::bench_harness::workloads::suite_small;
+
+    #[test]
+    fn table2_runs() {
+        let t = table2(&suite_small(1), &ArchConfig::default()).unwrap();
+        assert_eq!(t.len(), 12); // 11 components + total
+    }
+
+    #[test]
+    fn table3_runs() {
+        let t = table3(&suite_small(3), &ArchConfig::default()).unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn table4_runs() {
+        let arch = ArchConfig::default();
+        let (_, rows) = compare(&suite_small(3), &arch, 1).unwrap();
+        let t = table4(&rows, &arch, 0.01);
+        assert_eq!(t.len(), 6);
+    }
+}

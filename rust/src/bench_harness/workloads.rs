@@ -1,0 +1,184 @@
+//! Named benchmark workloads: analogs of the paper's Table III rows plus
+//! the 245-matrix scaling sweep of Fig. 12.
+//!
+//! Each analog matches its SuiteSparse namesake's order and nonzero count
+//! (Table III columns 3–4) and is generated with the DAG-shape family that
+//! matches the domain (circuit simulation, power networks, FEM meshes,
+//! chemical engineering...). The CDU statistics land in the same regime,
+//! which is what determines dataflow behaviour.
+
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::CsrMatrix;
+
+/// A named benchmark.
+pub struct Workload {
+    /// Analog name (`*_like` of the Table III row).
+    pub name: &'static str,
+    /// The generated matrix.
+    pub matrix: CsrMatrix,
+}
+
+fn nnz_target(m: CsrMatrix, _target: usize) -> CsrMatrix {
+    // Generators are parameterized to land near the target nnz; exactness
+    // is not required (the metrics are ratios).
+    m
+}
+
+/// The 20-benchmark suite mirroring Table III.
+pub fn suite() -> Vec<Workload> {
+    let mk = |name, matrix| Workload { name, matrix };
+    vec![
+        // bp_200: 822 rows, 2874 nnz — LP basis, skewed in-degree.
+        mk("bp_200_like", nnz_target(gen::power_law(822, 1.35, 90, GenSeed(101)), 2874)),
+        // west2021: 2021 rows, 6160 nnz — chemical engineering.
+        mk("west2021_like", nnz_target(gen::circuit(2021, 2, 0.75, GenSeed(102)), 6160)),
+        // HB_jagmesh4: 1440 rows, 22600 nnz — FEM mesh, dense band.
+        mk("jagmesh4_like", nnz_target(gen::banded(1440, 24, 0.62, GenSeed(103)), 22600)),
+        // rdb968: 968 rows, 16101 nnz — reaction-diffusion stencil.
+        mk("rdb968_like", nnz_target(gen::banded(968, 26, 0.6, GenSeed(104)), 16101)),
+        // dw2048: 2048 rows, 31909 nnz — dielectric waveguide band.
+        mk("dw2048_like", nnz_target(gen::banded(2048, 24, 0.62, GenSeed(105)), 31909)),
+        // ACTIVSg2000: 4000 rows, 42840 nnz — synthetic power grid factor.
+        mk("activsg2000_like", nnz_target(gen::factor_like(4000, 14, 6, GenSeed(106)), 42840)),
+        // cz628: 628 rows, 9123 nnz — closest-point chemistry, dense-ish.
+        mk("cz628_like", nnz_target(gen::banded(628, 22, 0.62, GenSeed(107)), 9123)),
+        // bips98_606: 7135 rows, 28759 nnz — power system dynamics.
+        mk("bips98_606_like", nnz_target(gen::circuit(7135, 3, 0.8, GenSeed(108)), 28759)),
+        // nnc1374: 1374 rows, 17897 nnz — nuclear reactor model.
+        mk("nnc1374_like", nnz_target(gen::banded(1374, 20, 0.6, GenSeed(109)), 17897)),
+        // add20: 2395 rows, 9867 nnz — circuit (adder) with hubs.
+        mk("add20_like", nnz_target(gen::circuit(2395, 3, 0.8, GenSeed(110)), 9867)),
+        // fpga_trans_01: 1220 rows, 5371 nnz — FPGA transient sim.
+        mk("fpga_trans_01_like", nnz_target(gen::circuit(1220, 3, 0.85, GenSeed(111)), 5371)),
+        // c-36: 7479 rows, 12186 nnz — optimization KKT, huge levels.
+        mk("c36_like", nnz_target(gen::shallow(7479, 0.55, GenSeed(112)), 12186)),
+        // circuit204: 1020 rows, 8008 nnz — circuit simulation.
+        mk("circuit204_like", nnz_target(gen::circuit(1020, 7, 0.8, GenSeed(113)), 8008)),
+        // gemat12: 4929 rows, 28415 nnz — power flow basis.
+        mk("gemat12_like", nnz_target(gen::circuit(4929, 5, 0.75, GenSeed(114)), 28415)),
+        // bayer07: 3268 rows, 26316 nnz — chemical process factor.
+        mk("bayer07_like", nnz_target(gen::factor_like(3268, 10, 5, GenSeed(115)), 26316)),
+        // rajat04: 1041 rows, 7625 nnz — circuit with extreme hubs (the
+        // paper's load-imbalance case, load balance degree 97.6).
+        mk("rajat04_like", nnz_target(gen::power_law(1041, 1.15, 160, GenSeed(116)), 7625)),
+        // add32: 4960 rows, 14451 nnz — sparse adder circuit.
+        mk("add32_like", nnz_target(gen::circuit(4960, 2, 0.85, GenSeed(117)), 14451)),
+        // fpga_dcop_01: 1220 rows, 4303 nnz — FPGA DC operating point.
+        mk("fpga_dcop_01_like", nnz_target(gen::circuit(1220, 2, 0.85, GenSeed(118)), 4303)),
+        // bcsstm10: 1086 rows, 14546 nnz — structural mass matrix.
+        mk("bcsstm10_like", nnz_target(gen::banded(1086, 26, 0.55, GenSeed(119)), 14546)),
+        // rajat19: 1157 rows, 3956 nnz — circuit with hubs.
+        mk("rajat19_like", nnz_target(gen::power_law(1157, 1.25, 110, GenSeed(120)), 3956)),
+    ]
+}
+
+/// A reduced suite for quick runs (first `k` of the full suite).
+pub fn suite_small(k: usize) -> Vec<Workload> {
+    let mut s = suite();
+    s.truncate(k);
+    s
+}
+
+/// The 245-benchmark sweep of Fig. 12: node counts from 19 to ~85k across
+/// all generator families. Returns (name, matrix) pairs ordered by binary
+/// node count like the paper's x-axis.
+pub fn sweep_245(max_n: usize) -> Vec<Workload> {
+    let mut out: Vec<Workload> = Vec::with_capacity(245);
+    // 5 families × 49 sizes, log-spaced from 19 to max_n (default 85392).
+    let sizes: Vec<usize> = (0..49)
+        .map(|i| {
+            let lo = (19f64).ln();
+            let hi = (max_n as f64).ln();
+            (lo + (hi - lo) * i as f64 / 48.0).exp().round() as usize
+        })
+        .collect();
+    let names: [&'static str; 5] = ["circuit", "banded", "grid", "powerlaw", "shallow"];
+    for (fi, fam) in names.iter().enumerate() {
+        for (si, &n) in sizes.iter().enumerate() {
+            let seed = GenSeed((1000 + fi * 100 + si) as u64);
+            let m = match fi {
+                0 => gen::circuit(n.max(4), 4, 0.8, seed),
+                1 => gen::banded(n.max(4), (n / 64).clamp(2, 24), 0.6, seed),
+                2 => {
+                    let side = (n as f64).sqrt().ceil() as usize;
+                    gen::grid2d(side.max(2), side.max(2), si % 2 == 0, seed)
+                }
+                3 => gen::power_law(n.max(4), 1.2, (n / 8).clamp(4, 200), seed),
+                _ => gen::shallow(n.max(4), 0.4, seed),
+            };
+            out.push(Workload {
+                name: fam,
+                matrix: m,
+            });
+        }
+    }
+    out.sort_by_key(|w| w.matrix.binary_nodes());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::graph::{Dag, DagStats, Levels};
+
+    #[test]
+    fn suite_has_20_named_workloads() {
+        let s = suite();
+        assert_eq!(s.len(), 20);
+        for w in &s {
+            w.matrix.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn suite_sizes_match_table3_orders() {
+        let s = suite();
+        let expect = [
+            ("bp_200_like", 822),
+            ("dw2048_like", 2048),
+            ("c36_like", 7479),
+            ("rajat04_like", 1041),
+        ];
+        for (name, n) in expect {
+            let w = s.iter().find(|w| w.name == name).unwrap();
+            assert_eq!(w.matrix.n, n);
+        }
+    }
+
+    #[test]
+    fn c36_analog_has_no_cdu_levels() {
+        // Table III row 12: c-36 has 0.0% CDU nodes.
+        let s = suite();
+        let w = s.iter().find(|w| w.name == "c36_like").unwrap();
+        let g = Dag::from_csr(&w.matrix);
+        let lv = Levels::compute(&g);
+        let st = DagStats::compute(&g, &lv, ArchConfig::default().num_cus());
+        assert!(st.cdu_nodes_pct < 2.0, "{}", st.cdu_nodes_pct);
+    }
+
+    #[test]
+    fn banded_analogs_are_cdu_heavy() {
+        // Table III: dw2048 has 86.6% CDU edges.
+        let s = suite();
+        let w = s.iter().find(|w| w.name == "dw2048_like").unwrap();
+        let g = Dag::from_csr(&w.matrix);
+        let lv = Levels::compute(&g);
+        let st = DagStats::compute(&g, &lv, 64);
+        assert!(st.cdu_edges_pct > 50.0, "{}", st.cdu_edges_pct);
+    }
+
+    #[test]
+    fn sweep_covers_the_size_range() {
+        let sweep = sweep_245(20000); // reduced max for test speed
+        assert_eq!(sweep.len(), 245);
+        let first = sweep.first().unwrap().matrix.binary_nodes();
+        let last = sweep.last().unwrap().matrix.binary_nodes();
+        assert!(first < 200, "{first}");
+        assert!(last > 20000, "{last}");
+        // Sorted by binary nodes (the paper's x-axis).
+        for w in sweep.windows(2) {
+            assert!(w[0].matrix.binary_nodes() <= w[1].matrix.binary_nodes());
+        }
+    }
+}

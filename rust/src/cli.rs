@@ -1,0 +1,198 @@
+//! Command-line interface (hand-rolled — no clap in the offline image).
+//!
+//! ```text
+//! mgd compile  <matrix.mtx | gen:<family>:<n>:<seed>>   — compile & report
+//! mgd sim      <matrix>                                 — compile + simulate + verify
+//! mgd solve    <matrix> [--rhs ones|ramp] [--artifacts DIR]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|all> [--scale small|full]
+//! mgd stats    <matrix>                                 — Table III row for one matrix
+//! ```
+
+use crate::arch::ArchConfig;
+use crate::bench_harness::report;
+use crate::compiler::{compile, CompilerConfig};
+use crate::coordinator::{ServiceConfig, SolveService};
+use crate::graph::{Dag, DagStats, Levels};
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::{io, CsrMatrix};
+use crate::sim::Accelerator;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Parse a matrix argument: a MatrixMarket path or `gen:<family>:<n>:<seed>`.
+pub fn load_matrix(spec: &str) -> Result<CsrMatrix> {
+    if let Some(rest) = spec.strip_prefix("gen:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 3 {
+            bail!("expected gen:<family>:<n>:<seed>");
+        }
+        let n: usize = parts[1].parse()?;
+        let seed = GenSeed(parts[2].parse()?);
+        return Ok(match parts[0] {
+            "circuit" => gen::circuit(n, 5, 0.8, seed),
+            "banded" => gen::banded(n, (n / 64).clamp(2, 24), 0.6, seed),
+            "grid" => {
+                let side = (n as f64).sqrt().ceil() as usize;
+                gen::grid2d(side, side, true, seed)
+            }
+            "powerlaw" => gen::power_law(n, 1.2, (n / 8).clamp(4, 200), seed),
+            "shallow" => gen::shallow(n, 0.4, seed),
+            "chain" => gen::chain(n, seed),
+            other => bail!("unknown family {other}"),
+        });
+    }
+    io::read_matrix_market(&PathBuf::from(spec))
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Entry point used by `main`.
+pub fn run() {
+    if let Err(e) = run_inner() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run_inner() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "compile" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let cfg = CompilerConfig::default();
+            let p = compile(&m, &cfg)?;
+            println!(
+                "n={} nnz={} cycles={} predicted {:.2} GOPS, utilization {:.1}%, \
+                 compile {:.1} ms, constraints={}, conflicts={}, spills={}",
+                p.n,
+                p.nnz,
+                p.predicted.cycles,
+                p.predicted_gops(),
+                100.0 * p.predicted.utilization(p.num_cus()),
+                p.compile.compile_seconds * 1e3,
+                p.compile.constraints,
+                p.predicted.conflicts,
+                p.compile.spills,
+            );
+        }
+        "sim" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let cfg = CompilerConfig::default();
+            let p = compile(&m, &cfg)?;
+            let mut acc = Accelerator::new(cfg.arch);
+            let b = vec![1.0f32; m.n];
+            let run = acc.run(&p, &b)?;
+            run.stats.verify_against(&p.predicted)?;
+            crate::matrix::triangular::assert_close_to_reference(&m, &b, &run.x, 1e-3);
+            println!(
+                "verified: {} cycles ({} exec, {} bnop, {} pnop, {} dnop, {} lnop), \
+                 {:.2} GOPS, numerics OK, double-entry OK",
+                run.stats.cycles,
+                run.stats.exec,
+                run.stats.bnop,
+                run.stats.pnop,
+                run.stats.dnop,
+                run.stats.lnop,
+                run.gops(&cfg.arch, p.flops()),
+            );
+        }
+        "solve" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let artifacts = flag_value(&args, "--artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts"));
+            let svc = SolveService::start(&m, &artifacts, ServiceConfig::default())?;
+            let b: Vec<f32> = match flag_value(&args, "--rhs").as_deref() {
+                Some("ramp") => (0..m.n).map(|i| i as f32 / m.n as f32).collect(),
+                _ => vec![1.0f32; m.n],
+            };
+            let resp = svc.solve(b)?;
+            println!(
+                "x[0..4] = {:?}; host {:.3} ms; accel {:.3} µs ({} cycles, {:.2} GOPS, {:.1} GOPS/W)",
+                &resp.x[..resp.x.len().min(4)],
+                resp.host_seconds * 1e3,
+                resp.metrics.accel_seconds * 1e6,
+                resp.metrics.cycles,
+                resp.metrics.gops,
+                resp.metrics.gops_per_w,
+            );
+            svc.shutdown();
+        }
+        "bench" => {
+            let id = args.get(1).context("experiment id")?;
+            let scale = flag_value(&args, "--scale").unwrap_or_else(|| "small".into());
+            if id == "all" {
+                for id in report::ALL_EXPERIMENTS {
+                    println!("==== {id} ====");
+                    println!("{}", report::run_experiment(id, &scale)?);
+                }
+            } else {
+                println!("{}", report::run_experiment(id, &scale)?);
+            }
+        }
+        "stats" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let g = Dag::from_csr(&m);
+            let lv = Levels::compute(&g);
+            let st = DagStats::compute(&g, &lv, ArchConfig::default().num_cus());
+            println!("{st:#?}");
+        }
+        "help" | "--help" | "-h" => print_usage(),
+        other => {
+            print_usage();
+            bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "mgd — medium-granularity-dataflow SpTRSV accelerator\n\
+         usage:\n\
+         \x20 mgd compile <matrix>             compile & report schedule stats\n\
+         \x20 mgd sim     <matrix>             compile + cycle-accurate sim + verify\n\
+         \x20 mgd solve   <matrix> [--rhs ramp] [--artifacts DIR]\n\
+         \x20 mgd bench   <experiment|all> [--scale small|full]\n\
+         \x20 mgd stats   <matrix>             Table III characteristics\n\
+         matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
+         families: circuit banded grid powerlaw shallow chain\n\
+         experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_matrix_gen_specs() {
+        for spec in [
+            "gen:circuit:100:1",
+            "gen:banded:100:2",
+            "gen:grid:100:3",
+            "gen:powerlaw:100:4",
+            "gen:shallow:100:5",
+            "gen:chain:50:6",
+        ] {
+            let m = load_matrix(spec).unwrap();
+            assert!(m.n >= 50);
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn load_matrix_rejects_bad_specs() {
+        assert!(load_matrix("gen:nosuch:10:1").is_err());
+        assert!(load_matrix("gen:circuit:10").is_err());
+        assert!(load_matrix("/nonexistent/file.mtx").is_err());
+    }
+}

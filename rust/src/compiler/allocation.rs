@@ -1,0 +1,135 @@
+//! Coarse-node → CU allocation (compiler step 1, §III.A).
+//!
+//! The medium granularity dataflow keeps the coarse node as the *minimal
+//! load allocating unit*: every node is pinned to exactly one CU, and the
+//! CU's task list preserves topological (row) order, which the partial-sum
+//! rules in §IV.B rely on ("the first new node in the task list").
+
+use crate::graph::Dag;
+
+/// Allocation policy. The paper allocates "according to the topological
+/// order of the graph"; the exact tie-breaking is not specified, so both
+/// natural choices are provided (and compared by the ablation bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocationPolicy {
+    /// Node `i` goes to CU `i mod P` — pure topological round-robin.
+    RoundRobin,
+    /// Each node goes to the CU with the least total input edges so far —
+    /// reduces the load-balance degree (Table III col. 10) on skewed DAGs.
+    LeastLoaded,
+}
+
+/// Result of the allocation step.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// CU of each node.
+    pub cu_of: Vec<u32>,
+    /// Per-CU task lists in topological order.
+    pub tasks: Vec<Vec<u32>>,
+    /// Total input edges assigned to each CU (load balance input).
+    pub edges_per_cu: Vec<usize>,
+}
+
+/// Allocate all nodes of `g` to `num_cus` CUs.
+pub fn allocate(g: &Dag, num_cus: usize, policy: AllocationPolicy) -> Allocation {
+    assert!(num_cus > 0);
+    let mut cu_of = vec![0u32; g.n];
+    let mut tasks = vec![Vec::new(); num_cus];
+    let mut edges_per_cu = vec![0usize; num_cus];
+    // Node load: its input edges plus the final self-update op.
+    match policy {
+        AllocationPolicy::RoundRobin => {
+            for i in 0..g.n {
+                let cu = i % num_cus;
+                cu_of[i] = cu as u32;
+                tasks[cu].push(i as u32);
+                edges_per_cu[cu] += g.in_degree(i);
+            }
+        }
+        AllocationPolicy::LeastLoaded => {
+            // Load counted in op-slots (edges + 1 final op), which is what a
+            // CU actually spends cycles on.
+            let mut load = vec![0usize; num_cus];
+            for i in 0..g.n {
+                let cu = (0..num_cus).min_by_key(|&c| (load[c], c)).unwrap();
+                cu_of[i] = cu as u32;
+                tasks[cu].push(i as u32);
+                load[cu] += g.in_degree(i) + 1;
+                edges_per_cu[cu] += g.in_degree(i);
+            }
+        }
+    }
+    Allocation {
+        cu_of,
+        tasks,
+        edges_per_cu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::load_balance_degree;
+    use crate::matrix::gen::{self, GenSeed};
+
+    fn dag(n: usize, seed: u64) -> Dag {
+        Dag::from_csr(&gen::circuit(n, 5, 0.8, GenSeed(seed)))
+    }
+
+    #[test]
+    fn round_robin_is_modular() {
+        let g = dag(100, 1);
+        let a = allocate(&g, 8, AllocationPolicy::RoundRobin);
+        for i in 0..g.n {
+            assert_eq!(a.cu_of[i] as usize, i % 8);
+        }
+    }
+
+    #[test]
+    fn task_lists_partition_nodes_in_order() {
+        let g = dag(257, 2);
+        for policy in [AllocationPolicy::RoundRobin, AllocationPolicy::LeastLoaded] {
+            let a = allocate(&g, 16, policy);
+            let mut seen = vec![false; g.n];
+            for (cu, list) in a.tasks.iter().enumerate() {
+                for w in list.windows(2) {
+                    assert!(w[0] < w[1], "task list of CU {cu} not in topo order");
+                }
+                for &t in list {
+                    assert!(!seen[t as usize]);
+                    seen[t as usize] = true;
+                    assert_eq!(a.cu_of[t as usize] as usize, cu);
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn least_loaded_improves_balance_on_skewed_dag() {
+        let m = gen::power_law(2000, 1.1, 300, GenSeed(3));
+        let g = Dag::from_csr(&m);
+        let rr = allocate(&g, 64, AllocationPolicy::RoundRobin);
+        let ll = allocate(&g, 64, AllocationPolicy::LeastLoaded);
+        let cv_rr = load_balance_degree(&rr.edges_per_cu);
+        let cv_ll = load_balance_degree(&ll.edges_per_cu);
+        assert!(
+            cv_ll <= cv_rr,
+            "least-loaded should not be worse: {cv_ll} vs {cv_rr}"
+        );
+    }
+
+    #[test]
+    fn edges_per_cu_sums_to_total() {
+        let g = dag(500, 4);
+        let a = allocate(&g, 32, AllocationPolicy::LeastLoaded);
+        assert_eq!(a.edges_per_cu.iter().sum::<usize>(), g.num_edges());
+    }
+
+    #[test]
+    fn single_cu_gets_everything() {
+        let g = dag(50, 5);
+        let a = allocate(&g, 1, AllocationPolicy::RoundRobin);
+        assert_eq!(a.tasks[0].len(), 50);
+    }
+}

@@ -1,0 +1,282 @@
+//! Intra-node edges computation reordering — ICR (paper §IV.C, Algorithm 2).
+//!
+//! In each cycle every active CU has a set of *computable* edges for its
+//! chosen node. Which edge each CU computes does not change the result, but
+//! edges with the same source node scheduled in the same cycle share one
+//! register-bank readout (the input crossbar broadcasts), improving data
+//! reuse and relaxing bank constraints. ICR greedily groups such "similar
+//! edges".
+//!
+//! This module is pure scheduling logic: bank availability is injected by
+//! the caller (`available`/`claim`), so the same code serves the idealized
+//! pass (everything available) and the port-accurate pass.
+
+/// One CU's candidates for this cycle: `(cu, edges)`, each edge `(src, nz)`.
+pub type CuCandidates = (u32, Vec<(u32, u32)>);
+
+/// Outcome of edge selection for one cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    /// Chosen edge per CU: `(cu, src, nz)`.
+    pub chosen: Vec<(u32, u32, u32)>,
+    /// CUs whose every candidate was unavailable (bank-blocked → Bnop).
+    pub blocked: Vec<u32>,
+}
+
+/// Algorithm 2. `available(src)` must return whether the source's bank can
+/// be read this cycle (callers should return `true` for already-claimed
+/// sources — broadcast — and for forwardable ones); `claim(src)` records a
+/// new bank-port claim.
+pub fn icr_select(
+    cands: &[CuCandidates],
+    mut available: impl FnMut(u32) -> bool,
+    mut claim: impl FnMut(u32),
+) -> Selection {
+    // Line 1: classify edges in C by source. Counts are maintained
+    // *incrementally* as sub-containers are removed (the per-round recount
+    // of the naive transcription was the compiler's top profile entry —
+    // EXPERIMENTS.md §Perf). Since C == D initially, the R-value equals
+    // the initial count of each category.
+    let mut slot_of: crate::util::fasthash::IntMap<u32, usize> = Default::default();
+    let mut srcs: Vec<u32> = Vec::new(); // dense category ids
+    let mut count: Vec<u32> = Vec::new(); // live count in D
+    let mut r_value: Vec<u32> = Vec::new(); // |category in C| (static)
+    for (_, edges) in cands {
+        for &(src, _) in edges {
+            let slot = *slot_of.entry(src).or_insert_with(|| {
+                srcs.push(src);
+                count.push(0);
+                r_value.push(0);
+                srcs.len() - 1
+            });
+            count[slot] += 1;
+            r_value[slot] += 1;
+        }
+    }
+    let mut chosen = Vec::with_capacity(cands.len());
+    let mut blocked = Vec::new();
+    // D: remaining sub-containers (indices into cands).
+    let mut remaining: Vec<usize> = (0..cands.len()).collect();
+    while !remaining.is_empty() {
+        // get_max_category with min-R tie-break (then min src for
+        // determinism), scanning the dense category table.
+        let mut best: Option<(u32, u32, u32, usize)> = None;
+        for slot in 0..srcs.len() {
+            let c = count[slot];
+            if c == 0 || !available(srcs[slot]) {
+                continue;
+            }
+            let r = r_value[slot];
+            let src = srcs[slot];
+            let better = match best {
+                None => true,
+                Some((bc, br, bsrc, _)) => {
+                    c > bc || (c == bc && (r < br || (r == br && src < bsrc)))
+                }
+            };
+            if better {
+                best = Some((c, r, src, slot));
+            }
+        }
+        let Some((_, _, src, _)) = best else {
+            // Every remaining category is bank-blocked.
+            blocked.extend(remaining.iter().map(|&ci| cands[ci].0));
+            break;
+        };
+        claim(src);
+        // Assign this category's edge to every remaining CU that has one,
+        // decrementing the counts of the removed sub-containers' edges.
+        remaining.retain(|&ci| {
+            let (cu, edges) = &cands[ci];
+            if let Some(&(s, nz)) = edges.iter().find(|&&(s, _)| s == src) {
+                chosen.push((*cu, s, nz));
+                for &(es, _) in edges {
+                    count[slot_of[&es]] -= 1;
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+    chosen.sort_unstable();
+    blocked.sort_unstable();
+    Selection { chosen, blocked }
+}
+
+/// The traditional baseline (paper §IV.C): each CU independently picks its
+/// computable edge with the smallest source id; no deliberate grouping.
+/// Bank availability still applies (a denied CU is blocked).
+pub fn ascending_select(
+    cands: &[CuCandidates],
+    mut available: impl FnMut(u32) -> bool,
+    mut claim: impl FnMut(u32),
+) -> Selection {
+    let mut chosen = Vec::with_capacity(cands.len());
+    let mut blocked = Vec::new();
+    for (cu, edges) in cands {
+        // Edges sorted by source id; take the first available.
+        let mut sorted: Vec<&(u32, u32)> = edges.iter().collect();
+        sorted.sort_unstable();
+        match sorted.iter().find(|&&&(s, _)| available(s)) {
+            Some(&&(s, nz)) => {
+                claim(s);
+                chosen.push((*cu, s, nz));
+            }
+            None => blocked.push(*cu),
+        }
+    }
+    chosen.sort_unstable();
+    blocked.sort_unstable();
+    Selection { chosen, blocked }
+}
+
+/// Count, for a cycle's selection, how many register-bank readouts were
+/// saved by same-source grouping: `Σ (group size − 1)`.
+pub fn broadcast_savings(chosen: &[(u32, u32, u32)]) -> usize {
+    let mut per_src: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for &(_, src, _) in chosen {
+        *per_src.entry(src).or_insert(0) += 1;
+    }
+    per_src.values().map(|&c| c - 1).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_available(_: u32) -> bool {
+        true
+    }
+
+    #[test]
+    fn groups_similar_edges() {
+        // Three CUs, all can compute an edge from source 7; ICR must pick
+        // the shared source for all of them in one round.
+        let cands = vec![
+            (0u32, vec![(7u32, 100u32), (1, 101)]),
+            (1, vec![(7, 102), (2, 103)]),
+            (2, vec![(7, 104)]),
+        ];
+        let sel = icr_select(&cands, all_available, |_| {});
+        assert_eq!(sel.blocked, Vec::<u32>::new());
+        assert_eq!(
+            sel.chosen,
+            vec![(0, 7, 100), (1, 7, 102), (2, 7, 104)]
+        );
+        assert_eq!(broadcast_savings(&sel.chosen), 2);
+    }
+
+    #[test]
+    fn tie_breaks_by_min_r_value() {
+        // Sources 3 and 4 both appear in two candidate lists (count tie in
+        // D), but source 3 appears 3 times in C overall (R=3) vs 2 for
+        // source 4 → choose 4 first (min R), keeping 3 groupable later.
+        let cands = vec![
+            (0u32, vec![(3u32, 1u32), (4, 2)]),
+            (1, vec![(3, 3), (4, 4)]),
+            (2, vec![(3, 5)]),
+        ];
+        // Count in D: src 3 → 3, src 4 → 2. Max is src 3 (no tie) → chosen
+        // first here. Build a real tie instead:
+        let cands_tie = vec![
+            (0u32, vec![(3u32, 1u32), (4, 2)]),
+            (1, vec![(3, 3), (4, 4)]),
+            (2, vec![(4, 5), (9, 6)]),
+            (3, vec![(3, 7), (9, 8)]),
+        ];
+        // In C: R(3)=3, R(4)=3, R(9)=2. In D: count(3)=3, count(4)=3 (tie),
+        // count(9)=2 → pick min R among {3,4}: equal (3) → min src = 3.
+        let sel = icr_select(&cands_tie, all_available, |_| {});
+        let srcs: Vec<u32> = sel.chosen.iter().map(|&(_, s, _)| s).collect();
+        // CUs 0,1,3 take src 3; CU 2 then takes src 4 or 9 (count 1 each,
+        // R(9)=2 < R(4)=3 → but count(4)=1=count(9), tie → min R → 9).
+        assert_eq!(srcs, vec![3, 3, 9, 3]);
+        let _ = cands;
+    }
+
+    #[test]
+    fn every_cu_gets_one_edge() {
+        let cands = vec![
+            (0u32, vec![(1u32, 0u32), (2, 1)]),
+            (1, vec![(3, 2)]),
+            (2, vec![(2, 3), (3, 4)]),
+            (5, vec![(9, 5)]),
+        ];
+        let sel = icr_select(&cands, all_available, |_| {});
+        assert_eq!(sel.chosen.len(), 4);
+        let cus: Vec<u32> = sel.chosen.iter().map(|&(c, _, _)| c).collect();
+        assert_eq!(cus, vec![0, 1, 2, 5]);
+    }
+
+    #[test]
+    fn bank_blocking_produces_blocked_cus() {
+        let cands = vec![(0u32, vec![(1u32, 0u32)]), (1, vec![(1, 1), (2, 2)])];
+        // Source 1 unavailable; source 2 fine.
+        let sel = icr_select(&cands, |s| s != 1, |_| {});
+        assert_eq!(sel.blocked, vec![0]);
+        assert_eq!(sel.chosen, vec![(1, 2, 2)]);
+    }
+
+    #[test]
+    fn claim_called_once_per_group() {
+        let cands = vec![
+            (0u32, vec![(5u32, 0u32)]),
+            (1, vec![(5, 1)]),
+            (2, vec![(6, 2)]),
+        ];
+        let mut claims = Vec::new();
+        let sel = icr_select(&cands, all_available, |s| claims.push(s));
+        assert_eq!(sel.chosen.len(), 3);
+        claims.sort_unstable();
+        assert_eq!(claims, vec![5, 6]);
+    }
+
+    #[test]
+    fn ascending_picks_min_src() {
+        let cands = vec![(0u32, vec![(9u32, 0u32), (2, 1), (5, 2)])];
+        let sel = ascending_select(&cands, all_available, |_| {});
+        assert_eq!(sel.chosen, vec![(0, 2, 1)]);
+    }
+
+    #[test]
+    fn ascending_blocks_when_all_unavailable() {
+        let cands = vec![(3u32, vec![(1u32, 0u32), (2, 1)])];
+        let sel = ascending_select(&cands, |_| false, |_| {});
+        assert_eq!(sel.blocked, vec![3]);
+    }
+
+    #[test]
+    fn icr_beats_ascending_on_fig8_like_case() {
+        // Fig. 8: without reordering each PE reads a different source each
+        // cycle; with ICR the shared source is read once. Construct two CUs
+        // over two virtual cycles and compare total bank claims.
+        let cycle1 = vec![
+            (0u32, vec![(7u32, 0u32), (8, 1)]),
+            (1, vec![(8, 2), (3, 3)]),
+        ];
+        let mut claims_icr = 0usize;
+        let sel = icr_select(&cycle1, all_available, |_| claims_icr += 1);
+        assert_eq!(sel.chosen.len(), 2);
+        let mut claims_asc = 0usize;
+        let mut seen = std::collections::HashSet::new();
+        let _ = ascending_select(
+            &cycle1,
+            |_| true,
+            |s| {
+                if seen.insert(s) {
+                    claims_asc += 1;
+                }
+            },
+        );
+        // ICR groups on source 8 (count 2) → 1 claim vs ascending's 2
+        // (src 7 for CU0, src 3 for CU1... ascending picks min: 7 and 3).
+        assert!(claims_icr < claims_asc, "{claims_icr} vs {claims_asc}");
+    }
+
+    #[test]
+    fn empty_input() {
+        let sel = icr_select(&[], all_available, |_| {});
+        assert!(sel.chosen.is_empty() && sel.blocked.is_empty());
+    }
+}

@@ -1,0 +1,395 @@
+//! Instruction emission (compiler step 5, §III.A: "address the potential
+//! spilling issues of the register files and generate the instructions").
+//!
+//! Emission walks the final (port-accurate) schedule cycle by cycle while
+//! mirroring the exact hardware state the instructions will induce:
+//!
+//! - the per-bank `x_i` register files with their priority-encoder write
+//!   addresses, read-address releases (`R_vs`), and spill evictions,
+//! - the per-CU `psum` register files (read-before-write),
+//! - the per-CU data-memory append logs,
+//! - the per-CU operand streams (`L` values and reciprocal diagonals).
+//!
+//! Within a cycle the hardware ordering contract (mirrored by the
+//! simulator) is: **reads see start-of-cycle state → read releases apply →
+//! evictions apply → writes land at the priority encoder's lowest free
+//! address**.
+//!
+//! Because every solved `x` is written to the data memory at solve time,
+//! spilling follows the paper's cheap path: "the address will be directly
+//! released if the data memory already holds the same data" — an evicted
+//! value is simply re-read from the data memory by later consumers. The
+//! eviction victim is chosen with full lookahead (the compiler knows the
+//! schedule): the resident value whose next bank read is farthest away
+//! (Belady).
+
+use super::dataflow::{PsumCtl, SchedOp, SchedStats, Schedule};
+use super::isa::{Instr, NopKind, PsumSrc, XiSrc};
+use crate::arch::ArchConfig;
+use crate::graph::stats::load_balance_degree;
+use crate::graph::Dag;
+use crate::matrix::CsrMatrix;
+use anyhow::{ensure, Result};
+
+/// Compile-time statistics (feeds Table III / Fig. 9(d)(e) rows).
+#[derive(Debug, Clone, Default)]
+pub struct CompileStats {
+    /// Constraints collected by the idealized pass.
+    pub constraints: u64,
+    /// Constraint edges the greedy coloring could not satisfy.
+    pub coloring_violations: usize,
+    /// Cycles of the idealized (infinite-port) schedule.
+    pub ideal_cycles: u64,
+    /// Input edges per CU (load-balance input).
+    pub edges_per_cu: Vec<usize>,
+    /// Coefficient of variation of `edges_per_cu`, percent (Table III).
+    pub load_balance_degree: f64,
+    /// Values evicted from the x_i register files (spills).
+    pub spills: u64,
+    /// Operand reads redirected to the data memory after a spill.
+    pub dm_redirected_reads: u64,
+    /// Wall-clock compile time in seconds (filled by `compile`).
+    pub compile_seconds: f64,
+}
+
+/// A fully compiled program: everything the accelerator (simulator) needs.
+/// The simulator never sees the matrix — operand values live in the
+/// reordered streams, positions in the instructions (§III.B: "positional
+/// information is hidden in the instructions").
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Architecture it was compiled for.
+    pub arch: ArchConfig,
+    /// Matrix order.
+    pub n: usize,
+    /// Matrix nonzeros (incl. diagonal).
+    pub nnz: usize,
+    /// Owner CU of each node.
+    pub cu_of: Vec<u32>,
+    /// Home register bank of each node's solution.
+    pub bank_of: Vec<u32>,
+    /// Decoded instruction streams, `instrs[cu][cycle]`.
+    pub instrs: Vec<Vec<Instr>>,
+    /// Per-CU operand streams: `L_ij` per MAC, `1/L_ii` per final, in issue
+    /// order (the stream-memory contents, already reordered — §III.B).
+    pub l_stream: Vec<Vec<f32>>,
+    /// Per-CU node solve order: the k-th final op of CU `c` solves node
+    /// `solve_order[c][k]`. Drives RHS gathering and solution scatter.
+    pub solve_order: Vec<Vec<u32>>,
+    /// Predicted solve cycle of each node.
+    pub solved_at: Vec<u32>,
+    /// Predicted schedule statistics (the simulator must reproduce
+    /// `predicted.cycles` exactly — the double-entry check).
+    pub predicted: SchedStats,
+    /// Compiler-side statistics.
+    pub compile: CompileStats,
+}
+
+impl Program {
+    /// Number of CUs.
+    pub fn num_cus(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// FLOPs of one solve (= binary nodes, Table III).
+    pub fn flops(&self) -> u64 {
+        2 * self.nnz as u64 - self.n as u64
+    }
+
+    /// Predicted solve latency in seconds.
+    pub fn predicted_seconds(&self) -> f64 {
+        self.predicted.cycles as f64 * self.arch.clock_period()
+    }
+
+    /// Predicted throughput in GOPS (paper's metric: binary nodes / time).
+    pub fn predicted_gops(&self) -> f64 {
+        self.flops() as f64 / self.predicted_seconds() / 1e9
+    }
+
+    /// Encode all instruction streams into 90-bit words.
+    pub fn encode(&self) -> Vec<Vec<u128>> {
+        self.instrs
+            .iter()
+            .map(|row| row.iter().map(Instr::encode).collect())
+            .collect()
+    }
+
+    /// Total VLIW words (instruction-memory occupancy, one word per CU per
+    /// cycle as in the paper's Fig. 5 accounting).
+    pub fn instr_words(&self) -> usize {
+        self.instrs.iter().map(Vec::len).sum()
+    }
+
+    /// Stream-memory occupancy in words.
+    pub fn stream_words(&self) -> usize {
+        self.l_stream.iter().map(Vec::len).sum()
+    }
+}
+
+/// Per-bank `x_i` register-file mirror with priority-encoder semantics.
+struct BankMirror {
+    /// `slots[a] = Some(node)` when address `a` holds that node's solution.
+    slots: Vec<Option<u32>>,
+}
+
+impl BankMirror {
+    fn new(words: usize) -> Self {
+        Self {
+            slots: vec![None; words],
+        }
+    }
+    /// Priority encoder: lowest free address.
+    fn lowest_free(&self) -> Option<u16> {
+        self.slots.iter().position(Option::is_none).map(|p| p as u16)
+    }
+}
+
+/// Emit a program from the final schedule.
+pub fn emit(
+    m: &CsrMatrix,
+    g: &Dag,
+    schedule: &Schedule,
+    cu_of: &[u32],
+    bank_of: &[u32],
+    arch: &ArchConfig,
+    mut compile_stats: CompileStats,
+) -> Result<Program> {
+    let num_cus = schedule.ops.len();
+    let cycles = schedule.stats.cycles as usize;
+    let n = m.n;
+
+    // --- Per-node bank-read cycles (unique, ascending). ---
+    let mut read_cycles: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for row in &schedule.ops {
+        for (t, op) in row.iter().enumerate() {
+            if let SchedOp::Mac { src, fwd: false, .. } = op {
+                read_cycles[*src as usize].push(t as u32);
+            }
+        }
+    }
+    for rc in read_cycles.iter_mut() {
+        rc.sort_unstable();
+        rc.dedup();
+    }
+
+    // --- Data-memory local indices (per-CU append order). ---
+    let mut dm_local = vec![u32::MAX; n];
+    let mut solve_order: Vec<Vec<u32>> = vec![Vec::new(); num_cus];
+    for (cu, row) in schedule.ops.iter().enumerate() {
+        for op in row {
+            if let SchedOp::Final { node, .. } = op {
+                dm_local[*node as usize] = solve_order[cu].len() as u32;
+                solve_order[cu].push(*node);
+            }
+        }
+    }
+
+    // --- Mirrors. ---
+    let mut banks: Vec<BankMirror> = (0..num_cus)
+        .map(|_| BankMirror::new(arch.xi_words()))
+        .collect();
+    let mut slot_of = vec![u16::MAX; n];
+    let mut evicted = vec![false; n];
+    let mut psum_slots: Vec<Vec<Option<u32>>> =
+        vec![vec![None; arch.psum_words as usize]; num_cus];
+    // Node sitting in each CU's feedback register (last executed, unfinished).
+    let mut feedback: Vec<Option<u32>> = vec![None; num_cus];
+    let mut l_stream: Vec<Vec<f32>> = vec![Vec::new(); num_cus];
+    let mut instrs: Vec<Vec<Instr>> = vec![Vec::with_capacity(cycles); num_cus];
+    let mut next_read_idx = vec![0usize; n];
+
+    for t in 0..cycles {
+        let mut pending_releases: Vec<(usize, u16)> = Vec::new();
+        let mut pending_writes: Vec<(usize, usize, u32)> = Vec::new(); // (cu, bank, node)
+        for cu in 0..num_cus {
+            let op = schedule.ops[cu][t];
+            let ins = match op {
+                SchedOp::Nop(kind) => Instr::nop(kind),
+                SchedOp::Mac {
+                    node,
+                    src,
+                    nz,
+                    fwd,
+                    psum,
+                } => {
+                    let mut ins = Instr::nop(NopKind::Dnop);
+                    ins.block = false;
+                    ins.exec = true;
+                    ins.ct = true;
+                    emit_psum(&mut ins, &mut psum_slots[cu], feedback[cu], node, psum)?;
+                    feedback[cu] = Some(node);
+                    l_stream[cu].push(m.values[nz as usize]);
+                    let s = src as usize;
+                    if fwd {
+                        ins.xi_src = XiSrc::Forward;
+                        ins.in_sel = cu_of[s] as u8;
+                    } else if evicted[s] {
+                        ins.xi_src = XiSrc::Dm;
+                        ins.dm_read = true;
+                        ins.dm_owner = cu_of[s] as u8;
+                        ins.dm_raddr = dm_local[s];
+                        compile_stats.dm_redirected_reads += 1;
+                    } else {
+                        ins.xi_src = XiSrc::Bank;
+                        ins.xi_read = true;
+                        ins.in_sel = bank_of[s] as u8;
+                        ensure!(slot_of[s] != u16::MAX, "read of unwritten node {s}");
+                        ins.xi_raddr = slot_of[s];
+                        // Release on the value's last bank read.
+                        let rc = &read_cycles[s];
+                        while next_read_idx[s] < rc.len() && rc[next_read_idx[s]] < t as u32 {
+                            next_read_idx[s] += 1;
+                        }
+                        debug_assert!(
+                            next_read_idx[s] < rc.len() && rc[next_read_idx[s]] == t as u32
+                        );
+                        if next_read_idx[s] + 1 == rc.len() {
+                            ins.xi_release = true;
+                            pending_releases.push((bank_of[s] as usize, slot_of[s]));
+                        }
+                    }
+                    ins
+                }
+                SchedOp::Final { node, psum } => {
+                    let mut ins = Instr::nop(NopKind::Dnop);
+                    ins.block = false;
+                    ins.exec = true;
+                    ins.ct = false;
+                    emit_psum(&mut ins, &mut psum_slots[cu], feedback[cu], node, psum)?;
+                    feedback[cu] = None;
+                    let i = node as usize;
+                    l_stream[cu].push(1.0 / m.diag(i));
+                    ins.dm_write = true;
+                    if g.out_degree(i) > 0 {
+                        ins.xi_write = true;
+                        ins.out_sel = bank_of[i] as u8;
+                        pending_writes.push((cu, bank_of[i] as usize, node));
+                    }
+                    ins
+                }
+            };
+            instrs[cu].push(ins);
+        }
+        // Releases apply before writes (same-cycle free slots are reusable).
+        for (b, addr) in pending_releases {
+            if let Some(node) = banks[b].slots[addr as usize] {
+                banks[b].slots[addr as usize] = None;
+                slot_of[node as usize] = u16::MAX;
+            }
+        }
+        // Writes: priority encoder; evict on overflow.
+        for (cu, b, node) in pending_writes {
+            let addr = match banks[b].lowest_free() {
+                Some(a) => a,
+                None => {
+                    let victim_addr = choose_victim(&banks[b], &read_cycles, &next_read_idx, t)?;
+                    let victim = banks[b].slots[victim_addr as usize].unwrap();
+                    banks[b].slots[victim_addr as usize] = None;
+                    evicted[victim as usize] = true;
+                    slot_of[victim as usize] = u16::MAX;
+                    compile_stats.spills += 1;
+                    let ins = &mut instrs[cu][t];
+                    ins.evict = true;
+                    ins.evict_addr = victim_addr;
+                    victim_addr
+                }
+            };
+            banks[b].slots[addr as usize] = Some(node);
+            slot_of[node as usize] = addr as u16;
+        }
+    }
+
+    let total_ops: usize = l_stream.iter().map(Vec::len).sum();
+    ensure!(
+        total_ops == m.nnz(),
+        "stream ops {total_ops} != nnz {}",
+        m.nnz()
+    );
+    compile_stats.load_balance_degree = load_balance_degree(&compile_stats.edges_per_cu);
+
+    Ok(Program {
+        arch: *arch,
+        n,
+        nnz: m.nnz(),
+        cu_of: cu_of.to_vec(),
+        bank_of: bank_of.to_vec(),
+        instrs,
+        l_stream,
+        solve_order,
+        solved_at: schedule.solved_at.clone(),
+        predicted: schedule.stats.clone(),
+        compile: compile_stats,
+    })
+}
+
+/// Belady victim: resident value with the farthest next bank read (or one
+/// never read again). Values read this very cycle are not evictable.
+fn choose_victim(
+    bank: &BankMirror,
+    read_cycles: &[Vec<u32>],
+    next_read_idx: &[usize],
+    t: usize,
+) -> Result<u16> {
+    let mut best: Option<(u64, u16)> = None;
+    for (addr, slot) in bank.slots.iter().enumerate() {
+        let Some(node) = *slot else { continue };
+        let nu = node as usize;
+        let rc = &read_cycles[nu];
+        let mut idx = next_read_idx[nu];
+        while idx < rc.len() && (rc[idx] as usize) <= t {
+            if rc[idx] as usize == t {
+                break;
+            }
+            idx += 1;
+        }
+        if idx < rc.len() && rc[idx] as usize == t {
+            continue; // read this cycle — not evictable
+        }
+        let key = if idx >= rc.len() {
+            u64::MAX
+        } else {
+            rc[idx] as u64
+        };
+        if best.is_none_or(|(bk, _)| key > bk) {
+            best = Some((key, addr as u16));
+        }
+    }
+    best.map(|(_, a)| a)
+        .ok_or_else(|| anyhow::anyhow!("no evictable slot in full bank at cycle {t}"))
+}
+
+/// Fill the psum-path fields of an instruction and mirror the psum RF.
+/// `prev` is the node in the CU's feedback register (parked on Park*).
+fn emit_psum(
+    ins: &mut Instr,
+    slots: &mut [Option<u32>],
+    prev: Option<u32>,
+    node: u32,
+    psum: PsumCtl,
+) -> Result<()> {
+    // Read (and release) first — the RF supports read-before-write.
+    match psum {
+        PsumCtl::Feedback => ins.psum_src = PsumSrc::Feedback,
+        PsumCtl::Zero | PsumCtl::ParkThenZero => ins.psum_src = PsumSrc::Zero,
+        PsumCtl::ReadRf | PsumCtl::ParkThenRead => {
+            let addr = slots
+                .iter()
+                .position(|&s| s == Some(node))
+                .ok_or_else(|| anyhow::anyhow!("resume of unparked node {node}"))?;
+            ins.psum_src = PsumSrc::ReadRf;
+            ins.psum_read = true;
+            ins.psum_raddr = addr as u16;
+            slots[addr] = None;
+        }
+    }
+    if matches!(psum, PsumCtl::ParkThenZero | PsumCtl::ParkThenRead) {
+        let prev = prev.ok_or_else(|| anyhow::anyhow!("park without a previous node"))?;
+        let addr = slots
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| anyhow::anyhow!("psum RF overflow while parking"))?;
+        ins.psum_write = true;
+        slots[addr] = Some(prev);
+    }
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Medium-node splitting (paper §V.E, future work / extension).
+//!
+//! "A medium node is a node that performs the same basic operations as a
+//! coarse node but has fewer input edges. Converting a coarse node into
+//! multiple fine or medium nodes ... improves load balance."
+//!
+//! A row `i` with more than `threshold` off-diagonal entries is rewritten
+//! as a cascade of medium rows: each intermediate row `t_m` accumulates a
+//! chunk of `i`'s edges with a unit diagonal and zero RHS, producing
+//! `t_m = −Σ_{j∈G_m} L_ij·x_j`; the original row keeps its last chunk and
+//! gains `−1`-weighted edges from the intermediates, so its solution is
+//! unchanged. This trades extra (intermediate) nodes for load balance —
+//! exactly the trade-off the paper describes.
+
+use crate::matrix::CsrMatrix;
+use anyhow::{ensure, Result};
+
+/// Result of splitting: the enlarged matrix plus the row mapping.
+#[derive(Debug, Clone)]
+pub struct SplitResult {
+    /// The rewritten matrix (order ≥ original).
+    pub matrix: CsrMatrix,
+    /// For each new row: `Some(orig)` if it is an original row, `None` for
+    /// intermediates.
+    pub orig_of: Vec<Option<u32>>,
+    /// For each original row: its index in the new matrix.
+    pub new_of: Vec<u32>,
+    /// Number of intermediate (medium) nodes created.
+    pub intermediates: usize,
+}
+
+impl SplitResult {
+    /// Expand a RHS for the split system (zeros at intermediates).
+    pub fn expand_b(&self, b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.orig_of.len()];
+        for (new, orig) in self.orig_of.iter().enumerate() {
+            if let Some(o) = orig {
+                out[new] = b[*o as usize];
+            }
+        }
+        out
+    }
+
+    /// Extract the original solution from the split system's solution.
+    pub fn extract_x(&self, x_split: &[f32]) -> Vec<f32> {
+        self.new_of
+            .iter()
+            .map(|&ni| x_split[ni as usize])
+            .collect()
+    }
+}
+
+/// Split every row with more than `threshold` off-diagonal entries.
+/// `threshold` must be ≥ 2 (each medium node needs at least two inputs to
+/// be worth existing).
+pub fn split_heavy_nodes(m: &CsrMatrix, threshold: usize) -> Result<SplitResult> {
+    ensure!(threshold >= 2, "split threshold must be ≥ 2");
+    let n = m.n;
+    // First pass: decide the new index of every original row, reserving
+    // space for intermediates *before* their consumer row.
+    let mut new_of = vec![0u32; n];
+    let mut next = 0u32;
+    let mut chunks_of = vec![0usize; n];
+    for i in 0..n {
+        let deg = m.in_degree(i);
+        // ceil(deg/threshold) chunks; the last chunk stays in row i, the
+        // rest become intermediates placed just before i.
+        let chunks = if deg > threshold {
+            deg.div_ceil(threshold)
+        } else {
+            1
+        };
+        chunks_of[i] = chunks;
+        next += (chunks - 1) as u32;
+        new_of[i] = next;
+        next += 1;
+    }
+    let new_n = next as usize;
+    let mut orig_of: Vec<Option<u32>> = vec![None; new_n];
+    let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(m.nnz() * 2);
+    let mut intermediates = 0usize;
+    for i in 0..n {
+        let (cols, vals) = m.row_off_diag(i);
+        let ni = new_of[i];
+        orig_of[ni as usize] = Some(i as u32);
+        let chunks = chunks_of[i];
+        if chunks == 1 {
+            for (&c, &v) in cols.iter().zip(vals) {
+                triplets.push((ni, new_of[c as usize], v));
+            }
+            triplets.push((ni, ni, m.diag(i)));
+            continue;
+        }
+        // Intermediate rows take the first (chunks-1) chunks.
+        let chunk_size = cols.len().div_ceil(chunks);
+        let base = ni - (chunks as u32 - 1);
+        let mut k = 0usize;
+        for c_idx in 0..chunks - 1 {
+            let t_row = base + c_idx as u32;
+            intermediates += 1;
+            for _ in 0..chunk_size {
+                if k < cols.len() {
+                    triplets.push((t_row, new_of[cols[k] as usize], vals[k]));
+                    k += 1;
+                }
+            }
+            triplets.push((t_row, t_row, 1.0)); // unit diagonal, b = 0
+            triplets.push((ni, t_row, -1.0)); // consumer edge
+        }
+        // The final chunk stays in the original row.
+        while k < cols.len() {
+            triplets.push((ni, new_of[cols[k] as usize], vals[k]));
+            k += 1;
+        }
+        triplets.push((ni, ni, m.diag(i)));
+    }
+    let matrix = CsrMatrix::from_triplets(new_n, &triplets)?;
+    Ok(SplitResult {
+        matrix,
+        orig_of,
+        new_of,
+        intermediates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::solve_serial;
+
+    #[test]
+    fn no_heavy_rows_is_identity_shaped() {
+        let m = gen::banded(100, 3, 0.8, GenSeed(1));
+        let s = split_heavy_nodes(&m, 16).unwrap();
+        assert_eq!(s.matrix.n, m.n);
+        assert_eq!(s.intermediates, 0);
+    }
+
+    #[test]
+    fn split_preserves_solution() {
+        let m = gen::power_law(300, 1.1, 120, GenSeed(2));
+        let s = split_heavy_nodes(&m, 8).unwrap();
+        assert!(s.intermediates > 0);
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let x_ref = solve_serial(&m, &b);
+        let xb = s.expand_b(&b);
+        let x_split = solve_serial(&s.matrix, &xb);
+        let x = s.extract_x(&x_split);
+        for i in 0..m.n {
+            assert!(
+                (x[i] - x_ref[i]).abs() <= 2e-3 * x_ref[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                x[i],
+                x_ref[i]
+            );
+        }
+    }
+
+    #[test]
+    fn split_bounds_in_degree() {
+        let m = gen::power_law(500, 1.2, 200, GenSeed(3));
+        let th = 10;
+        let s = split_heavy_nodes(&m, th).unwrap();
+        for i in 0..s.matrix.n {
+            // Intermediates may add consumer edges to the original rows, but
+            // each row's raw chunk is ≤ threshold; consumer edges add at
+            // most (chunks-1) ≈ deg/threshold more.
+            let deg = s.matrix.in_degree(i);
+            assert!(
+                deg <= th + th, // chunk + consumer edges bound for our sizes
+                "row {i} has degree {deg}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_tiny_threshold() {
+        let m = gen::chain(10, GenSeed(4));
+        assert!(split_heavy_nodes(&m, 1).is_err());
+    }
+
+    #[test]
+    fn mapping_roundtrip() {
+        let m = gen::power_law(200, 1.3, 64, GenSeed(5));
+        let s = split_heavy_nodes(&m, 8).unwrap();
+        for (orig, &new) in s.new_of.iter().enumerate() {
+            assert_eq!(s.orig_of[new as usize], Some(orig as u32));
+        }
+    }
+}

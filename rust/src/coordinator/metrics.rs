@@ -1,0 +1,64 @@
+//! Per-matrix accelerator metrics attached to every solve response.
+
+use crate::arch::ArchConfig;
+use crate::sim::{EnergyModel, RunStats};
+
+/// Metrics derived from one cycle-accurate simulation of the compiled
+/// program (shared across all RHS requests for the same matrix).
+#[derive(Debug, Clone)]
+pub struct SolveMetrics {
+    /// Accelerator cycles per solve.
+    pub cycles: u64,
+    /// Modeled accelerator latency per solve (seconds, at 150 MHz).
+    pub accel_seconds: f64,
+    /// Throughput in GOPS (binary ops / accel time).
+    pub gops: f64,
+    /// PE utilization.
+    pub utilization: f64,
+    /// Modeled average power (W).
+    pub power_w: f64,
+    /// Energy per solve (J).
+    pub energy_j: f64,
+    /// Energy efficiency (GOPS/W).
+    pub gops_per_w: f64,
+}
+
+impl SolveMetrics {
+    /// Derive the shared metrics from a simulated run.
+    pub fn from_run(stats: &RunStats, arch: &ArchConfig, flops: u64) -> Self {
+        let seconds = stats.cycles as f64 * arch.clock_period();
+        let gops = flops as f64 / seconds / 1e9;
+        let energy = EnergyModel::paper_28nm().estimate(stats, arch);
+        Self {
+            cycles: stats.cycles,
+            accel_seconds: seconds,
+            gops,
+            utilization: stats.utilization(arch.num_cus()),
+            power_w: energy.avg_power_w,
+            energy_j: energy.energy_j,
+            gops_per_w: energy.gops_per_watt(gops),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derives_consistent_metrics() {
+        let stats = RunStats {
+            cycles: 1500,
+            exec: 64_000,
+            macs: 60_000,
+            finals: 4_000,
+            ..RunStats::default()
+        };
+        let arch = ArchConfig::default();
+        let m = SolveMetrics::from_run(&stats, &arch, 100_000);
+        assert_eq!(m.cycles, 1500);
+        assert!((m.accel_seconds - 1500.0 / 150e6).abs() < 1e-15);
+        assert!(m.gops > 0.0 && m.power_w > 0.0);
+        assert!((m.gops_per_w - m.gops / m.power_w).abs() < 1e-9);
+    }
+}

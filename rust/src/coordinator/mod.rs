@@ -1,0 +1,18 @@
+//! L3 coordinator: the multi-RHS solve service.
+//!
+//! In the paper's motivating applications (transient circuit simulation,
+//! preconditioned iterative solvers) the same triangular factor is solved
+//! against a *stream* of right-hand sides. The service compiles the matrix
+//! once (accelerator program + PJRT level plan), then serves RHS requests
+//! from worker threads with batched dispatch:
+//!
+//! - numerics run on the PJRT executables ([`crate::runtime`]),
+//! - per-request accelerator metrics (cycles, energy) come from the
+//!   cycle-accurate simulator, run once per matrix — the schedule is
+//!   RHS-independent, so the cost model is shared across requests.
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::SolveMetrics;
+pub use service::{ServiceConfig, SolveRequest, SolveResponse, SolveService};

@@ -1,0 +1,275 @@
+//! The solve service: compile once, serve a stream of RHS requests.
+//!
+//! Requests flow through an mpsc queue into worker threads; each worker
+//! batches up to `batch_size` requests per dequeue round to amortize
+//! dispatch overhead (the PJRT executables and level plans are shared,
+//! read-only). Responses return through per-request channels.
+
+use super::metrics::SolveMetrics;
+use crate::compiler::{compile, CompilerConfig, Program};
+use crate::matrix::CsrMatrix;
+use crate::runtime::{LevelSolver, PjrtRuntime};
+use crate::sim::Accelerator;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Compiler/architecture options.
+    pub compiler: CompilerConfig,
+    /// Worker threads serving the numeric path.
+    pub workers: usize,
+    /// Max requests drained per batch round.
+    pub batch_size: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            compiler: CompilerConfig::default(),
+            workers: 2,
+            batch_size: 8,
+        }
+    }
+}
+
+/// One solve request.
+pub struct SolveRequest {
+    /// Right-hand side (length n).
+    pub b: Vec<f32>,
+    /// Response channel.
+    pub reply: mpsc::Sender<Result<SolveResponse>>,
+}
+
+/// One solve response.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    /// Solution vector.
+    pub x: Vec<f32>,
+    /// Host wall-clock latency of the numeric path (seconds).
+    pub host_seconds: f64,
+    /// Shared accelerator metrics for this matrix.
+    pub metrics: SolveMetrics,
+}
+
+/// The running service.
+pub struct SolveService {
+    tx: Option<mpsc::Sender<SolveRequest>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// The compiled accelerator program (public for inspection/benches).
+    pub program: Arc<Program>,
+    /// Shared per-matrix metrics.
+    pub metrics: SolveMetrics,
+    served: Arc<AtomicU64>,
+}
+
+impl SolveService {
+    /// Compile `m`, simulate once for metrics, load the PJRT runtime, and
+    /// spawn the worker pool.
+    pub fn start(m: &CsrMatrix, artifacts: &Path, cfg: ServiceConfig) -> Result<Self> {
+        let program = Arc::new(compile(m, &cfg.compiler).context("compile")?);
+        // One cycle-accurate run (RHS-independent schedule): double-entry
+        // verification + the cost model shared by all requests.
+        let mut acc = Accelerator::new(cfg.compiler.arch);
+        let probe_b = vec![1.0f32; m.n];
+        let run = acc.run(&program, &probe_b).context("simulate")?;
+        run.stats
+            .verify_against(&program.predicted)
+            .context("double-entry check")?;
+        let metrics = SolveMetrics::from_run(&run.stats, &cfg.compiler.arch, program.flops());
+        let solver = Arc::new(LevelSolver::new(m));
+        // Validate the artifacts once on the calling thread (fail fast).
+        PjrtRuntime::load(artifacts).context("load artifacts")?;
+        let (tx, rx) = mpsc::channel::<SolveRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        let served = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let solver = Arc::clone(&solver);
+            // PJRT clients are not Send/Sync (Rc-backed FFI handles), so
+            // each worker owns a private runtime with its own compiled
+            // executables.
+            let artifacts = artifacts.to_path_buf();
+            let metrics = metrics.clone();
+            let served = Arc::clone(&served);
+            let batch = cfg.batch_size.max(1);
+            workers.push(std::thread::spawn(move || {
+                let runtime = match PjrtRuntime::load(&artifacts) {
+                    Ok(rt) => rt,
+                    Err(_) => return, // validated above; only races can fail
+                };
+                loop {
+                // Drain up to `batch` requests in one round.
+                let mut reqs = Vec::with_capacity(batch);
+                {
+                    let guard = rx.lock().unwrap();
+                    match guard.recv() {
+                        Ok(r) => reqs.push(r),
+                        Err(_) => return, // channel closed
+                    }
+                    while reqs.len() < batch {
+                        match guard.try_recv() {
+                            Ok(r) => reqs.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                    // Batched rounds go through the multi-RHS kernels,
+                    // amortizing PJRT dispatch (EXPERIMENTS.md §Perf).
+                    let t0 = Instant::now();
+                    if reqs.len() > 1 {
+                        let bs: Vec<Vec<f32>> =
+                            reqs.iter().map(|r| r.b.clone()).collect();
+                        match solver.solve_multi(&runtime, &bs) {
+                            Ok(xs) => {
+                                let per = t0.elapsed().as_secs_f64() / reqs.len() as f64;
+                                for (req, x) in reqs.into_iter().zip(xs) {
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                    let _ = req.reply.send(Ok(SolveResponse {
+                                        x,
+                                        host_seconds: per,
+                                        metrics: metrics.clone(),
+                                    }));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for req in reqs {
+                                    served.fetch_add(1, Ordering::Relaxed);
+                                    let _ =
+                                        req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                                }
+                            }
+                        }
+                    } else {
+                        for req in reqs {
+                            let t0 = Instant::now();
+                            let out =
+                                solver.solve(&runtime, &req.b).map(|x| SolveResponse {
+                                    x,
+                                    host_seconds: t0.elapsed().as_secs_f64(),
+                                    metrics: metrics.clone(),
+                                });
+                            served.fetch_add(1, Ordering::Relaxed);
+                            let _ = req.reply.send(out);
+                        }
+                    }
+                }
+            }));
+        }
+        Ok(Self {
+            tx: Some(tx),
+            workers,
+            program,
+            metrics,
+            served,
+        })
+    }
+
+    /// Submit a request; returns the receiver for the response.
+    pub fn submit(&self, b: Vec<f32>) -> Result<mpsc::Receiver<Result<SolveResponse>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .context("service stopped")?
+            .send(SolveRequest { b, reply })
+            .ok()
+            .context("service queue closed")?;
+        Ok(rx)
+    }
+
+    /// Solve synchronously (submit + wait).
+    pub fn solve(&self, b: Vec<f32>) -> Result<SolveResponse> {
+        self.submit(b)?.recv().context("worker dropped")?
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop the workers (drains the queue first).
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for SolveService {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::assert_close_to_reference;
+    use std::path::PathBuf;
+
+    fn artifacts() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            compiler: CompilerConfig {
+                arch: ArchConfig {
+                    log2_cus: 4,
+                    ..ArchConfig::default()
+                },
+                ..CompilerConfig::default()
+            },
+            workers: 2,
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn serves_concurrent_requests_correctly() {
+        if !artifacts().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = gen::circuit(400, 5, 0.8, GenSeed(1));
+        let svc = SolveService::start(&m, &artifacts(), small_cfg()).unwrap();
+        let mut rxs = Vec::new();
+        let mut bs = Vec::new();
+        for k in 0..12 {
+            let b: Vec<f32> = (0..m.n).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
+            rxs.push(svc.submit(b.clone()).unwrap());
+            bs.push(b);
+        }
+        for (rx, b) in rxs.into_iter().zip(bs) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_close_to_reference(&m, &b, &resp.x, 1e-3);
+            assert!(resp.metrics.gops > 0.0);
+            assert!(resp.host_seconds > 0.0);
+        }
+        assert_eq!(svc.served(), 12);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_match_program_prediction() {
+        if !artifacts().join("manifest.txt").exists() {
+            return;
+        }
+        let m = gen::banded(300, 5, 0.6, GenSeed(2));
+        let svc = SolveService::start(&m, &artifacts(), small_cfg()).unwrap();
+        assert_eq!(svc.metrics.cycles, svc.program.predicted.cycles);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,181 @@
+//! Flattened adjacency structure of the SpTRSV DAG.
+
+use crate::matrix::CsrMatrix;
+
+/// The DAG of a lower-triangular matrix, with both directions flattened into
+/// CSR-like arrays for cache-friendly traversal.
+///
+/// In-edges of node `i` are the off-diagonal nonzeros of row `i`; each edge
+/// remembers the nonzero's index into `CsrMatrix::values` so schedulers can
+/// refer to the exact `L_ij` operand it streams.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    /// Number of nodes (matrix order).
+    pub n: usize,
+    /// In-edge pointers, length `n + 1`.
+    pub in_ptr: Vec<usize>,
+    /// Source node of each in-edge, grouped by destination.
+    pub in_src: Vec<u32>,
+    /// Index into the matrix `values`/`colidx` arrays for each in-edge.
+    pub in_nz: Vec<u32>,
+    /// Out-edge pointers, length `n + 1`.
+    pub out_ptr: Vec<usize>,
+    /// Destination node of each out-edge, grouped by source, ascending.
+    pub out_dst: Vec<u32>,
+    /// Nonzero index of each out-edge (parallel to `out_dst`).
+    pub out_nz: Vec<u32>,
+}
+
+impl Dag {
+    /// Build the DAG from a validated CSR matrix.
+    pub fn from_csr(m: &CsrMatrix) -> Self {
+        let n = m.n;
+        let mut in_ptr = vec![0usize; n + 1];
+        for i in 0..n {
+            in_ptr[i + 1] = in_ptr[i] + m.in_degree(i);
+        }
+        let ne = in_ptr[n];
+        let mut in_src = vec![0u32; ne];
+        let mut in_nz = vec![0u32; ne];
+        let mut out_count = vec![0usize; n];
+        {
+            let mut k = 0usize;
+            for i in 0..n {
+                let (cols, _) = m.row_off_diag(i);
+                for (off, &c) in cols.iter().enumerate() {
+                    in_src[k] = c;
+                    in_nz[k] = (m.rowptr[i] + off) as u32;
+                    out_count[c as usize] += 1;
+                    k += 1;
+                }
+            }
+        }
+        let mut out_ptr = vec![0usize; n + 1];
+        for j in 0..n {
+            out_ptr[j + 1] = out_ptr[j] + out_count[j];
+        }
+        let mut out_dst = vec![0u32; ne];
+        let mut out_nz = vec![0u32; ne];
+        let mut cursor = out_ptr.clone();
+        for i in 0..n {
+            let (cols, _) = m.row_off_diag(i);
+            for (off, &c) in cols.iter().enumerate() {
+                let p = cursor[c as usize];
+                out_dst[p] = i as u32;
+                out_nz[p] = (m.rowptr[i] + off) as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+        Self {
+            n,
+            in_ptr,
+            in_src,
+            in_nz,
+            out_ptr,
+            out_dst,
+            out_nz,
+        }
+    }
+
+    /// Total number of edges (off-diagonal nonzeros).
+    pub fn num_edges(&self) -> usize {
+        self.in_src.len()
+    }
+
+    /// In-degree of node `i`.
+    #[inline]
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.in_ptr[i + 1] - self.in_ptr[i]
+    }
+
+    /// Out-degree of node `i`.
+    #[inline]
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out_ptr[i + 1] - self.out_ptr[i]
+    }
+
+    /// Sources of node `i`'s in-edges.
+    #[inline]
+    pub fn preds(&self, i: usize) -> &[u32] {
+        &self.in_src[self.in_ptr[i]..self.in_ptr[i + 1]]
+    }
+
+    /// Nonzero indices parallel to [`Dag::preds`].
+    #[inline]
+    pub fn pred_nz(&self, i: usize) -> &[u32] {
+        &self.in_nz[self.in_ptr[i]..self.in_ptr[i + 1]]
+    }
+
+    /// Consumers of node `i`'s solution.
+    #[inline]
+    pub fn succs(&self, i: usize) -> &[u32] {
+        &self.out_dst[self.out_ptr[i]..self.out_ptr[i + 1]]
+    }
+
+    /// Maximum in-degree (paper's `d`).
+    pub fn max_in_degree(&self) -> usize {
+        (0..self.n).map(|i| self.in_degree(i)).max().unwrap_or(0)
+    }
+
+    /// A topological order (node ids ascending already *is* one for a lower
+    /// triangular matrix — every edge goes from a lower id to a higher id —
+    /// but this method is kept for clarity and for reordered DAG variants).
+    pub fn topo_order(&self) -> Vec<u32> {
+        (0..self.n as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::CsrMatrix;
+
+    #[test]
+    fn fig1_adjacency() {
+        let m = CsrMatrix::paper_fig1();
+        let g = Dag::from_csr(&m);
+        assert_eq!(g.n, 10);
+        assert_eq!(g.num_edges(), m.off_diag_nnz());
+        // Node 3 (0-based 2) depends on nodes 1,2 (0-based 0,1).
+        assert_eq!(g.preds(2), &[0, 1]);
+        // Node 1 (0-based 0) feeds nodes 3 and 4 (0-based 2,3).
+        assert_eq!(g.succs(0), &[2, 3]);
+        assert_eq!(g.in_degree(0), 0);
+    }
+
+    #[test]
+    fn edges_point_forward() {
+        let m = gen::circuit(400, 5, 0.8, GenSeed(3));
+        let g = Dag::from_csr(&m);
+        for i in 0..g.n {
+            for &s in g.preds(i) {
+                assert!((s as usize) < i);
+            }
+            for &d in g.succs(i) {
+                assert!((d as usize) > i);
+            }
+        }
+    }
+
+    #[test]
+    fn degree_sums_match() {
+        let m = gen::banded(300, 5, 0.5, GenSeed(4));
+        let g = Dag::from_csr(&m);
+        let total_in: usize = (0..g.n).map(|i| g.in_degree(i)).sum();
+        let total_out: usize = (0..g.n).map(|i| g.out_degree(i)).sum();
+        assert_eq!(total_in, total_out);
+        assert_eq!(total_in, g.num_edges());
+    }
+
+    #[test]
+    fn pred_nz_points_at_correct_values() {
+        let m = gen::circuit(200, 4, 0.7, GenSeed(5));
+        let g = Dag::from_csr(&m);
+        for i in 0..g.n {
+            for (&s, &nz) in g.preds(i).iter().zip(g.pred_nz(i)) {
+                assert_eq!(m.colidx[nz as usize], s);
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Level scheduling (paper Fig. 1(c)): partition nodes by their longest-path
+//! depth from the sources. Nodes within a level are mutually independent.
+
+use super::Dag;
+
+/// Level decomposition of a DAG.
+#[derive(Debug, Clone)]
+pub struct Levels {
+    /// Level index of each node (0 = source level).
+    pub level_of: Vec<u32>,
+    /// Nodes grouped by level: `nodes[level_ptr[l]..level_ptr[l+1]]`.
+    pub level_ptr: Vec<usize>,
+    /// Node ids ordered by (level, node id).
+    pub nodes: Vec<u32>,
+}
+
+impl Levels {
+    /// Compute levels by a forward sweep (node ids are topological for
+    /// triangular matrices, so one pass suffices).
+    pub fn compute(g: &Dag) -> Self {
+        let mut level_of = vec![0u32; g.n];
+        let mut max_level = 0u32;
+        for i in 0..g.n {
+            let mut lvl = 0u32;
+            for &s in g.preds(i) {
+                lvl = lvl.max(level_of[s as usize] + 1);
+            }
+            level_of[i] = lvl;
+            max_level = max_level.max(lvl);
+        }
+        let nlv = (max_level + 1) as usize;
+        let mut counts = vec![0usize; nlv];
+        for &l in &level_of {
+            counts[l as usize] += 1;
+        }
+        let mut level_ptr = vec![0usize; nlv + 1];
+        for l in 0..nlv {
+            level_ptr[l + 1] = level_ptr[l] + counts[l];
+        }
+        let mut nodes = vec![0u32; g.n];
+        let mut cursor = level_ptr.clone();
+        for i in 0..g.n {
+            let l = level_of[i] as usize;
+            nodes[cursor[l]] = i as u32;
+            cursor[l] += 1;
+        }
+        Self {
+            level_of,
+            level_ptr,
+            nodes,
+        }
+    }
+
+    /// Number of levels (critical path length in coarse nodes).
+    pub fn num_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+
+    /// Nodes of level `l`, ascending ids.
+    pub fn level(&self, l: usize) -> &[u32] {
+        &self.nodes[self.level_ptr[l]..self.level_ptr[l + 1]]
+    }
+
+    /// Width (node count) of level `l`.
+    pub fn width(&self, l: usize) -> usize {
+        self.level_ptr[l + 1] - self.level_ptr[l]
+    }
+
+    /// Maximum level width (upper bound on coarse-dataflow parallelism).
+    pub fn max_width(&self) -> usize {
+        (0..self.num_levels()).map(|l| self.width(l)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Dag;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::CsrMatrix;
+
+    #[test]
+    fn fig1_levels() {
+        let g = Dag::from_csr(&CsrMatrix::paper_fig1());
+        let lv = Levels::compute(&g);
+        // Sources: nodes 1, 2, 5 (0-based 0, 1, 4).
+        assert_eq!(lv.level(0), &[0, 1, 4]);
+        assert_eq!(lv.level_of[2], 1); // node 3 right after its sources
+        assert!(lv.num_levels() >= 4);
+    }
+
+    #[test]
+    fn chain_has_n_levels() {
+        let m = gen::chain(50, GenSeed(1));
+        let lv = Levels::compute(&Dag::from_csr(&m));
+        assert_eq!(lv.num_levels(), 50);
+        assert_eq!(lv.max_width(), 1);
+    }
+
+    #[test]
+    fn level_partition_is_complete_and_disjoint() {
+        let m = gen::circuit(500, 5, 0.8, GenSeed(2));
+        let g = Dag::from_csr(&m);
+        let lv = Levels::compute(&g);
+        let mut seen = vec![false; g.n];
+        for l in 0..lv.num_levels() {
+            for &i in lv.level(l) {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn levels_respect_dependencies() {
+        let m = gen::factor_like(400, 6, 3, GenSeed(3));
+        let g = Dag::from_csr(&m);
+        let lv = Levels::compute(&g);
+        for i in 0..g.n {
+            for &s in g.preds(i) {
+                assert!(lv.level_of[s as usize] < lv.level_of[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn level_is_longest_path() {
+        let m = CsrMatrix::paper_fig1();
+        let g = Dag::from_csr(&m);
+        let lv = Levels::compute(&g);
+        for i in 0..g.n {
+            if g.in_degree(i) > 0 {
+                let want = 1 + g
+                    .preds(i)
+                    .iter()
+                    .map(|&s| lv.level_of[s as usize])
+                    .max()
+                    .unwrap();
+                assert_eq!(lv.level_of[i], want);
+            }
+        }
+    }
+}

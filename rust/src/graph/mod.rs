@@ -1,0 +1,12 @@
+//! DAG view of a sparse triangular matrix.
+//!
+//! Nodes are matrix rows; a directed edge `j → i` exists for every
+//! off-diagonal nonzero `L[i][j]` and carries one multiply-accumulate.
+
+pub mod dag;
+pub mod levels;
+pub mod stats;
+
+pub use dag::Dag;
+pub use levels::Levels;
+pub use stats::{DagStats, CDU_THRESHOLD_FRACTION};

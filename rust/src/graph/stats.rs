@@ -1,0 +1,162 @@
+//! DAG characterization metrics from the paper's Table III:
+//! binary (fine) node count, CDU-node statistics, level structure,
+//! load-balance degree, and the peak-throughput model (equation 3).
+
+use super::{Dag, Levels};
+use crate::util::coefficient_of_variation;
+
+/// The paper sets the CDU threshold at 20% of the architecture's maximum
+/// parallelism (number of CUs): a node is *coarse-dataflow-unfriendly* when
+/// its level holds fewer nodes than that threshold.
+pub const CDU_THRESHOLD_FRACTION: f64 = 0.2;
+
+/// Table III-style characterization of one benchmark DAG.
+#[derive(Debug, Clone)]
+pub struct DagStats {
+    /// Matrix order.
+    pub n: usize,
+    /// Stored nonzeros (incl. diagonal).
+    pub nnz: usize,
+    /// Fine-node count of the equivalent binary DAG = FLOPs per solve.
+    pub binary_nodes: usize,
+    /// Number of levels (coarse critical path).
+    pub num_levels: usize,
+    /// Maximum level width.
+    pub max_width: usize,
+    /// Maximum in-degree (`d` in the compiler complexity bound).
+    pub max_in_degree: usize,
+    /// % of coarse nodes that are CDU (level width < threshold).
+    pub cdu_nodes_pct: f64,
+    /// % of edges whose destination is a CDU node.
+    pub cdu_edges_pct: f64,
+    /// % of levels that contain at least one CDU node (equivalently, whose
+    /// width is below the threshold).
+    pub cdu_levels_pct: f64,
+    /// Average in-degree over CDU nodes (Table III "Edges per node").
+    pub cdu_avg_edges_per_node: f64,
+}
+
+impl DagStats {
+    /// Compute the statistics for `g` on an architecture with `num_cus`
+    /// compute units (threshold = `CDU_THRESHOLD_FRACTION * num_cus`).
+    pub fn compute(g: &Dag, lv: &Levels, num_cus: usize) -> Self {
+        let nnz = g.num_edges() + g.n;
+        let threshold = ((num_cus as f64) * CDU_THRESHOLD_FRACTION).ceil() as usize;
+        let mut cdu_nodes = 0usize;
+        let mut cdu_edges = 0usize;
+        let mut cdu_levels = 0usize;
+        for l in 0..lv.num_levels() {
+            let w = lv.width(l);
+            if w < threshold {
+                cdu_levels += 1;
+                for &i in lv.level(l) {
+                    cdu_nodes += 1;
+                    cdu_edges += g.in_degree(i as usize);
+                }
+            }
+        }
+        let pct = |num: usize, den: usize| {
+            if den == 0 {
+                0.0
+            } else {
+                100.0 * num as f64 / den as f64
+            }
+        };
+        Self {
+            n: g.n,
+            nnz,
+            binary_nodes: 2 * nnz - g.n,
+            num_levels: lv.num_levels(),
+            max_width: lv.max_width(),
+            max_in_degree: g.max_in_degree(),
+            cdu_nodes_pct: pct(cdu_nodes, g.n),
+            cdu_edges_pct: pct(cdu_edges, g.num_edges()),
+            cdu_levels_pct: pct(cdu_levels, lv.num_levels()),
+            cdu_avg_edges_per_node: if cdu_nodes == 0 {
+                0.0
+            } else {
+                cdu_edges as f64 / cdu_nodes as f64
+            },
+        }
+    }
+}
+
+/// Load-balance degree (Table III column 10): coefficient of variation, in
+/// percent, of the number of input edges assigned to each CU.
+pub fn load_balance_degree(edges_per_cu: &[usize]) -> f64 {
+    let xs: Vec<f64> = edges_per_cu.iter().map(|&e| e as f64).collect();
+    coefficient_of_variation(&xs)
+}
+
+/// Peak throughput in GOPS (paper equation 3).
+///
+/// `p` = number of CUs, `clock_hz` = accelerator clock, `n`/`nnz` from the
+/// matrix. Each CU retires 2 flops per cycle, but the `N` division-ish ops
+/// are charged once per row: peak = (2·nnz − n) / (nnz/p · C).
+pub fn peak_throughput_gops(n: usize, nnz: usize, p: usize, clock_hz: f64) -> f64 {
+    let ops = (2 * nnz - n) as f64;
+    let cycles = nnz as f64 / p as f64;
+    let time = cycles / clock_hz;
+    ops / time / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Dag, Levels};
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::CsrMatrix;
+
+    fn stats_for(m: &CsrMatrix, cus: usize) -> DagStats {
+        let g = Dag::from_csr(m);
+        let lv = Levels::compute(&g);
+        DagStats::compute(&g, &lv, cus)
+    }
+
+    #[test]
+    fn chain_is_entirely_cdu() {
+        let m = gen::chain(100, GenSeed(1));
+        let s = stats_for(&m, 64);
+        assert_eq!(s.cdu_nodes_pct, 100.0);
+        assert_eq!(s.cdu_levels_pct, 100.0);
+        assert_eq!(s.num_levels, 100);
+    }
+
+    #[test]
+    fn wide_shallow_has_no_cdu() {
+        let m = gen::shallow(5000, 0.2, GenSeed(2));
+        let s = stats_for(&m, 64);
+        // Huge levels => no CDU levels (c-36 row of Table III shows 0.0).
+        assert!(s.cdu_nodes_pct < 5.0, "{}", s.cdu_nodes_pct);
+    }
+
+    #[test]
+    fn percentages_in_range() {
+        for seed in 0..5 {
+            let m = gen::circuit(800, 5, 0.8, GenSeed(seed));
+            let s = stats_for(&m, 64);
+            for v in [s.cdu_nodes_pct, s.cdu_edges_pct, s.cdu_levels_pct] {
+                assert!((0.0..=100.0).contains(&v));
+            }
+            assert_eq!(s.binary_nodes, 2 * s.nnz - s.n);
+        }
+    }
+
+    #[test]
+    fn peak_throughput_formula() {
+        // 64 CUs @150 MHz: architecture peak = 2*64*150e6 = 19.2 GOPS;
+        // eq. 3 scales it by (1 - n/(2 nnz)).
+        let gops = peak_throughput_gops(2048, 31909, 64, 150e6);
+        let arch_peak = 2.0 * 64.0 * 150e6 / 1e9;
+        let expect = arch_peak * (1.0 - 2048.0 / (2.0 * 31909.0));
+        assert!((gops - expect).abs() < 1e-9);
+        // dw2048's Table III value is 18.6 GOPS.
+        assert!((gops - 18.6).abs() < 0.1, "{gops}");
+    }
+
+    #[test]
+    fn load_balance_zero_when_equal() {
+        assert_eq!(load_balance_degree(&[10, 10, 10]), 0.0);
+        assert!(load_balance_degree(&[1, 100]) > 50.0);
+    }
+}

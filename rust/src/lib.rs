@@ -1,0 +1,55 @@
+//! # MGD-SpTRSV
+//!
+//! Reproduction of *"Efficient Hardware Accelerator Based on Medium
+//! Granularity Dataflow for SpTRSV"* (Chen, Yang, Lu — IEEE TVLSI 2024).
+//!
+//! The library is organized as the paper's hardware/software codesign:
+//!
+//! - [`matrix`] — sparse triangular matrix substrate (CSR/CSC, generators,
+//!   MatrixMarket IO, reference solvers).
+//! - [`graph`] — the DAG view of a triangular matrix (levels, CDU statistics,
+//!   peak-throughput model).
+//! - [`compiler`] — the paper's custom compiler: coarse-node allocation,
+//!   medium-granularity dataflow scheduling, partial-sum caching, intra-node
+//!   edge-computation reordering (ICR), bank coloring, register allocation,
+//!   and bit-accurate instruction encoding.
+//! - [`sim`] — a cycle-accurate simulator of the 2^N-CU VLIW accelerator
+//!   (CUs, crossbar interconnects, software-managed memories, energy model).
+//! - [`baselines`] — coarse dataflow, fine dataflow (DPU-v2 model), CPU and
+//!   GPU comparators.
+//! - [`runtime`] — PJRT (via the `xla` crate) loader/executor for the
+//!   AOT-compiled JAX/Pallas level kernels in `artifacts/`.
+//! - [`coordinator`] — the L3 solve service: multi-RHS batching over the
+//!   numeric runtime plus per-solve accelerator metrics.
+//! - [`bench_harness`] — regenerates every table and figure of the paper's
+//!   evaluation (see DESIGN.md §3).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mgd_sptrsv::matrix::gen::{self, GenSeed};
+//! use mgd_sptrsv::compiler::{CompilerConfig, compile};
+//! use mgd_sptrsv::sim::Accelerator;
+//!
+//! let m = gen::circuit(500, 6, 0.8, GenSeed(42));
+//! let prog = compile(&m, &CompilerConfig::default()).unwrap();
+//! let b = vec![1.0f32; m.n];
+//! let mut acc = Accelerator::new(prog.arch);
+//! let run = acc.run(&prog, &b).unwrap();
+//! let x_ref = mgd_sptrsv::matrix::triangular::solve_serial(&m, &b);
+//! for (a, r) in run.x.iter().zip(&x_ref) {
+//!     assert!((a - r).abs() <= 1e-3 * r.abs().max(1.0));
+//! }
+//! ```
+
+pub mod arch;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod compiler;
+pub mod coordinator;
+pub mod graph;
+pub mod matrix;
+pub mod runtime;
+pub mod sim;
+pub mod util;

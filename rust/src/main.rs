@@ -1,0 +1,6 @@
+//! `mgd` — the leader binary: CLI over the compiler, simulator, solve
+//! service and benchmark harness.
+
+fn main() {
+    mgd_sptrsv::cli::run();
+}

@@ -1,0 +1,107 @@
+//! CSC view of a lower-triangular matrix.
+//!
+//! The compiler and the DAG builder need out-edges (who consumes `x_i`),
+//! which is exactly the column structure; this module materializes it once.
+
+use super::CsrMatrix;
+
+/// Compressed-sparse-column view. Only the off-diagonal structure carries
+/// meaning for the DAG (diagonals are self-updates, not edges), but the full
+/// matrix is stored for completeness.
+#[derive(Debug, Clone)]
+pub struct CscMatrix {
+    /// Matrix order.
+    pub n: usize,
+    /// Column pointers, length `n + 1`.
+    pub colptr: Vec<usize>,
+    /// Row indices, column-major, ascending within a column.
+    pub rowidx: Vec<u32>,
+    /// Values, parallel to `rowidx`.
+    pub values: Vec<f32>,
+}
+
+impl CscMatrix {
+    /// Transpose-copy a CSR matrix into CSC.
+    pub fn from_csr(m: &CsrMatrix) -> Self {
+        let n = m.n;
+        let nnz = m.nnz();
+        let mut counts = vec![0usize; n];
+        for &c in &m.colidx {
+            counts[c as usize] += 1;
+        }
+        let mut colptr = vec![0usize; n + 1];
+        for j in 0..n {
+            colptr[j + 1] = colptr[j] + counts[j];
+        }
+        let mut rowidx = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        let mut cursor = colptr.clone();
+        // Row-major traversal emits ascending rows per column automatically.
+        for i in 0..n {
+            for k in m.rowptr[i]..m.rowptr[i + 1] {
+                let j = m.colidx[k] as usize;
+                let p = cursor[j];
+                rowidx[p] = i as u32;
+                values[p] = m.values[k];
+                cursor[j] += 1;
+            }
+        }
+        Self {
+            n,
+            colptr,
+            rowidx,
+            values,
+        }
+    }
+
+    /// Rows that *depend on* `x_j` (strictly below the diagonal), i.e. the
+    /// out-neighbors of node `j` in the DAG.
+    pub fn consumers(&self, j: usize) -> &[u32] {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        // The diagonal (row == j) is the first entry of the column in a
+        // lower-triangular matrix stored with ascending rows.
+        debug_assert!(lo < hi && self.rowidx[lo] as usize == j);
+        &self.rowidx[lo + 1..hi]
+    }
+
+    /// Out-degree of node `j` in the DAG.
+    pub fn out_degree(&self, j: usize) -> usize {
+        self.colptr[j + 1] - self.colptr[j] - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_csr_consumers() {
+        let m = CsrMatrix::from_triplets(
+            3,
+            &[
+                (0, 0, 2.0),
+                (1, 0, -1.0),
+                (1, 1, 4.0),
+                (2, 0, -3.0),
+                (2, 1, -2.0),
+                (2, 2, 8.0),
+            ],
+        )
+        .unwrap();
+        let c = CscMatrix::from_csr(&m);
+        assert_eq!(c.consumers(0), &[1, 2]);
+        assert_eq!(c.consumers(1), &[2]);
+        assert_eq!(c.consumers(2), &[] as &[u32]);
+        assert_eq!(c.out_degree(0), 2);
+        assert_eq!(c.out_degree(2), 0);
+    }
+
+    #[test]
+    fn nnz_preserved() {
+        let m = CsrMatrix::paper_fig1();
+        let c = CscMatrix::from_csr(&m);
+        assert_eq!(c.rowidx.len(), m.nnz());
+        assert_eq!(c.colptr[c.n], m.nnz());
+    }
+}

@@ -1,0 +1,292 @@
+//! CSR storage for sparse lower-triangular matrices (diagonal-last rows).
+
+use anyhow::{bail, ensure, Result};
+
+/// A sparse lower-triangular matrix in CSR format.
+///
+/// Invariants (checked by [`CsrMatrix::validate`]):
+/// - `rowptr.len() == n + 1`, monotonically non-decreasing, `rowptr[n] == nnz`.
+/// - every row is non-empty and ends with its diagonal entry (`colidx == row`),
+/// - off-diagonal columns in a row are strictly ascending and `< row`,
+/// - no diagonal value is zero (the solve divides by it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Matrix order (number of rows == columns).
+    pub n: usize,
+    /// Row pointers, length `n + 1`.
+    pub rowptr: Vec<usize>,
+    /// Column indices, row-major, diagonal last in each row.
+    pub colidx: Vec<u32>,
+    /// Nonzero values, parallel to `colidx`.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Number of stored nonzeros (including the diagonal).
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Number of off-diagonal nonzeros (== DAG edge count).
+    pub fn off_diag_nnz(&self) -> usize {
+        self.nnz() - self.n
+    }
+
+    /// Number of binary (fine) nodes of the equivalent binary DAG, which is
+    /// also the number of floating-point operations of one solve:
+    /// `2*nnz - n` (each off-diagonal is a MAC = 2 flops, each row does one
+    /// subtract-and-scale = 2 flops, minus the n redundant adds-to-zero...
+    /// the paper's count, Table III column "Binary nodes").
+    pub fn binary_nodes(&self) -> usize {
+        2 * self.nnz() - self.n
+    }
+
+    /// The off-diagonal part of row `i`: parallel `(colidx, value)` slices.
+    pub fn row_off_diag(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.rowptr[i];
+        let hi = self.rowptr[i + 1] - 1; // last slot is the diagonal
+        (&self.colidx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// The diagonal value of row `i`.
+    pub fn diag(&self, i: usize) -> f32 {
+        self.values[self.rowptr[i + 1] - 1]
+    }
+
+    /// In-degree (number of off-diagonal entries) of row `i`.
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.rowptr[i + 1] - self.rowptr[i] - 1
+    }
+
+    /// Maximum in-degree over all rows (the paper's `d` in the compiler
+    /// complexity bound `O(nnz · d)`).
+    pub fn max_in_degree(&self) -> usize {
+        (0..self.n).map(|i| self.in_degree(i)).max().unwrap_or(0)
+    }
+
+    /// Build from unordered triplets `(row, col, value)`.
+    ///
+    /// Entries above the diagonal are rejected; duplicate entries are
+    /// rejected; missing diagonals are rejected. Rows are reordered to the
+    /// diagonal-last convention.
+    pub fn from_triplets(n: usize, triplets: &[(u32, u32, f32)]) -> Result<Self> {
+        let mut counts = vec![0usize; n];
+        for &(r, c, _) in triplets {
+            ensure!((r as usize) < n && (c as usize) < n, "index out of range");
+            ensure!(c <= r, "entry ({r},{c}) above the diagonal");
+            counts[r as usize] += 1;
+        }
+        let mut rowptr = vec![0usize; n + 1];
+        for i in 0..n {
+            rowptr[i + 1] = rowptr[i] + counts[i];
+        }
+        let nnz = rowptr[n];
+        let mut colidx = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        let mut cursor = rowptr.clone();
+        for &(r, c, v) in triplets {
+            let k = cursor[r as usize];
+            colidx[k] = c;
+            values[k] = v;
+            cursor[r as usize] += 1;
+        }
+        // Per-row: sort ascending, then rotate the diagonal to the end.
+        for i in 0..n {
+            let (lo, hi) = (rowptr[i], rowptr[i + 1]);
+            ensure!(hi > lo, "row {i} is empty (missing diagonal)");
+            let mut idx: Vec<usize> = (lo..hi).collect();
+            idx.sort_by_key(|&k| colidx[k]);
+            let mut cs: Vec<u32> = idx.iter().map(|&k| colidx[k]).collect();
+            let mut vs: Vec<f32> = idx.iter().map(|&k| values[k]).collect();
+            for w in cs.windows(2) {
+                ensure!(w[0] != w[1], "duplicate entry in row {i}");
+            }
+            ensure!(
+                *cs.last().unwrap() == i as u32,
+                "row {i} missing diagonal entry"
+            );
+            // Diagonal is currently last after the ascending sort (it has the
+            // largest column in a lower-triangular row), which is already the
+            // required convention.
+            let dv = *vs.last().unwrap();
+            ensure!(dv != 0.0, "zero diagonal in row {i}");
+            colidx[lo..hi].copy_from_slice(&cs);
+            values[lo..hi].copy_from_slice(&vs);
+            let _ = &mut cs;
+            let _ = &mut vs;
+        }
+        let m = Self {
+            n,
+            rowptr,
+            colidx,
+            values,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check all structural invariants; returns an error describing the first
+    /// violation.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.rowptr.len() == self.n + 1, "rowptr length");
+        ensure!(
+            *self.rowptr.last().unwrap() == self.colidx.len(),
+            "rowptr[n] != nnz"
+        );
+        ensure!(self.colidx.len() == self.values.len(), "colidx/values length");
+        for i in 0..self.n {
+            let (lo, hi) = (self.rowptr[i], self.rowptr[i + 1]);
+            if hi <= lo {
+                bail!("row {i} empty");
+            }
+            if self.colidx[hi - 1] as usize != i {
+                bail!("row {i}: diagonal not last");
+            }
+            if self.values[hi - 1] == 0.0 {
+                bail!("row {i}: zero diagonal");
+            }
+            for k in lo..hi - 1 {
+                if self.colidx[k] as usize >= i {
+                    bail!("row {i}: off-diagonal column {} not below diagonal", self.colidx[k]);
+                }
+                if k > lo && self.colidx[k] <= self.colidx[k - 1] {
+                    bail!("row {i}: columns not strictly ascending");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense (n×n) expansion, for small-matrix tests.
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0.0; self.n]; self.n];
+        for i in 0..self.n {
+            for k in self.rowptr[i]..self.rowptr[i + 1] {
+                d[i][self.colidx[k] as usize] = self.values[k];
+            }
+        }
+        d
+    }
+
+    /// The paper's Fig. 1 example: 10×10 lower-triangular pattern with unit
+    /// diagonal and -1 off-diagonals. Used by unit tests and the quickstart.
+    pub fn paper_fig1() -> Self {
+        // Off-diagonal structure from Fig. 1(a)/(c): edges src -> dst.
+        // Level 1: {1, 2, 5}; level 2: {3, 7}; level 3: {4, 6, 8}; ...
+        let edges: &[(u32, u32)] = &[
+            (1, 3),
+            (2, 3),
+            (1, 4),
+            (3, 4),
+            (5, 6),
+            (3, 6),
+            (2, 7),
+            (5, 7),
+            (4, 8),
+            (7, 8),
+            (6, 9),
+            (8, 9),
+            (8, 10),
+            (9, 10),
+        ];
+        let n = 10;
+        let mut t: Vec<(u32, u32, f32)> = (0..n).map(|i| (i as u32, i as u32, 1.0)).collect();
+        for &(s, d) in edges {
+            t.push((d - 1, s - 1, -1.0));
+        }
+        Self::from_triplets(n, &t).expect("fig1 example is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrMatrix {
+        // [ 2        ]
+        // [-1  4     ]
+        // [ 0 -2  8  ]
+        CsrMatrix::from_triplets(
+            3,
+            &[
+                (0, 0, 2.0),
+                (1, 0, -1.0),
+                (1, 1, 4.0),
+                (2, 1, -2.0),
+                (2, 2, 8.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_diag_last() {
+        let m = tiny();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.off_diag_nnz(), 2);
+        assert_eq!(m.diag(0), 2.0);
+        assert_eq!(m.diag(1), 4.0);
+        assert_eq!(m.diag(2), 8.0);
+        let (c, v) = m.row_off_diag(1);
+        assert_eq!(c, &[0]);
+        assert_eq!(v, &[-1.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn binary_nodes_matches_paper_formula() {
+        let m = tiny();
+        assert_eq!(m.binary_nodes(), 2 * 5 - 3);
+    }
+
+    #[test]
+    fn rejects_upper_entries() {
+        assert!(CsrMatrix::from_triplets(2, &[(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_diagonal() {
+        assert!(CsrMatrix::from_triplets(2, &[(0, 0, 1.0), (1, 0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_diagonal() {
+        assert!(CsrMatrix::from_triplets(1, &[(0, 0, 0.0)]).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(
+            CsrMatrix::from_triplets(2, &[(0, 0, 1.0), (1, 0, 1.0), (1, 0, 2.0), (1, 1, 1.0)])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn fig1_example_valid() {
+        let m = CsrMatrix::paper_fig1();
+        assert_eq!(m.n, 10);
+        m.validate().unwrap();
+        // Node 3 (0-based 2) has in-edges from rows 1 and 2 per the paper text
+        // ("column indexes of the off-diagonal non-zeros are 1 and 2").
+        let (c, _) = m.row_off_diag(2);
+        assert_eq!(c, &[0, 1]);
+    }
+
+    #[test]
+    fn in_degree_and_max() {
+        let m = tiny();
+        assert_eq!(m.in_degree(0), 0);
+        assert_eq!(m.in_degree(1), 1);
+        assert_eq!(m.max_in_degree(), 1);
+    }
+
+    #[test]
+    fn to_dense_roundtrip() {
+        let m = tiny();
+        let d = m.to_dense();
+        assert_eq!(d[1][0], -1.0);
+        assert_eq!(d[2][2], 8.0);
+        assert_eq!(d[0][1], 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Synthetic sparse-triangular workload generators.
+//!
+//! The paper evaluates 245 SuiteSparse matrices; this offline image has no
+//! network access, so we synthesize matrices whose *DAG shape* — level
+//! structure, CDU-node fraction, in-degree distribution, bandwidth — spans
+//! the same regimes (see DESIGN.md "Substitutions"). Every generator is
+//! seeded and deterministic.
+//!
+//! Values are made diagonally dominant (diag = Σ|off-diag| + U[1,2)) so all
+//! solves are well-conditioned and f32 comparisons are meaningful.
+
+use super::CsrMatrix;
+use crate::util::XorShift64;
+
+/// Explicit seed newtype so call sites read `GenSeed(42)` rather than a bare
+/// integer that could be confused with a size parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenSeed(pub u64);
+
+/// Finish a pattern: assign off-diagonal values and a dominant diagonal.
+fn realize(n: usize, pattern: Vec<Vec<u32>>, rng: &mut XorShift64) -> CsrMatrix {
+    let mut triplets: Vec<(u32, u32, f32)> = Vec::new();
+    for (i, cols) in pattern.iter().enumerate() {
+        let mut mag = 0f32;
+        for &c in cols {
+            debug_assert!((c as usize) < i);
+            let v = rng.f32_range(-1.0, -0.1);
+            mag += v.abs();
+            triplets.push((i as u32, c, v));
+        }
+        triplets.push((i as u32, i as u32, mag + rng.f32_range(1.0, 2.0)));
+    }
+    CsrMatrix::from_triplets(n, &triplets).expect("generator produced invalid pattern")
+}
+
+/// Deduplicate and sort a row's off-diagonal column list in place.
+fn dedup_row(cols: &mut Vec<u32>) {
+    cols.sort_unstable();
+    cols.dedup();
+}
+
+/// Banded matrix: row `i` draws from the `bw` previous columns, each kept
+/// with probability `fill`. Models the narrow-band structure of matrices
+/// like `dw2048` / discretized 1-D operators: long dependence chains, small
+/// levels, CDU-heavy.
+pub fn banded(n: usize, bw: usize, fill: f64, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0xBA4D);
+    let mut pattern = vec![Vec::new(); n];
+    for (i, row) in pattern.iter_mut().enumerate().skip(1) {
+        let lo = i.saturating_sub(bw);
+        for c in lo..i {
+            if rng.chance(fill) {
+                row.push(c as u32);
+            }
+        }
+        // Guarantee the chain structure (previous row) so the band does not
+        // accidentally decouple into independent blocks.
+        if row.is_empty() {
+            row.push((i - 1) as u32);
+        }
+        dedup_row(row);
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Pure bidiagonal chain: the fully sequential worst case (every level has
+/// exactly one node).
+pub fn chain(n: usize, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0xC4A1);
+    let mut pattern = vec![Vec::new(); n];
+    for (i, row) in pattern.iter_mut().enumerate().skip(1) {
+        row.push((i - 1) as u32);
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Circuit-simulation-like matrix (add20 / rajat / fpga_dcop analogs):
+/// geometric in-degree with mean `avg_deg`, sources drawn mostly from a
+/// local window (probability `locality`) and occasionally uniformly from all
+/// previous rows, plus a few high-fanin "hub" rows (dense rows are what make
+/// rajat04-style matrices load-imbalanced).
+pub fn circuit(n: usize, avg_deg: usize, locality: f64, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0xC12C);
+    let window = (n / 20).max(8);
+    let mut pattern = vec![Vec::new(); n];
+    for i in 1..n {
+        let deg = rng.geometric(avg_deg as f64).min(i);
+        let row = &mut pattern[i];
+        for _ in 0..deg {
+            let c = if rng.chance(locality) {
+                rng.range(i.saturating_sub(window), i)
+            } else {
+                rng.range(0, i)
+            };
+            row.push(c as u32);
+        }
+        dedup_row(row);
+    }
+    // Hub rows: ~0.5% of rows get in-degree ≈ 10×avg (clipped).
+    let hubs = (n / 200).max(1);
+    for _ in 0..hubs {
+        let i = rng.range(n / 2, n);
+        let want = (avg_deg * 10).min(i);
+        let extra = rng.sample_distinct(0, i, want);
+        let row = &mut pattern[i];
+        row.extend(extra.iter().map(|&c| c as u32));
+        dedup_row(row);
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// 2-D grid stencil (power-network / mesh analog, ACTIVSg2000 / jagmesh):
+/// node (r,c) depends on its left and upper neighbors (5-point lower part)
+/// and, when `nine_point`, the diagonal neighbors too.
+pub fn grid2d(rows: usize, cols: usize, nine_point: bool, seed: GenSeed) -> CsrMatrix {
+    let n = rows * cols;
+    let mut rng = XorShift64::new(seed.0 ^ 0x621D);
+    let mut pattern = vec![Vec::new(); n];
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            let mut row = Vec::new();
+            if c > 0 {
+                row.push((i - 1) as u32);
+            }
+            if r > 0 {
+                row.push((i - cols) as u32);
+                if nine_point {
+                    if c > 0 {
+                        row.push((i - cols - 1) as u32);
+                    }
+                    if c + 1 < cols {
+                        row.push((i - cols + 1) as u32);
+                    }
+                }
+            }
+            dedup_row(&mut row);
+            pattern[i] = row;
+        }
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Mostly independent nodes with a shallow scattered dependency tree —
+/// the `c-36` analog where the coarse dataflow performs well (few, huge
+/// levels; tiny CDU fraction).
+pub fn shallow(n: usize, dep_prob: f64, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0x54A7);
+    let mut pattern = vec![Vec::new(); n];
+    for (i, row) in pattern.iter_mut().enumerate().skip(1) {
+        if rng.chance(dep_prob) {
+            // Depend on 1-2 much earlier nodes: keeps the level count tiny.
+            let deg = 1 + rng.below(2) as usize;
+            for _ in 0..deg.min(i) {
+                row.push(rng.range(0, (i / 4).max(1)) as u32);
+            }
+            dedup_row(row);
+        }
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Uniform random lower pattern with a target off-diagonal nnz. The
+/// "unstructured" control case.
+pub fn random_lower(n: usize, off_nnz: usize, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0x7A2D);
+    let mut pattern = vec![Vec::new(); n];
+    let mut placed = 0usize;
+    let mut attempts = 0usize;
+    while placed < off_nnz && attempts < off_nnz * 20 {
+        attempts += 1;
+        let i = rng.range(1, n);
+        let c = rng.range(0, i) as u32;
+        if !pattern[i].contains(&c) {
+            pattern[i].push(c);
+            placed += 1;
+        }
+    }
+    for row in &mut pattern {
+        dedup_row(row);
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Power-law in-degree (few rows with very many inputs): the bp_200 /
+/// west2021 analog whose load-balance degree is poor under coarse node
+/// allocation.
+pub fn power_law(n: usize, alpha: f64, max_deg: usize, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0xF0E1);
+    let mut pattern = vec![Vec::new(); n];
+    for i in 1..n {
+        // Inverse-CDF sample of a zipf-ish degree in [1, max_deg].
+        let u = rng.f64().max(1e-12);
+        let deg = ((u.powf(-1.0 / alpha)).min(max_deg as f64) as usize).min(i);
+        let cols = rng.sample_distinct(0, i, deg.max(1).min(i));
+        pattern[i] = cols.into_iter().map(|c| c as u32).collect();
+    }
+    realize(n, pattern, &mut rng)
+}
+
+/// Triangular factor-like pattern: take a banded skeleton and add fill-in
+/// fringes that decay with distance — resembles L factors from sparse LU of
+/// circuit/FEM matrices (bayer07 / gemat12 analogs).
+pub fn factor_like(n: usize, bw: usize, fringe: usize, seed: GenSeed) -> CsrMatrix {
+    let mut rng = XorShift64::new(seed.0 ^ 0xFAC7);
+    let mut pattern = vec![Vec::new(); n];
+    for i in 1..n {
+        let row = &mut pattern[i];
+        let lo = i.saturating_sub(bw);
+        for c in lo..i {
+            if rng.chance(0.6) {
+                row.push(c as u32);
+            }
+        }
+        // Fill-in fringe: geometric decay with distance beyond the band.
+        for _ in 0..fringe {
+            let span = i.saturating_sub(bw);
+            if span == 0 {
+                break;
+            }
+            // Bias toward recent columns via squared uniform.
+            let u = rng.f64();
+            let c = (span as f64 * (1.0 - u * u)) as usize;
+            if c < span {
+                row.push(c as u32);
+            }
+        }
+        if row.is_empty() {
+            row.push((i - 1) as u32);
+        }
+        dedup_row(row);
+    }
+    realize(n, pattern, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::triangular::{max_relative_residual, solve_serial};
+
+    fn check(m: &CsrMatrix) {
+        m.validate().unwrap();
+        let b: Vec<f32> = (0..m.n).map(|i| ((i * 13 % 11) as f32) - 5.0).collect();
+        let x = solve_serial(m, &b);
+        assert!(max_relative_residual(m, &x, &b) < 1e-4);
+    }
+
+    #[test]
+    fn banded_valid_and_solvable() {
+        check(&banded(500, 6, 0.5, GenSeed(1)));
+    }
+
+    #[test]
+    fn chain_is_fully_sequential() {
+        let m = chain(100, GenSeed(2));
+        check(&m);
+        assert_eq!(m.off_diag_nnz(), 99);
+    }
+
+    #[test]
+    fn circuit_valid_and_has_hubs() {
+        let m = circuit(1000, 5, 0.8, GenSeed(3));
+        check(&m);
+        assert!(m.max_in_degree() >= 20, "expected hub rows, max={}", m.max_in_degree());
+    }
+
+    #[test]
+    fn grid2d_five_point_shape() {
+        let m = grid2d(20, 30, false, GenSeed(4));
+        check(&m);
+        assert_eq!(m.n, 600);
+        // Interior node depends on exactly 2 neighbors.
+        assert_eq!(m.in_degree(20 * 30 - 1), 2);
+    }
+
+    #[test]
+    fn grid2d_nine_point_has_more_edges() {
+        let five = grid2d(15, 15, false, GenSeed(5));
+        let nine = grid2d(15, 15, true, GenSeed(5));
+        check(&nine);
+        assert!(nine.off_diag_nnz() > five.off_diag_nnz());
+    }
+
+    #[test]
+    fn shallow_has_few_levels() {
+        let m = shallow(2000, 0.3, GenSeed(6));
+        check(&m);
+        let dag = crate::graph::Dag::from_csr(&m);
+        let lv = crate::graph::levels::Levels::compute(&dag);
+        assert!(lv.num_levels() <= 10, "levels={}", lv.num_levels());
+    }
+
+    #[test]
+    fn random_lower_hits_target_nnz() {
+        let m = random_lower(400, 2000, GenSeed(7));
+        check(&m);
+        assert!(m.off_diag_nnz() >= 1900, "nnz={}", m.off_diag_nnz());
+    }
+
+    #[test]
+    fn power_law_has_skewed_degrees() {
+        let m = power_law(1500, 1.2, 200, GenSeed(8));
+        check(&m);
+        assert!(m.max_in_degree() >= 30);
+    }
+
+    #[test]
+    fn factor_like_valid() {
+        check(&factor_like(800, 8, 4, GenSeed(9)));
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = circuit(300, 4, 0.7, GenSeed(11));
+        let b = circuit(300, 4, 0.7, GenSeed(11));
+        assert_eq!(a, b);
+        let c = circuit(300, 4, 0.7, GenSeed(12));
+        assert_ne!(a, c);
+    }
+}

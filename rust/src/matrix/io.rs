@@ -1,0 +1,199 @@
+//! MatrixMarket IO.
+//!
+//! Supports the `matrix coordinate real {general|symmetric}` header used by
+//! the SuiteSparse collection so users with the paper's real benchmarks can
+//! feed them in. Reading extracts the lower triangle (dropping strictly-upper
+//! entries of general matrices, mirroring symmetric ones is unnecessary for
+//! the lower factor) and enforces the diagonal-last convention; rows missing
+//! a diagonal get a unit diagonal, matching common SpTRSV benchmarking
+//! practice on pattern-only collections.
+
+use super::CsrMatrix;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Parse MatrixMarket text into a lower-triangular [`CsrMatrix`].
+pub fn read_matrix_market_str(text: &str) -> Result<CsrMatrix> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty file")?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    ensure!(
+        h.len() >= 4 && h[0] == "%%MatrixMarket" && h[1] == "matrix" && h[2] == "coordinate",
+        "unsupported MatrixMarket header: {header}"
+    );
+    let field = h[3];
+    ensure!(
+        field == "real" || field == "integer" || field == "pattern",
+        "unsupported field type {field}"
+    );
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut entries: Vec<(u32, u32, f32)> = Vec::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if dims.is_none() {
+            let r: usize = it.next().context("rows")?.parse()?;
+            let c: usize = it.next().context("cols")?.parse()?;
+            let z: usize = it.next().context("nnz")?.parse()?;
+            ensure!(r == c, "matrix must be square, got {r}x{c}");
+            dims = Some((r, c, z));
+            continue;
+        }
+        let r: usize = it.next().context("entry row")?.parse()?;
+        let c: usize = it.next().context("entry col")?.parse()?;
+        let v: f32 = match field {
+            "pattern" => 1.0,
+            _ => it.next().context("entry value")?.parse()?,
+        };
+        ensure!(r >= 1 && c >= 1, "1-based indices expected");
+        if c > r {
+            continue; // keep the lower triangle only
+        }
+        entries.push(((r - 1) as u32, (c - 1) as u32, v));
+    }
+    let (n, _, _) = dims.context("missing size line")?;
+    // Ensure every row has a diagonal; insert unit diagonals where absent,
+    // and replace zero diagonals (pattern files) with 1.0.
+    let mut has_diag = vec![false; n];
+    for e in entries.iter_mut() {
+        if e.0 == e.1 {
+            has_diag[e.0 as usize] = true;
+            if e.2 == 0.0 {
+                e.2 = 1.0;
+            }
+        }
+    }
+    for (i, present) in has_diag.iter().enumerate() {
+        if !present {
+            entries.push((i as u32, i as u32, 1.0));
+        }
+    }
+    CsrMatrix::from_triplets(n, &entries)
+}
+
+/// Read a MatrixMarket file from disk.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("open {}", path.display()))?;
+    read_matrix_market_str(&text)
+}
+
+/// Write a matrix as `coordinate real general` (1-based, lower triangle).
+pub fn write_matrix_market(m: &CsrMatrix, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by mgd-sptrsv")?;
+    writeln!(f, "{} {} {}", m.n, m.n, m.nnz())?;
+    for i in 0..m.n {
+        for k in m.rowptr[i]..m.rowptr[i + 1] {
+            writeln!(f, "{} {} {}", i + 1, m.colidx[k] + 1, m.values[k])?;
+        }
+    }
+    Ok(())
+}
+
+/// Guard against absurd inputs when loading user files.
+pub fn sanity_check(m: &CsrMatrix, max_n: usize) -> Result<()> {
+    if m.n > max_n {
+        bail!("matrix order {} exceeds supported maximum {max_n}", m.n);
+    }
+    m.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    const SAMPLE: &str = "%%MatrixMarket matrix coordinate real general
+% comment line
+3 3 5
+1 1 2.0
+2 1 -1.0
+2 2 4.0
+3 2 -2.0
+3 3 8.0
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = read_matrix_market_str(SAMPLE).unwrap();
+        assert_eq!(m.n, 3);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.diag(2), 8.0);
+    }
+
+    #[test]
+    fn drops_upper_entries() {
+        let text = "%%MatrixMarket matrix coordinate real general
+2 2 3
+1 2 9.0
+1 1 1.0
+2 2 1.0
+";
+        let m = read_matrix_market_str(text).unwrap();
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn inserts_missing_diagonal() {
+        let text = "%%MatrixMarket matrix coordinate real general
+2 2 1
+2 1 -1.0
+";
+        let m = read_matrix_market_str(text).unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.diag(0), 1.0);
+        assert_eq!(m.diag(1), 1.0);
+    }
+
+    #[test]
+    fn pattern_field_gets_unit_values() {
+        let text = "%%MatrixMarket matrix coordinate pattern general
+2 2 2
+1 1
+2 1
+";
+        let m = read_matrix_market_str(text).unwrap();
+        assert_eq!(m.diag(0), 1.0);
+        let (c, v) = m.row_off_diag(1);
+        assert_eq!(c, &[0]);
+        assert_eq!(v, &[1.0]);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let text = "%%MatrixMarket matrix coordinate real general
+2 3 1
+1 1 1.0
+";
+        assert!(read_matrix_market_str(text).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let m = gen::banded(50, 3, 0.6, GenSeed(5));
+        let dir = std::env::temp_dir().join("mgd_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.mtx");
+        write_matrix_market(&m, &path).unwrap();
+        let m2 = read_matrix_market(&path).unwrap();
+        assert_eq!(m.n, m2.n);
+        assert_eq!(m.nnz(), m2.nnz());
+        assert_eq!(m.colidx, m2.colidx);
+        for (a, b) in m.values.iter().zip(&m2.values) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sanity_check_rejects_huge() {
+        let m = gen::chain(10, GenSeed(1));
+        assert!(sanity_check(&m, 5).is_err());
+        assert!(sanity_check(&m, 100).is_ok());
+    }
+}

@@ -1,0 +1,18 @@
+//! Sparse lower-triangular matrix substrate.
+//!
+//! Conventions follow the paper (Fig. 1 / Algorithm 1):
+//!
+//! - Matrices are **lower triangular** with a nonzero diagonal.
+//! - Storage is CSR with, inside each row, the off-diagonal entries first in
+//!   ascending column order and **the diagonal entry last** (the paper's
+//!   `rowptr[i+1]-1` slot).
+//! - Values are `f32` (the accelerator's PE is a 32-bit float adder+multiplier).
+
+pub mod csc;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod triangular;
+
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;

@@ -1,0 +1,139 @@
+//! Reference solvers — the golden numerics every other component is checked
+//! against, and the CPU baseline's serial inner kernel (paper Algorithm 1).
+
+use super::CsrMatrix;
+
+/// Serial forward substitution, exactly the paper's Algorithm 1.
+pub fn solve_serial(m: &CsrMatrix, b: &[f32]) -> Vec<f32> {
+    assert_eq!(b.len(), m.n);
+    let mut x = vec![0f32; m.n];
+    for i in 0..m.n {
+        let ie = m.rowptr[i + 1] - 1;
+        let mut sum = 0f32;
+        for j in m.rowptr[i]..ie {
+            sum += m.values[j] * x[m.colidx[j] as usize];
+        }
+        x[i] = (b[i] - sum) / m.values[ie];
+    }
+    x
+}
+
+/// Serial forward substitution in f64 (for tolerance baselines in tests).
+pub fn solve_serial_f64(m: &CsrMatrix, b: &[f32]) -> Vec<f64> {
+    let mut x = vec![0f64; m.n];
+    for i in 0..m.n {
+        let ie = m.rowptr[i + 1] - 1;
+        let mut sum = 0f64;
+        for j in m.rowptr[i]..ie {
+            sum += m.values[j] as f64 * x[m.colidx[j] as usize];
+        }
+        x[i] = (b[i] as f64 - sum) / m.values[ie] as f64;
+    }
+    x
+}
+
+/// Residual check: max_i |(L x)_i - b_i| / (|b_i| + 1).
+pub fn max_relative_residual(m: &CsrMatrix, x: &[f32], b: &[f32]) -> f64 {
+    let mut worst = 0f64;
+    for i in 0..m.n {
+        let mut acc = 0f64;
+        for k in m.rowptr[i]..m.rowptr[i + 1] {
+            acc += m.values[k] as f64 * x[m.colidx[k] as usize] as f64;
+        }
+        let r = (acc - b[i] as f64).abs() / (b[i].abs() as f64 + 1.0);
+        worst = worst.max(r);
+    }
+    worst
+}
+
+/// Compare a solution against the serial reference with a mixed
+/// absolute/relative f32 tolerance. Returns the worst row on failure.
+pub fn assert_close_to_reference(m: &CsrMatrix, b: &[f32], x: &[f32], tol: f32) {
+    let r = solve_serial(m, b);
+    for i in 0..m.n {
+        let denom = r[i].abs().max(1.0);
+        assert!(
+            (x[i] - r[i]).abs() <= tol * denom,
+            "row {i}: got {} want {} (tol {tol})",
+            x[i],
+            r[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    #[test]
+    fn solves_identity() {
+        let m = CsrMatrix::from_triplets(3, &[(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]).unwrap();
+        let x = solve_serial(&m, &[3.0, -1.0, 2.0]);
+        assert_eq!(x, vec![3.0, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn solves_dense_lower_3x3() {
+        // L = [2 0 0; 1 3 0; 4 5 6], b = L * [1,2,3]^T = [2, 7, 32]
+        let m = CsrMatrix::from_triplets(
+            3,
+            &[
+                (0, 0, 2.0),
+                (1, 0, 1.0),
+                (1, 1, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+            ],
+        )
+        .unwrap();
+        let x = solve_serial(&m, &[2.0, 7.0, 32.0]);
+        assert!((x[0] - 1.0).abs() < 1e-6);
+        assert!((x[1] - 2.0).abs() < 1e-6);
+        assert!((x[2] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig1_unit_lower_solve() {
+        // Unit diagonal, -1 off-diagonals: x_i = b_i + sum of solved deps.
+        let m = CsrMatrix::paper_fig1();
+        let b = vec![1.0f32; 10];
+        let x = solve_serial(&m, &b);
+        assert_eq!(x[0], 1.0); // source node
+        assert_eq!(x[2], 3.0); // 1 + x1 + x2 = 3
+        assert!(max_relative_residual(&m, &x, &b) < 1e-6);
+    }
+
+    #[test]
+    fn residual_detects_garbage() {
+        let m = CsrMatrix::paper_fig1();
+        let b = vec![1.0f32; 10];
+        let x = vec![0.0f32; 10];
+        assert!(max_relative_residual(&m, &x, &b) > 0.1);
+    }
+
+    #[test]
+    fn random_matrices_have_small_residual() {
+        for seed in 0..5 {
+            let m = gen::circuit(300, 5, 0.7, GenSeed(seed));
+            let b: Vec<f32> = (0..m.n).map(|i| (i % 7) as f32 - 3.0).collect();
+            let x = solve_serial(&m, &b);
+            assert!(
+                max_relative_residual(&m, &x, &b) < 1e-3,
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn f64_close_to_f32_on_well_conditioned() {
+        let m = gen::banded(200, 4, 0.8, GenSeed(1));
+        let b = vec![1.0f32; m.n];
+        let x32 = solve_serial(&m, &b);
+        let x64 = solve_serial_f64(&m, &b);
+        for i in 0..m.n {
+            assert!((x32[i] as f64 - x64[i]).abs() < 1e-3 * x64[i].abs().max(1.0));
+        }
+    }
+}

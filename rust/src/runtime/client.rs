@@ -1,0 +1,254 @@
+//! PJRT client wrapper: HLO-text loading, one compiled executable per
+//! `(batch, edge_budget)` kernel variant.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded kernel variant.
+pub struct LevelExecutable {
+    /// Rows per invocation.
+    pub batch: usize,
+    /// Padded edges per row.
+    pub edges: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A loaded multi-RHS kernel variant (`manifest_multi.txt`).
+pub struct MultiExecutable {
+    /// RHS per invocation.
+    pub rhs: usize,
+    /// Rows per invocation.
+    pub batch: usize,
+    /// Padded edges per row.
+    pub edges: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime with all kernel variants compiled and ready.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    variants: Vec<LevelExecutable>,
+    multi_variants: Vec<MultiExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load every variant listed in `<artifacts>/manifest.txt`, compiling
+    /// each HLO-text module on the PJRT CPU client.
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let manifest = artifacts.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest.display()))?;
+        let mut variants = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let name = it.next().context("manifest: file name")?;
+            let batch: usize = it.next().context("manifest: batch")?.parse()?;
+            let edges: usize = it.next().context("manifest: edges")?.parse()?;
+            let path: PathBuf = artifacts.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            variants.push(LevelExecutable { batch, edges, exe });
+        }
+        ensure!(!variants.is_empty(), "no kernel variants in manifest");
+        // Largest-batch first so selection prefers amortized dispatch.
+        variants.sort_by_key(|v| std::cmp::Reverse(v.batch));
+        // Multi-RHS variants are optional (older artifact dirs).
+        let mut multi_variants = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(artifacts.join("manifest_multi.txt")) {
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let mut it = line.split_whitespace();
+                let name = it.next().context("multi manifest: name")?;
+                let rhs: usize = it.next().context("multi manifest: rhs")?.parse()?;
+                let batch: usize = it.next().context("multi manifest: batch")?.parse()?;
+                let edges: usize = it.next().context("multi manifest: edges")?.parse()?;
+                let path = artifacts.join(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                multi_variants.push(MultiExecutable {
+                    rhs,
+                    batch,
+                    edges,
+                    exe,
+                });
+            }
+        }
+        Ok(Self {
+            client,
+            variants,
+            multi_variants,
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available `(batch, edges)` variants, largest batch first.
+    pub fn variant_shapes(&self) -> Vec<(usize, usize)> {
+        self.variants.iter().map(|v| (v.batch, v.edges)).collect()
+    }
+
+    /// Pick the best variant for a level of `rows` rows whose maximum
+    /// in-level degree is `max_deg`: the smallest batch that still fits the
+    /// degree budget, falling back to the largest-edge variant.
+    pub fn select(&self, rows: usize, max_deg: usize) -> &LevelExecutable {
+        // Prefer a variant whose edge budget covers max_deg and whose batch
+        // wastes the least padding; variants are sorted largest-batch first.
+        let fitting: Vec<&LevelExecutable> = self
+            .variants
+            .iter()
+            .filter(|v| v.edges >= max_deg)
+            .collect();
+        let pool: Vec<&LevelExecutable> = if fitting.is_empty() {
+            self.variants.iter().collect()
+        } else {
+            fitting
+        };
+        *pool
+            .iter()
+            .min_by_key(|v| {
+                let invocations = rows.div_ceil(v.batch);
+                (invocations * v.batch, v.edges)
+            })
+            .expect("at least one variant")
+    }
+
+    /// RHS widths of the compiled multi variants.
+    pub fn multi_variant_widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.multi_variants.iter().map(|v| v.rhs).collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+
+    /// The multi-RHS variant matching `rhs`, if one was compiled.
+    pub fn select_multi(&self, rhs: usize, max_deg: usize) -> Option<&MultiExecutable> {
+        self.multi_variants
+            .iter()
+            .filter(|v| v.rhs == rhs && v.edges >= max_deg)
+            .min_by_key(|v| v.batch)
+            .or_else(|| {
+                self.multi_variants
+                    .iter()
+                    .filter(|v| v.rhs == rhs)
+                    .max_by_key(|v| v.edges)
+            })
+    }
+
+    /// Execute one padded level against `rhs` right-hand sides:
+    /// `vals` is `(batch, edges)` row-major, `xg` is `(rhs, batch, edges)`,
+    /// `b` is `(rhs, batch)`, `dinv` is `(batch,)`. Returns `(rhs, batch)`
+    /// flattened.
+    pub fn execute_level_multi(
+        &self,
+        variant: &MultiExecutable,
+        vals: &[f32],
+        xg: &[f32],
+        b: &[f32],
+        dinv: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (r, bsz, esz) = (variant.rhs, variant.batch, variant.edges);
+        ensure!(vals.len() == bsz * esz, "vals shape");
+        ensure!(xg.len() == r * bsz * esz, "xg shape");
+        ensure!(b.len() == r * bsz && dinv.len() == bsz, "vector shapes");
+        let lv = xla::Literal::vec1(vals).reshape(&[bsz as i64, esz as i64])?;
+        let lx = xla::Literal::vec1(xg).reshape(&[r as i64, bsz as i64, esz as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[r as i64, bsz as i64])?;
+        let ld = xla::Literal::vec1(dinv);
+        let result = variant.exe.execute::<xla::Literal>(&[lv, lx, lb, ld])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let x = out.to_vec::<f32>()?;
+        ensure!(x.len() == r * bsz, "multi kernel output shape");
+        Ok(x)
+    }
+
+    /// Execute one padded level: flat row-major `vals`/`xg` of shape
+    /// `(batch, edges)`, `b`/`dinv` of length `batch`. Returns `x[batch]`.
+    pub fn execute_level(
+        &self,
+        variant: &LevelExecutable,
+        vals: &[f32],
+        xg: &[f32],
+        b: &[f32],
+        dinv: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (bsz, esz) = (variant.batch, variant.edges);
+        ensure!(vals.len() == bsz * esz && xg.len() == bsz * esz, "tile shape");
+        ensure!(b.len() == bsz && dinv.len() == bsz, "vector shape");
+        let lv = xla::Literal::vec1(vals).reshape(&[bsz as i64, esz as i64])?;
+        let lx = xla::Literal::vec1(xg).reshape(&[bsz as i64, esz as i64])?;
+        let lb = xla::Literal::vec1(b);
+        let ld = xla::Literal::vec1(dinv);
+        let result = variant.exe.execute::<xla::Literal>(&[lv, lx, lb, ld])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let x = out.to_vec::<f32>()?;
+        if x.len() != bsz {
+            bail!("kernel returned {} values, expected {bsz}", x.len());
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_executes_variants() {
+        let rt = match PjrtRuntime::load(&artifacts_dir()) {
+            Ok(rt) => rt,
+            Err(e) => {
+                // Artifacts are a build product; skip when absent (CI runs
+                // `make artifacts` first — the Makefile test target does).
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        for &(bsz, esz) in &rt.variant_shapes() {
+            let v = rt.select(bsz, esz);
+            assert_eq!((v.batch, v.edges), (bsz, esz));
+            // out = (b - Σ vals·xg) · dinv with vals = 0 → out = b·dinv.
+            let vals = vec![0f32; bsz * esz];
+            let xg = vec![1f32; bsz * esz];
+            let b: Vec<f32> = (0..bsz).map(|i| i as f32).collect();
+            let dinv = vec![2f32; bsz];
+            let x = rt.execute_level(v, &vals, &xg, &b, &dinv).unwrap();
+            for (i, &xi) in x.iter().enumerate() {
+                assert_eq!(xi, 2.0 * i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn select_prefers_fitting_edge_budget() {
+        let Ok(rt) = PjrtRuntime::load(&artifacts_dir()) else {
+            return;
+        };
+        // max_deg 20 does not fit the 16-edge variant.
+        let v = rt.select(10, 20);
+        assert!(v.edges >= 20 || rt.variant_shapes().iter().all(|&(_, e)| e < 20));
+    }
+}

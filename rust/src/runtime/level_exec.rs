@@ -1,0 +1,246 @@
+//! Level-wise numeric solver on the PJRT request path.
+//!
+//! Preprocesses a matrix once (levels + padded gather plans, the runtime
+//! counterpart of the python `model.plan_levels`) and then solves any RHS
+//! by dispatching one compiled kernel invocation per level chunk. Rows
+//! whose in-degree exceeds the variant's edge budget fold the overflow
+//! into a serial carry, exactly like the L2 python mirror.
+
+use super::client::PjrtRuntime;
+use crate::graph::{Dag, Levels};
+use crate::matrix::CsrMatrix;
+use anyhow::Result;
+
+/// Per-level execution plan.
+struct LevelPlan {
+    rows: Vec<u32>,
+    max_deg: usize,
+}
+
+/// A matrix prepared for repeated PJRT solves.
+pub struct LevelSolver {
+    matrix: CsrMatrix,
+    plans: Vec<LevelPlan>,
+}
+
+impl LevelSolver {
+    /// Preprocess `m` (amortized across solves, like the paper's compiler).
+    pub fn new(m: &CsrMatrix) -> Self {
+        let g = Dag::from_csr(m);
+        let lv = Levels::compute(&g);
+        let plans = (0..lv.num_levels())
+            .map(|l| {
+                let rows = lv.level(l).to_vec();
+                let max_deg = rows
+                    .iter()
+                    .map(|&i| m.in_degree(i as usize))
+                    .max()
+                    .unwrap_or(0);
+                LevelPlan { rows, max_deg }
+            })
+            .collect();
+        Self {
+            matrix: m.clone(),
+            plans,
+        }
+    }
+
+    /// Number of levels (kernel dispatch chains per solve).
+    pub fn num_levels(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Solve `L x = b` through the PJRT kernels.
+    pub fn solve(&self, rt: &PjrtRuntime, b: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.matrix;
+        assert_eq!(b.len(), m.n);
+        let mut x = vec![0f32; m.n];
+        // Reusable padded tiles (sized per selected variant below).
+        for plan in &self.plans {
+            let variant = rt.select(plan.rows.len(), plan.max_deg);
+            let (bsz, esz) = (variant.batch, variant.edges);
+            for chunk in plan.rows.chunks(bsz) {
+                let mut vals = vec![0f32; bsz * esz];
+                let mut xg = vec![0f32; bsz * esz];
+                let mut bb = vec![0f32; bsz];
+                let mut dinv = vec![1f32; bsz];
+                for (r, &i) in chunk.iter().enumerate() {
+                    let i = i as usize;
+                    let (cols, vs) = m.row_off_diag(i);
+                    let k = cols.len();
+                    let fit = k.min(esz);
+                    for e in 0..fit {
+                        vals[r * esz + e] = vs[e];
+                        xg[r * esz + e] = x[cols[e] as usize];
+                    }
+                    // Overflow edges fold into a serial carry on the host.
+                    let mut carry = 0f32;
+                    for e in fit..k {
+                        carry += vs[e] * x[cols[e] as usize];
+                    }
+                    bb[r] = b[i] - carry;
+                    dinv[r] = 1.0 / m.diag(i);
+                }
+                let out = rt.execute_level(variant, &vals, &xg, &bb, &dinv)?;
+                for (r, &i) in chunk.iter().enumerate() {
+                    x[i as usize] = out[r];
+                }
+            }
+        }
+        Ok(x)
+    }
+}
+
+impl LevelSolver {
+    /// Solve a batch of RHS in one pass, using the multi-RHS kernel when a
+    /// variant matches the batch (padding smaller batches with zeros) and
+    /// falling back to scalar solves otherwise. Dispatch and the shared
+    /// `vals` staging are amortized across the batch (EXPERIMENTS.md §Perf).
+    pub fn solve_multi(&self, rt: &PjrtRuntime, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let m = &self.matrix;
+        let r_req = bs.len();
+        if r_req == 0 {
+            return Ok(Vec::new());
+        }
+        let global_max_deg = self.plans.iter().map(|p| p.max_deg).max().unwrap_or(0);
+        let Some(probe) = rt.select_multi(pick_rhs_width(rt, r_req), global_max_deg) else {
+            // No multi variant compiled: scalar fallback.
+            return bs.iter().map(|b| self.solve(rt, b)).collect();
+        };
+        let r = probe.rhs;
+        if r_req > r {
+            // Split oversized batches.
+            let mut out = Vec::with_capacity(r_req);
+            for chunk in bs.chunks(r) {
+                out.extend(self.solve_multi(rt, chunk)?);
+            }
+            return Ok(out);
+        }
+        for b in bs {
+            anyhow::ensure!(b.len() == m.n, "rhs length");
+        }
+        let mut xs: Vec<Vec<f32>> = vec![vec![0f32; m.n]; r];
+        for plan in &self.plans {
+            let Some(variant) = rt.select_multi(r, plan.max_deg) else {
+                unreachable!("probe guaranteed a variant");
+            };
+            let (bsz, esz) = (variant.batch, variant.edges);
+            for chunk in plan.rows.chunks(bsz) {
+                let mut vals = vec![0f32; bsz * esz];
+                let mut xg = vec![0f32; r * bsz * esz];
+                let mut bb = vec![0f32; r * bsz];
+                let mut dinv = vec![1f32; bsz];
+                for (row, &i) in chunk.iter().enumerate() {
+                    let i = i as usize;
+                    let (cols, vs) = m.row_off_diag(i);
+                    let fit = cols.len().min(esz);
+                    for e in 0..fit {
+                        vals[row * esz + e] = vs[e];
+                    }
+                    dinv[row] = 1.0 / m.diag(i);
+                    for k in 0..r {
+                        let x = &xs[k];
+                        for e in 0..fit {
+                            xg[(k * bsz + row) * esz + e] = x[cols[e] as usize];
+                        }
+                        let mut carry = 0f32;
+                        for e in fit..cols.len() {
+                            carry += vs[e] * x[cols[e] as usize];
+                        }
+                        let bk = bs.get(k).map_or(0.0, |b| b[i]);
+                        bb[k * bsz + row] = bk - carry;
+                    }
+                }
+                let out = rt.execute_level_multi(variant, &vals, &xg, &bb, &dinv)?;
+                for (row, &i) in chunk.iter().enumerate() {
+                    for (k, x) in xs.iter_mut().enumerate() {
+                        x[i as usize] = out[k * bsz + row];
+                    }
+                }
+            }
+        }
+        xs.truncate(r_req);
+        Ok(xs)
+    }
+}
+
+/// The RHS width to probe for: the smallest compiled width ≥ the request,
+/// else the largest available (requests are padded/split to fit).
+fn pick_rhs_width(rt: &PjrtRuntime, want: usize) -> usize {
+    let widths: Vec<usize> = rt.multi_variant_widths();
+    widths
+        .iter()
+        .copied()
+        .filter(|&w| w >= want)
+        .min()
+        .or_else(|| widths.iter().copied().max())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::assert_close_to_reference;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        PjrtRuntime::load(&dir).ok()
+    }
+
+    #[test]
+    fn pjrt_solve_matches_reference() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for m in [
+            gen::circuit(600, 5, 0.8, GenSeed(1)),
+            gen::grid2d(20, 20, true, GenSeed(2)),
+            gen::chain(100, GenSeed(3)),
+        ] {
+            let solver = LevelSolver::new(&m);
+            let b: Vec<f32> = (0..m.n).map(|i| (i % 11) as f32 - 5.0).collect();
+            let x = solver.solve(&rt, &b).unwrap();
+            assert_close_to_reference(&m, &b, &x, 1e-3);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_scalar_path() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        if rt.multi_variant_widths().is_empty() {
+            eprintln!("skipping: no multi variants");
+            return;
+        }
+        let m = gen::circuit(500, 5, 0.8, GenSeed(21));
+        let solver = LevelSolver::new(&m);
+        // Batch sizes below, equal to, and above the compiled width (8).
+        for count in [1usize, 3, 8, 11] {
+            let bs: Vec<Vec<f32>> = (0..count)
+                .map(|k| (0..m.n).map(|i| ((i + k) % 9) as f32 - 4.0).collect())
+                .collect();
+            let xs = solver.solve_multi(&rt, &bs).unwrap();
+            assert_eq!(xs.len(), count);
+            for (b, x) in bs.iter().zip(&xs) {
+                assert_close_to_reference(&m, b, x, 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_solve_heavy_rows_use_carry() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        // Hub rows exceed every edge budget (> 32).
+        let m = gen::power_law(400, 1.1, 120, GenSeed(4));
+        let solver = LevelSolver::new(&m);
+        let b = vec![1.0f32; m.n];
+        let x = solver.solve(&rt, &b).unwrap();
+        assert_close_to_reference(&m, &b, &x, 1e-3);
+    }
+}

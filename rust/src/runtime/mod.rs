@@ -1,0 +1,12 @@
+//! PJRT numeric runtime: load the AOT-compiled JAX/Pallas level kernels
+//! from `artifacts/*.hlo.txt` and execute them on the request path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path numeric stack (see /opt/xla-example/load_hlo for
+//! the wiring pattern).
+
+pub mod client;
+pub mod level_exec;
+
+pub use client::PjrtRuntime;
+pub use level_exec::LevelSolver;

@@ -1,0 +1,467 @@
+//! The whole-accelerator cycle loop.
+//!
+//! Per-cycle ordering contract (shared with the compiler's emission mirror,
+//! see `compiler::program`):
+//!
+//! 1. operand reads observe start-of-cycle register-file state (the input
+//!    crossbar routes bank readouts and last-cycle forwards);
+//! 2. PEs execute; psum RF reads release before parks land
+//!    (read-before-write);
+//! 3. `R_vs` read releases free `x_i` addresses;
+//! 4. spill evictions free addresses;
+//! 5. output-crossbar writes land at each bank's priority-encoder address.
+
+use super::cu::CuSim;
+use super::interconnect::XiBanks;
+use crate::arch::ArchConfig;
+use crate::compiler::isa::{NopKind, PsumSrc, XiSrc};
+use crate::compiler::Program;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Activity counters measured by the simulator (inputs to the energy model
+/// and the Fig. 10 instruction breakdown).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total cycles executed.
+    pub cycles: u64,
+    /// Executed op slots.
+    pub exec: u64,
+    /// MAC ops.
+    pub macs: u64,
+    /// Final (solve) ops.
+    pub finals: u64,
+    /// Nop cycles by kind.
+    pub bnop: u64,
+    /// psum-capacity nops.
+    pub pnop: u64,
+    /// dependency nops.
+    pub dnop: u64,
+    /// load-imbalance nops.
+    pub lnop: u64,
+    /// Distinct `x_i` bank readouts (broadcast counted once).
+    pub xi_reads: u64,
+    /// `x_i` bank writes.
+    pub xi_writes: u64,
+    /// Operand consumptions served by forwarding.
+    pub forwards: u64,
+    /// psum RF reads.
+    pub psum_reads: u64,
+    /// psum RF writes (parks).
+    pub psum_writes: u64,
+    /// Data-memory writes (one per solved node).
+    pub dm_writes: u64,
+    /// Data-memory reads (spill reloads).
+    pub dm_reads: u64,
+    /// Stream-memory words consumed (L values + reciprocal diagonals).
+    pub stream_reads: u64,
+    /// RHS words consumed.
+    pub b_reads: u64,
+    /// Peak `x_i` RF occupancy across all banks.
+    pub max_xi_occupancy: usize,
+    /// Peak psum RF occupancy of any CU.
+    pub max_psum_occupancy: usize,
+}
+
+impl RunStats {
+    /// PE utilization (paper reports up to 75.3%).
+    pub fn utilization(&self, num_cus: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.exec as f64 / (self.cycles as f64 * num_cus as f64)
+    }
+
+    /// The double-entry check: simulated counts must equal the compiler's
+    /// predicted schedule statistics exactly.
+    pub fn verify_against(&self, p: &crate::compiler::SchedStats) -> Result<()> {
+        ensure!(self.cycles == p.cycles, "cycles {} != predicted {}", self.cycles, p.cycles);
+        ensure!(self.exec == p.exec, "exec {} != predicted {}", self.exec, p.exec);
+        ensure!(self.macs == p.macs, "macs {} != predicted {}", self.macs, p.macs);
+        ensure!(self.finals == p.finals, "finals {} != predicted {}", self.finals, p.finals);
+        ensure!(self.bnop == p.bnop, "bnop {} != predicted {}", self.bnop, p.bnop);
+        ensure!(self.pnop == p.pnop, "pnop {} != predicted {}", self.pnop, p.pnop);
+        ensure!(self.dnop == p.dnop, "dnop {} != predicted {}", self.dnop, p.dnop);
+        ensure!(self.lnop == p.lnop, "lnop {} != predicted {}", self.lnop, p.lnop);
+        ensure!(
+            self.forwards == p.forwards,
+            "forwards {} != predicted {}",
+            self.forwards,
+            p.forwards
+        );
+        Ok(())
+    }
+}
+
+/// Result of one simulated solve.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// The solution vector, scattered from the data-memory logs.
+    pub x: Vec<f32>,
+    /// Measured activity.
+    pub stats: RunStats,
+}
+
+impl RunResult {
+    /// Solve latency in seconds at the architecture clock.
+    pub fn seconds(&self, arch: &ArchConfig) -> f64 {
+        self.stats.cycles as f64 * arch.clock_period()
+    }
+
+    /// Throughput in GOPS for a program with `flops` binary operations.
+    pub fn gops(&self, arch: &ArchConfig, flops: u64) -> f64 {
+        flops as f64 / self.seconds(arch) / 1e9
+    }
+}
+
+/// The accelerator instance.
+#[derive(Debug)]
+pub struct Accelerator {
+    arch: ArchConfig,
+}
+
+impl Accelerator {
+    /// Build an accelerator with the given configuration.
+    pub fn new(arch: ArchConfig) -> Self {
+        Self { arch }
+    }
+
+    /// Execute a compiled program against a right-hand side.
+    pub fn run(&mut self, prog: &Program, b: &[f32]) -> Result<RunResult> {
+        ensure!(
+            prog.arch == self.arch,
+            "program compiled for a different architecture"
+        );
+        ensure!(b.len() == prog.n, "rhs length {} != n {}", b.len(), prog.n);
+        let p = prog.num_cus();
+        let cycles = prog.instrs.first().map_or(0, Vec::len);
+        for row in &prog.instrs {
+            ensure!(row.len() == cycles, "ragged instruction streams");
+        }
+        // Gather per-CU RHS FIFOs (the stream memory is compiler-reordered).
+        let b_stream: Vec<Vec<f32>> = prog
+            .solve_order
+            .iter()
+            .map(|order| order.iter().map(|&i| b[i as usize]).collect())
+            .collect();
+        let mut cus: Vec<CuSim> = (0..p)
+            .map(|_| CuSim::new(self.arch.psum_words as usize))
+            .collect();
+        let mut banks = XiBanks::new(p, self.arch.xi_words());
+        let mut stats = RunStats {
+            cycles: cycles as u64,
+            ..RunStats::default()
+        };
+
+        // Per-cycle scratch.
+        let mut x_operand: Vec<f32> = vec![0.0; p];
+        let mut pending_release: Vec<(usize, usize)> = Vec::new();
+        let mut pending_evict: Vec<(usize, usize)> = Vec::new();
+        let mut pending_write: Vec<(usize, f32)> = Vec::new();
+        let mut new_out: Vec<Option<f32>> = vec![None; p];
+
+        for t in 0..cycles {
+            banks.begin_cycle();
+            pending_release.clear();
+            pending_evict.clear();
+            pending_write.clear();
+            // --- Phase A: operand fetch (start-of-cycle state). ---
+            for cu in 0..p {
+                let ins = &prog.instrs[cu][t];
+                if ins.block || !ins.ct {
+                    continue;
+                }
+                x_operand[cu] = match ins.xi_src {
+                    XiSrc::Bank => {
+                        let v = banks
+                            .read(ins.in_sel as usize, ins.xi_raddr as usize)
+                            .with_context(|| format!("cu {cu} cycle {t}"))?;
+                        if ins.xi_release {
+                            pending_release.push((ins.in_sel as usize, ins.xi_raddr as usize));
+                        }
+                        v
+                    }
+                    XiSrc::Forward => {
+                        let src_cu = ins.in_sel as usize;
+                        stats.forwards += 1;
+                        cus[src_cu].out_solution.with_context(|| {
+                            format!("cu {cu} cycle {t}: forward from cu {src_cu} with no solution")
+                        })?
+                    }
+                    XiSrc::Dm => {
+                        let owner = ins.dm_owner as usize;
+                        let addr = ins.dm_raddr as usize;
+                        stats.dm_reads += 1;
+                        ensure!(
+                            addr < cus[owner].dm.len(),
+                            "cu {cu} cycle {t}: dm read past log ({addr})"
+                        );
+                        cus[owner].dm[addr]
+                    }
+                };
+            }
+            stats.xi_reads += banks.reads_this_cycle() as u64;
+            // --- Phase B: execute. ---
+            for cu_idx in 0..p {
+                let ins = &prog.instrs[cu_idx][t];
+                if ins.block {
+                    match ins.nop {
+                        NopKind::Bnop => stats.bnop += 1,
+                        NopKind::Pnop => stats.pnop += 1,
+                        NopKind::Dnop => stats.dnop += 1,
+                        NopKind::Lnop => stats.lnop += 1,
+                    }
+                    continue;
+                }
+                let cu = &mut cus[cu_idx];
+                let fb_old = cu.feedback;
+                // psum read releases before the park lands.
+                let psum_rf_val = if ins.psum_read {
+                    stats.psum_reads += 1;
+                    Some(cu.psum_read(ins.psum_raddr as usize)?)
+                } else {
+                    None
+                };
+                if ins.psum_write {
+                    stats.psum_writes += 1;
+                    cu.psum_park(fb_old)
+                        .with_context(|| format!("cu {cu_idx} cycle {t}"))?;
+                }
+                stats.max_psum_occupancy = stats.max_psum_occupancy.max(cu.psum_occupancy());
+                let psum_in = match ins.psum_src {
+                    PsumSrc::Feedback => fb_old,
+                    PsumSrc::Zero => 0.0,
+                    PsumSrc::ReadRf => {
+                        psum_rf_val.context("ReadRf without psum_read")?
+                    }
+                };
+                ensure!(
+                    cu.l_ptr < prog.l_stream[cu_idx].len(),
+                    "cu {cu_idx} stream underrun at cycle {t}"
+                );
+                let l = prog.l_stream[cu_idx][cu.l_ptr];
+                cu.l_ptr += 1;
+                stats.stream_reads += 1;
+                stats.exec += 1;
+                let out = if ins.ct {
+                    stats.macs += 1;
+                    CuSim::pe(true, psum_in, l, x_operand[cu_idx])
+                } else {
+                    stats.finals += 1;
+                    stats.b_reads += 1;
+                    ensure!(
+                        cu.b_ptr < b_stream[cu_idx].len(),
+                        "cu {cu_idx} rhs underrun at cycle {t}"
+                    );
+                    let bv = b_stream[cu_idx][cu.b_ptr];
+                    cu.b_ptr += 1;
+                    CuSim::pe(false, psum_in, l, bv)
+                };
+                cu.feedback = out;
+                if ins.ct {
+                    new_out[cu_idx] = None;
+                } else {
+                    new_out[cu_idx] = Some(out);
+                    if ins.dm_write {
+                        stats.dm_writes += 1;
+                        cu.dm.push(out);
+                    }
+                    if ins.xi_write {
+                        if ins.evict {
+                            pending_evict.push((ins.out_sel as usize, ins.evict_addr as usize));
+                        }
+                        pending_write.push((ins.out_sel as usize, out));
+                    }
+                }
+            }
+            // --- Phases C/D/E: releases, evictions, writes. ---
+            for &(bank, addr) in &pending_release {
+                banks.release(bank, addr);
+            }
+            for &(bank, addr) in &pending_evict {
+                banks
+                    .evict(bank, addr)
+                    .with_context(|| format!("cycle {t}"))?;
+            }
+            for &(bank, v) in &pending_write {
+                stats.xi_writes += 1;
+                banks
+                    .write(bank, v)
+                    .with_context(|| format!("cycle {t}"))?;
+            }
+            stats.max_xi_occupancy = stats.max_xi_occupancy.max(banks.occupancy());
+            // Output registers become visible to the next cycle's forwards.
+            for cu_idx in 0..p {
+                let ins = &prog.instrs[cu_idx][t];
+                if !ins.block {
+                    cus[cu_idx].out_solution = new_out[cu_idx];
+                }
+                // A blocked CU retains its previous output register — but a
+                // forward is only ever scheduled for the cycle right after
+                // the solve, so stale values are never consumed.
+            }
+        }
+        // --- Drain checks. ---
+        for (cu_idx, cu) in cus.iter().enumerate() {
+            ensure!(
+                cu.l_ptr == prog.l_stream[cu_idx].len(),
+                "cu {cu_idx}: {} stream words unconsumed",
+                prog.l_stream[cu_idx].len() - cu.l_ptr
+            );
+            ensure!(
+                cu.b_ptr == b_stream[cu_idx].len(),
+                "cu {cu_idx}: rhs words unconsumed"
+            );
+            ensure!(
+                cu.dm.len() == prog.solve_order[cu_idx].len(),
+                "cu {cu_idx}: dm log incomplete"
+            );
+        }
+        // Scatter the solution from the data-memory logs.
+        let mut x = vec![0f32; prog.n];
+        let mut written = vec![false; prog.n];
+        for (cu_idx, order) in prog.solve_order.iter().enumerate() {
+            for (k, &node) in order.iter().enumerate() {
+                ensure!(!written[node as usize], "node {node} solved twice");
+                written[node as usize] = true;
+                x[node as usize] = cus[cu_idx].dm[k];
+            }
+        }
+        if let Some(miss) = written.iter().position(|&w| !w) {
+            bail!("node {miss} never solved");
+        }
+        Ok(RunResult { x, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompilerConfig};
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::assert_close_to_reference;
+    use crate::matrix::CsrMatrix;
+
+    fn small_arch(log2_cus: u32) -> ArchConfig {
+        ArchConfig {
+            log2_cus,
+            ..ArchConfig::default()
+        }
+    }
+
+    fn roundtrip(m: &CsrMatrix, cfg: &CompilerConfig) -> RunResult {
+        let prog = compile(m, cfg).unwrap();
+        let b: Vec<f32> = (0..m.n).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let mut acc = Accelerator::new(cfg.arch);
+        let run = acc.run(&prog, &b).unwrap();
+        assert_close_to_reference(m, &b, &run.x, 1e-3);
+        run.stats.verify_against(&prog.predicted).unwrap();
+        run
+    }
+
+    #[test]
+    fn fig1_numerics_and_cycles() {
+        let cfg = CompilerConfig {
+            arch: small_arch(2),
+            ..CompilerConfig::default()
+        };
+        roundtrip(&CsrMatrix::paper_fig1(), &cfg);
+    }
+
+    #[test]
+    fn generator_suite_roundtrip() {
+        let cfg = CompilerConfig {
+            arch: small_arch(4),
+            ..CompilerConfig::default()
+        };
+        for m in [
+            gen::chain(40, GenSeed(1)),
+            gen::banded(200, 5, 0.6, GenSeed(2)),
+            gen::circuit(400, 5, 0.8, GenSeed(3)),
+            gen::grid2d(15, 15, true, GenSeed(4)),
+            gen::power_law(300, 1.2, 60, GenSeed(5)),
+        ] {
+            roundtrip(&m, &cfg);
+        }
+    }
+
+    #[test]
+    fn default_64cu_arch_roundtrip() {
+        let cfg = CompilerConfig::default();
+        roundtrip(&gen::circuit(1500, 6, 0.8, GenSeed(6)), &cfg);
+    }
+
+    #[test]
+    fn spilling_config_roundtrip() {
+        // Tiny x_i RF: forces evictions and dm reloads; numerics must hold.
+        let cfg = CompilerConfig {
+            arch: ArchConfig {
+                log2_cus: 3,
+                log2_xi_words: 2,
+                ..ArchConfig::default()
+            },
+            ..CompilerConfig::default()
+        };
+        let run = roundtrip(&gen::circuit(500, 6, 0.5, GenSeed(7)), &cfg);
+        assert!(run.stats.dm_reads > 0, "expected spill reloads");
+    }
+
+    #[test]
+    fn no_icr_no_coloring_roundtrip() {
+        let cfg = CompilerConfig {
+            arch: small_arch(4),
+            use_icr: false,
+            use_coloring: false,
+            ..CompilerConfig::default()
+        };
+        roundtrip(&gen::factor_like(300, 6, 3, GenSeed(8)), &cfg);
+    }
+
+    #[test]
+    fn no_forwarding_roundtrip() {
+        let cfg = CompilerConfig {
+            arch: small_arch(4),
+            forwarding: false,
+            ..CompilerConfig::default()
+        };
+        let run = roundtrip(&gen::banded(250, 4, 0.7, GenSeed(9)), &cfg);
+        assert_eq!(run.stats.forwards, 0);
+    }
+
+    #[test]
+    fn psum_zero_roundtrip() {
+        let cfg = CompilerConfig {
+            arch: ArchConfig {
+                log2_cus: 4,
+                psum_words: 0,
+                ..ArchConfig::default()
+            },
+            ..CompilerConfig::default()
+        };
+        let run = roundtrip(&gen::circuit(300, 5, 0.8, GenSeed(10)), &cfg);
+        assert_eq!(run.stats.psum_writes, 0);
+    }
+
+    #[test]
+    fn utilization_in_range() {
+        let cfg = CompilerConfig::default();
+        let run = roundtrip(&gen::grid2d(40, 40, true, GenSeed(11)), &cfg);
+        let u = run.stats.utilization(64);
+        assert!(u > 0.05 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn rejects_wrong_arch() {
+        let cfg = CompilerConfig::default();
+        let prog = compile(&gen::chain(10, GenSeed(12)), &cfg).unwrap();
+        let mut acc = Accelerator::new(small_arch(3));
+        assert!(acc.run(&prog, &vec![1.0; 10]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_rhs_len() {
+        let cfg = CompilerConfig::default();
+        let prog = compile(&gen::chain(10, GenSeed(13)), &cfg).unwrap();
+        let mut acc = Accelerator::new(cfg.arch);
+        assert!(acc.run(&prog, &vec![1.0; 9]).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-CU simulator state: the PE (cascaded fp multiplier + adder), the
+//! feedback DFF, the local psum register file, the stream/RHS FIFO heads
+//! and the data-memory append log (Fig. 4(b)).
+
+use anyhow::{bail, ensure, Result};
+
+/// One compute unit's architectural state.
+#[derive(Debug, Clone)]
+pub struct CuSim {
+    /// Feedback register (the psum DFF).
+    pub feedback: f32,
+    /// Output register: the value produced last cycle, and whether it was a
+    /// solution (`ct = 0`) that downstream PEs may consume by forwarding.
+    pub out_solution: Option<f32>,
+    /// psum register file (data + valid bits).
+    psum_data: Vec<f32>,
+    psum_valid: Vec<bool>,
+    /// Stream-memory FIFO head (L values and reciprocal diagonals).
+    pub l_ptr: usize,
+    /// RHS FIFO head.
+    pub b_ptr: usize,
+    /// Data-memory append log (solutions in solve order).
+    pub dm: Vec<f32>,
+}
+
+impl CuSim {
+    /// Fresh CU with a `psum_words`-entry psum RF.
+    pub fn new(psum_words: usize) -> Self {
+        Self {
+            feedback: 0.0,
+            out_solution: None,
+            psum_data: vec![0.0; psum_words],
+            psum_valid: vec![false; psum_words],
+            l_ptr: 0,
+            b_ptr: 0,
+            dm: Vec::new(),
+        }
+    }
+
+    /// Read (and release) a parked partial sum.
+    pub fn psum_read(&mut self, addr: usize) -> Result<f32> {
+        ensure!(
+            addr < self.psum_data.len() && self.psum_valid[addr],
+            "psum read of invalid address {addr}"
+        );
+        self.psum_valid[addr] = false;
+        Ok(self.psum_data[addr])
+    }
+
+    /// Park a partial sum at the priority encoder's lowest free address
+    /// (hardware auto-generates the write address — Fig. 5(c)).
+    pub fn psum_park(&mut self, value: f32) -> Result<usize> {
+        match self.psum_valid.iter().position(|v| !v) {
+            Some(a) => {
+                self.psum_data[a] = value;
+                self.psum_valid[a] = true;
+                Ok(a)
+            }
+            None => bail!("psum register file overflow"),
+        }
+    }
+
+    /// Occupied psum slots.
+    pub fn psum_occupancy(&self) -> usize {
+        self.psum_valid.iter().filter(|&&v| v).count()
+    }
+
+    /// The PE datapath (paper eq. 2): a serial fp32 multiply → add pair.
+    ///
+    /// - `ct = 1`: `psum + l * x`
+    /// - `ct = 0`: `(b − psum) * l` where `l` is the compiler-computed
+    ///   reciprocal diagonal.
+    pub fn pe(ct: bool, psum: f32, l: f32, x_or_b: f32) -> f32 {
+        if ct {
+            psum + l * x_or_b
+        } else {
+            (x_or_b - psum) * l
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_mac_mode() {
+        assert_eq!(CuSim::pe(true, 1.0, 2.0, 3.0), 7.0);
+    }
+
+    #[test]
+    fn pe_final_mode() {
+        // (b - psum) * recip = (10 - 4) * 0.5 = 3
+        assert_eq!(CuSim::pe(false, 4.0, 0.5, 10.0), 3.0);
+    }
+
+    #[test]
+    fn psum_park_resume() {
+        let mut cu = CuSim::new(2);
+        assert_eq!(cu.psum_park(1.5).unwrap(), 0);
+        assert_eq!(cu.psum_park(2.5).unwrap(), 1);
+        assert!(cu.psum_park(3.0).is_err());
+        assert_eq!(cu.psum_read(0).unwrap(), 1.5);
+        assert_eq!(cu.psum_occupancy(), 1);
+        // Freed slot is reused first (priority encoder).
+        assert_eq!(cu.psum_park(9.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn psum_invalid_read_detected() {
+        let mut cu = CuSim::new(2);
+        assert!(cu.psum_read(0).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Area/power/energy model calibrated to the paper's synthesis results
+//! (Table II: TSMC 28 nm, 64 CUs, 150 MHz).
+//!
+//! The paper reports per-component area and power at full activity. We take
+//! those numbers as coefficients and scale each component's dynamic power by
+//! the activity the simulator measured (events per CU-cycle), keeping
+//! always-on components (control, pipeline registers, instruction fetch) at
+//! unit activity. This reproduces the paper's 156 mW at full utilization by
+//! construction and yields activity-proportional energy for Table IV's
+//! GOPS/W comparison.
+
+use super::accel::RunStats;
+use crate::arch::ArchConfig;
+
+/// One row of Table II.
+#[derive(Debug, Clone, Copy)]
+pub struct Component {
+    /// Component name as printed in Table II.
+    pub name: &'static str,
+    /// Area in mm².
+    pub area_mm2: f64,
+    /// Power in mW at full activity (150 MHz, 28 nm).
+    pub power_mw: f64,
+    /// Whether the component burns its power every cycle regardless of
+    /// activity (clock tree / control / fetch).
+    pub always_on: bool,
+}
+
+/// The paper's Table II breakdown.
+pub const PAPER_TABLE2: &[Component] = &[
+    Component { name: "PEs", area_mm2: 0.07, power_mw: 16.00, always_on: false },
+    Component { name: "Fifos", area_mm2: 0.16, power_mw: 28.22, always_on: false },
+    Component { name: "Pipelining registers", area_mm2: 0.02, power_mw: 6.85, always_on: true },
+    Component { name: "Input interconnect", area_mm2: 0.04, power_mw: 9.65, always_on: false },
+    Component { name: "Output interconnect", area_mm2: 0.04, power_mw: 8.36, always_on: false },
+    Component { name: "Register file", area_mm2: 0.28, power_mw: 29.86, always_on: false },
+    Component { name: "Control units", area_mm2: 0.02, power_mw: 5.41, always_on: true },
+    Component { name: "Multiplexers", area_mm2: 0.00, power_mw: 1.85, always_on: true },
+    Component { name: "Data memory", area_mm2: 0.11, power_mw: 7.07, always_on: false },
+    Component { name: "Instruction memory", area_mm2: 0.64, power_mw: 17.09, always_on: true },
+    Component { name: "Stream memory", area_mm2: 0.72, power_mw: 25.86, always_on: false },
+];
+
+/// The energy model: Table II coefficients for a reference configuration.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    components: Vec<Component>,
+    /// CU count of the reference design the coefficients describe.
+    reference_cus: usize,
+}
+
+/// Activity-scaled power/energy estimate for one run.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    /// Average power in watts.
+    pub avg_power_w: f64,
+    /// Total energy in joules.
+    pub energy_j: f64,
+    /// Per-component average power (name, watts, activity).
+    pub per_component: Vec<(&'static str, f64, f64)>,
+    /// Total die area in mm² (static, from Table II).
+    pub area_mm2: f64,
+}
+
+impl EnergyModel {
+    /// The paper's 28 nm / 64-CU / 150 MHz design point.
+    pub fn paper_28nm() -> Self {
+        Self {
+            components: PAPER_TABLE2.to_vec(),
+            reference_cus: 64,
+        }
+    }
+
+    /// Total area of the modeled design (Table II bottom row: 2.11 mm²).
+    pub fn total_area_mm2(&self) -> f64 {
+        self.components.iter().map(|c| c.area_mm2).sum()
+    }
+
+    /// Peak power (all activities = 1; Table II bottom row: 156.21 mW).
+    pub fn peak_power_w(&self) -> f64 {
+        self.components.iter().map(|c| c.power_mw).sum::<f64>() / 1e3
+    }
+
+    /// Estimate average power and energy for a measured run.
+    pub fn estimate(&self, stats: &RunStats, arch: &ArchConfig) -> EnergyReport {
+        let p = arch.num_cus() as f64;
+        let cycles = stats.cycles.max(1) as f64;
+        let slots = cycles * p;
+        // Scale coefficients if the simulated design has a different CU
+        // count than the reference synthesis (linear in CU count; memories
+        // kept constant).
+        let cu_scale = p / self.reference_cus as f64;
+        let act = |events: u64| (events as f64 / slots).min(1.0);
+        let mut per_component = Vec::new();
+        let mut total_w = 0.0;
+        for c in &self.components {
+            let activity = if c.always_on {
+                1.0
+            } else {
+                match c.name {
+                    "PEs" => act(stats.exec),
+                    // Stream FIFOs move one word per executed op.
+                    "Fifos" | "Stream memory" => act(stats.stream_reads + stats.b_reads),
+                    // One input-crossbar traversal per consumed operand.
+                    "Input interconnect" => act(stats.macs),
+                    // One output-crossbar traversal per bank write/forward.
+                    "Output interconnect" => act(stats.xi_writes + stats.forwards),
+                    "Register file" => act(
+                        stats.xi_reads + stats.xi_writes + stats.psum_reads + stats.psum_writes,
+                    ),
+                    "Data memory" => act(stats.dm_writes + stats.dm_reads),
+                    _ => 1.0,
+                }
+            };
+            let scale = match c.name {
+                // Shared memories do not grow with CU count in our model.
+                "Data memory" | "Instruction memory" | "Stream memory" => 1.0,
+                _ => cu_scale,
+            };
+            let w = c.power_mw / 1e3 * activity * scale;
+            per_component.push((c.name, w, activity));
+            total_w += w;
+        }
+        let time_s = cycles * arch.clock_period();
+        EnergyReport {
+            avg_power_w: total_w,
+            energy_j: total_w * time_s,
+            per_component,
+            area_mm2: self.total_area_mm2(),
+        }
+    }
+}
+
+impl EnergyReport {
+    /// Energy efficiency in GOPS/W for a run that performed `flops` binary
+    /// ops over `cycles` at `arch`'s clock.
+    pub fn gops_per_watt(&self, gops: f64) -> f64 {
+        if self.avg_power_w == 0.0 {
+            return 0.0;
+        }
+        gops / self.avg_power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_totals_match_paper() {
+        let m = EnergyModel::paper_28nm();
+        assert!((m.total_area_mm2() - 2.10).abs() < 0.02, "{}", m.total_area_mm2());
+        assert!((m.peak_power_w() - 0.15622).abs() < 1e-4, "{}", m.peak_power_w());
+    }
+
+    #[test]
+    fn idle_run_burns_only_always_on() {
+        let m = EnergyModel::paper_28nm();
+        let stats = RunStats {
+            cycles: 1000,
+            ..RunStats::default()
+        };
+        let arch = ArchConfig::default();
+        let rep = m.estimate(&stats, &arch);
+        // Always-on: pipeline 6.85 + control 5.41 + mux 1.85 + imem 17.09.
+        let expect = (6.85 + 5.41 + 1.85 + 17.09) / 1e3;
+        assert!((rep.avg_power_w - expect).abs() < 1e-6, "{}", rep.avg_power_w);
+    }
+
+    #[test]
+    fn full_activity_approaches_peak() {
+        let m = EnergyModel::paper_28nm();
+        let arch = ArchConfig::default();
+        let slots = 1000 * 64;
+        let stats = RunStats {
+            cycles: 1000,
+            exec: slots,
+            macs: slots,
+            finals: 0,
+            xi_reads: slots,
+            xi_writes: slots,
+            forwards: slots,
+            stream_reads: slots,
+            b_reads: slots,
+            dm_writes: slots,
+            dm_reads: 0,
+            psum_reads: 0,
+            psum_writes: 0,
+            ..RunStats::default()
+        };
+        let rep = m.estimate(&stats, &arch);
+        assert!(
+            (rep.avg_power_w - m.peak_power_w()).abs() < 1e-9,
+            "{} vs {}",
+            rep.avg_power_w,
+            m.peak_power_w()
+        );
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let m = EnergyModel::paper_28nm();
+        let arch = ArchConfig::default();
+        let s1 = RunStats {
+            cycles: 1000,
+            ..RunStats::default()
+        };
+        let s2 = RunStats {
+            cycles: 2000,
+            ..RunStats::default()
+        };
+        let r1 = m.estimate(&s1, &arch);
+        let r2 = m.estimate(&s2, &arch);
+        assert!((r2.energy_j / r1.energy_j - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gops_per_watt_sane() {
+        let rep = EnergyReport {
+            avg_power_w: 0.156,
+            energy_j: 1e-6,
+            per_component: vec![],
+            area_mm2: 2.11,
+        };
+        let e = rep.gops_per_watt(6.5);
+        assert!((e - 41.7).abs() < 0.2, "{e}"); // Table IV: 41.4 GOPS/W
+    }
+}

@@ -1,0 +1,191 @@
+//! The banked `x_i` register file behind the input/output crossbars.
+//!
+//! Each CU owns one bank; any CU reads any bank through the input crossbar
+//! and any solving CU writes any bank through the output crossbar. Each
+//! bank has one read and one write port per cycle; same-address reads in
+//! the same cycle share the readout (broadcast). The simulator *checks*
+//! these port limits — a violation means the compiler emitted an illegal
+//! schedule.
+
+use anyhow::{bail, ensure, Result};
+
+/// One register-file bank with valid bits and a priority-encoder write port.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    data: Vec<f32>,
+    valid: Vec<bool>,
+}
+
+impl Bank {
+    /// Create an empty bank with `words` addresses.
+    pub fn new(words: usize) -> Self {
+        Self {
+            data: vec![0.0; words],
+            valid: vec![false; words],
+        }
+    }
+
+    /// Read `addr`; errors if the address is not valid.
+    pub fn read(&self, addr: usize) -> Result<f32> {
+        ensure!(self.valid[addr], "read of invalid RF address {addr}");
+        Ok(self.data[addr])
+    }
+
+    /// Release an address (idempotent within a cycle's broadcast group).
+    pub fn release(&mut self, addr: usize) {
+        self.valid[addr] = false;
+    }
+
+    /// Priority encoder: the lowest free address, if any.
+    pub fn lowest_free(&self) -> Option<usize> {
+        self.valid.iter().position(|v| !v)
+    }
+
+    /// Write through the priority encoder; errors when full.
+    pub fn write_auto(&mut self, value: f32) -> Result<usize> {
+        match self.lowest_free() {
+            Some(a) => {
+                self.data[a] = value;
+                self.valid[a] = true;
+                Ok(a)
+            }
+            None => bail!("register-file bank overflow"),
+        }
+    }
+
+    /// Number of live values (occupancy, for stats).
+    pub fn occupancy(&self) -> usize {
+        self.valid.iter().filter(|&&v| v).count()
+    }
+}
+
+/// All banks plus per-cycle port accounting.
+#[derive(Debug, Clone)]
+pub struct XiBanks {
+    banks: Vec<Bank>,
+    // Per-cycle port state, reset by `begin_cycle`.
+    read_addr: Vec<Option<usize>>,
+    wrote: Vec<bool>,
+}
+
+impl XiBanks {
+    /// `num_banks` banks of `words` addresses each.
+    pub fn new(num_banks: usize, words: usize) -> Self {
+        Self {
+            banks: (0..num_banks).map(|_| Bank::new(words)).collect(),
+            read_addr: vec![None; num_banks],
+            wrote: vec![false; num_banks],
+        }
+    }
+
+    /// Reset per-cycle port accounting.
+    pub fn begin_cycle(&mut self) {
+        self.read_addr.iter_mut().for_each(|r| *r = None);
+        self.wrote.iter_mut().for_each(|w| *w = false);
+    }
+
+    /// Read through the input crossbar, enforcing the 1-read-port limit
+    /// (same-address reads broadcast for free).
+    pub fn read(&mut self, bank: usize, addr: usize) -> Result<f32> {
+        match self.read_addr[bank] {
+            None => self.read_addr[bank] = Some(addr),
+            Some(prev) if prev == addr => {} // broadcast share
+            Some(prev) => bail!(
+                "bank {bank} read-port conflict: addresses {prev} and {addr} in one cycle"
+            ),
+        }
+        self.banks[bank].read(addr)
+    }
+
+    /// Release an address after its last read (`R_vs`).
+    pub fn release(&mut self, bank: usize, addr: usize) {
+        self.banks[bank].release(addr);
+    }
+
+    /// Evict (spill-release) an address ahead of a write.
+    pub fn evict(&mut self, bank: usize, addr: usize) -> Result<()> {
+        ensure!(
+            self.banks[bank].valid[addr],
+            "evict of already-free address {addr} in bank {bank}"
+        );
+        self.banks[bank].release(addr);
+        Ok(())
+    }
+
+    /// Write through the output crossbar, enforcing the 1-write-port limit.
+    /// Returns the priority-encoder address.
+    pub fn write(&mut self, bank: usize, value: f32) -> Result<usize> {
+        ensure!(!self.wrote[bank], "bank {bank} write-port conflict");
+        self.wrote[bank] = true;
+        self.banks[bank].write_auto(value)
+    }
+
+    /// Total live values across banks.
+    pub fn occupancy(&self) -> usize {
+        self.banks.iter().map(Bank::occupancy).sum()
+    }
+
+    /// Distinct bank readouts this cycle (for energy accounting).
+    pub fn reads_this_cycle(&self) -> usize {
+        self.read_addr.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut b = XiBanks::new(2, 4);
+        b.begin_cycle();
+        let a = b.write(0, 3.5).unwrap();
+        assert_eq!(a, 0);
+        b.begin_cycle();
+        assert_eq!(b.read(0, 0).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn priority_encoder_reuses_lowest() {
+        let mut b = Bank::new(4);
+        assert_eq!(b.write_auto(1.0).unwrap(), 0);
+        assert_eq!(b.write_auto(2.0).unwrap(), 1);
+        b.release(0);
+        assert_eq!(b.write_auto(3.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn read_port_conflict_detected() {
+        let mut b = XiBanks::new(1, 4);
+        b.begin_cycle();
+        b.write(0, 1.0).unwrap();
+        b.begin_cycle();
+        b.write(0, 2.0).unwrap();
+        b.begin_cycle();
+        assert!(b.read(0, 0).is_ok());
+        assert!(b.read(0, 0).is_ok()); // broadcast of same address
+        assert!(b.read(0, 1).is_err()); // second distinct address
+    }
+
+    #[test]
+    fn write_port_conflict_detected() {
+        let mut b = XiBanks::new(1, 4);
+        b.begin_cycle();
+        assert!(b.write(0, 1.0).is_ok());
+        assert!(b.write(0, 2.0).is_err());
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let mut b = Bank::new(2);
+        b.write_auto(1.0).unwrap();
+        b.write_auto(2.0).unwrap();
+        assert!(b.write_auto(3.0).is_err());
+    }
+
+    #[test]
+    fn invalid_read_detected() {
+        let b = Bank::new(2);
+        assert!(b.read(0).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Cycle-accurate simulator of the accelerator (paper §III.B, Fig. 4(b)).
+//!
+//! The simulator is the stand-in for the paper's SystemVerilog/VCS model
+//! (see DESIGN.md "Substitutions"). It executes a compiled [`Program`]'s
+//! instruction streams against real register files, crossbars and
+//! memories — it never sees the matrix or the DAG. Correctness is
+//! established by two independent checks:
+//!
+//! 1. **numerics**: the scattered data-memory contents must equal the
+//!    serial reference solve, and
+//! 2. **double-entry cycles**: executed-op/nop counts must equal the
+//!    compiler's prediction exactly.
+//!
+//! [`Program`]: crate::compiler::Program
+
+pub mod accel;
+pub mod cu;
+pub mod energy;
+pub mod interconnect;
+
+pub use accel::{Accelerator, RunResult, RunStats};
+pub use energy::{EnergyModel, EnergyReport};

@@ -1,0 +1,74 @@
+//! Fast non-cryptographic hasher for integer keys (the scheduler's
+//! constraint sets hash millions of u64 pairs; SipHash showed up at >10%
+//! in the compile profile — EXPERIMENTS.md §Perf).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xorshift hasher for integer keys (fibonacci hashing).
+#[derive(Default)]
+pub struct IntHasher(u64);
+
+impl Hasher for IntHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Fallback for non-integer keys: FNV-ish fold.
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.write_u64(v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        let mut x = self.0 ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 29;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 32;
+        self.0 = x;
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+}
+
+/// `BuildHasher` for [`IntHasher`].
+pub type BuildIntHasher = BuildHasherDefault<IntHasher>;
+
+/// HashSet with the fast integer hasher.
+pub type IntSet<K> = std::collections::HashSet<K, BuildIntHasher>;
+
+/// HashMap with the fast integer hasher.
+pub type IntMap<K, V> = std::collections::HashMap<K, V, BuildIntHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_behaves() {
+        let mut s: IntSet<u64> = IntSet::default();
+        for i in 0..1000u64 {
+            assert!(s.insert(i * 7));
+        }
+        for i in 0..1000u64 {
+            assert!(s.contains(&(i * 7)));
+            assert!(!s.insert(i * 7));
+        }
+        assert_eq!(s.len(), 1000);
+    }
+
+    #[test]
+    fn map_behaves() {
+        let mut m: IntMap<u32, u32> = IntMap::default();
+        m.insert(5, 1);
+        *m.entry(5).or_insert(0) += 1;
+        assert_eq!(m[&5], 2);
+    }
+}

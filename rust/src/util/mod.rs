@@ -1,0 +1,13 @@
+//! Small utilities shared across the crate: a deterministic PRNG (the image
+//! has no `rand` crate), summary statistics, timing, and table formatting.
+
+pub mod fasthash;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod timing;
+
+pub use prng::XorShift64;
+pub use stats::{coefficient_of_variation, mean, stddev};
+pub use table::Table;
+pub use timing::time_it;

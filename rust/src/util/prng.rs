@@ -1,0 +1,192 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! The offline image vendors no `rand` crate, and the benchmark generators
+//! must be reproducible across runs anyway (the bench harness regenerates the
+//! paper's figures from *named* workloads), so we use a tiny, well-known
+//! generator with an explicit seed everywhere.
+
+/// xorshift64* generator. Not cryptographic; statistically fine for workload
+/// synthesis and property-style tests.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator. A zero seed is remapped (xorshift has a zero fixed
+    /// point).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift reduction; bias is negligible for our bounds.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f64() as f32) * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Geometric-ish positive integer with mean roughly `mean` (≥ 1).
+    pub fn geometric(&mut self, mean: f64) -> usize {
+        debug_assert!(mean >= 1.0);
+        if mean <= 1.0 {
+            return 1;
+        }
+        let p = 1.0 / mean;
+        let mut k = 1usize;
+        // Cap to keep generation O(1) in expectation and bounded worst case.
+        while !self.chance(p) && k < (mean * 20.0) as usize + 8 {
+            k += 1;
+        }
+        k
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct values from `[lo, hi)` (k must be ≤ hi-lo).
+    /// O(k) expected when k ≪ range; falls back to shuffle for dense picks.
+    pub fn sample_distinct(&mut self, lo: usize, hi: usize, k: usize) -> Vec<usize> {
+        let range = hi - lo;
+        assert!(k <= range);
+        if k * 3 >= range {
+            let mut all: Vec<usize> = (lo..hi).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut picked = std::collections::BTreeSet::new();
+        while picked.len() < k {
+            picked.insert(self.range(lo, hi));
+        }
+        picked.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut a = XorShift64::new(0);
+        assert_ne!(a.next_u64(), 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift64::new(11);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_roughly_uniform() {
+        let mut r = XorShift64::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_sorted() {
+        let mut r = XorShift64::new(9);
+        for _ in 0..100 {
+            let v = r.sample_distinct(10, 50, 12);
+            assert_eq!(v.len(), 12);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(v.iter().all(|&x| (10..50).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_full_range() {
+        let mut r = XorShift64::new(2);
+        let v = r.sample_distinct(0, 5, 5);
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn geometric_mean_roughly_matches() {
+        let mut r = XorShift64::new(13);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.geometric(6.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 6.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift64::new(21);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,75 @@
+//! Timing helpers for the bench harness (criterion is not available in the
+//! offline image; benches use `harness = false` with these utilities).
+
+use std::time::{Duration, Instant};
+
+/// Run `f` once and return (result, elapsed).
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Repeatedly run `f` until `min_time` has elapsed (at least `min_iters`
+/// iterations), returning the best (minimum) per-iteration time — the usual
+/// low-noise point estimate for microbenchmarks.
+pub fn bench_best<T, F: FnMut() -> T>(mut f: F, min_iters: usize, min_time: Duration) -> Duration {
+    let mut best = Duration::MAX;
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while iters < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        std::hint::black_box(&out);
+        if dt < best {
+            best = dt;
+        }
+        iters += 1;
+        if iters > 1_000_000 {
+            break;
+        }
+    }
+    best
+}
+
+/// Format a duration human-readably (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, d) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.as_nanos() == 0); // smoke
+    }
+
+    #[test]
+    fn bench_best_runs_min_iters() {
+        let mut count = 0;
+        let _ = bench_best(|| count += 1, 5, Duration::from_millis(0));
+        assert!(count >= 5);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains(" s"));
+    }
+}

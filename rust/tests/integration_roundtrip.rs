@@ -1,0 +1,160 @@
+//! Cross-module integration: randomized compile → simulate → verify sweeps
+//! (property-style: the offline image has no proptest, so invariants are
+//! driven by a seeded in-house PRNG across many random configurations).
+
+use mgd_sptrsv::arch::ArchConfig;
+use mgd_sptrsv::compiler::{compile, AllocationPolicy, CompilerConfig};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::matrix::triangular::assert_close_to_reference;
+use mgd_sptrsv::matrix::CsrMatrix;
+use mgd_sptrsv::sim::Accelerator;
+use mgd_sptrsv::util::XorShift64;
+
+fn random_matrix(rng: &mut XorShift64) -> CsrMatrix {
+    let n = rng.range(20, 600);
+    match rng.below(6) {
+        0 => gen::chain(n, GenSeed(rng.next_u64())),
+        1 => gen::banded(n, rng.range(2, 12), 0.3 + rng.f64() * 0.6, GenSeed(rng.next_u64())),
+        2 => gen::circuit(n, rng.range(2, 8), 0.5 + rng.f64() * 0.4, GenSeed(rng.next_u64())),
+        3 => {
+            let side = ((n as f64).sqrt() as usize).max(2);
+            gen::grid2d(side, side, rng.chance(0.5), GenSeed(rng.next_u64()))
+        }
+        4 => gen::power_law(n, 1.05 + rng.f64(), rng.range(8, 64), GenSeed(rng.next_u64())),
+        _ => gen::shallow(n, rng.f64() * 0.6, GenSeed(rng.next_u64())),
+    }
+}
+
+fn random_config(rng: &mut XorShift64) -> CompilerConfig {
+    CompilerConfig {
+        arch: ArchConfig {
+            log2_cus: rng.range(1, 6) as u32,
+            log2_xi_words: rng.range(2, 7) as u32,
+            psum_words: rng.below(10) as u32,
+            ..ArchConfig::default()
+        },
+        allocation: if rng.chance(0.5) {
+            AllocationPolicy::RoundRobin
+        } else {
+            AllocationPolicy::LeastLoaded
+        },
+        use_icr: rng.chance(0.7),
+        use_coloring: rng.chance(0.7),
+        forwarding: rng.chance(0.8),
+    }
+}
+
+/// The master property: for ANY matrix and ANY architecture configuration,
+/// compile → simulate must (1) reproduce the compiler's predicted cycle
+/// counts exactly and (2) match the serial reference numerically.
+#[test]
+fn property_compile_simulate_verify() {
+    let mut rng = XorShift64::new(0xFEED);
+    for trial in 0..40 {
+        let m = random_matrix(&mut rng);
+        let cfg = random_config(&mut rng);
+        let prog = compile(&m, &cfg)
+            .unwrap_or_else(|e| panic!("trial {trial}: compile failed: {e:#}"));
+        let b: Vec<f32> = (0..m.n)
+            .map(|_| rng.f32_range(-4.0, 4.0))
+            .collect();
+        let mut acc = Accelerator::new(cfg.arch);
+        let run = acc
+            .run(&prog, &b)
+            .unwrap_or_else(|e| panic!("trial {trial}: sim failed: {e:#}"));
+        run.stats
+            .verify_against(&prog.predicted)
+            .unwrap_or_else(|e| panic!("trial {trial}: double-entry failed: {e:#}"));
+        assert_close_to_reference(&m, &b, &run.x, 2e-3);
+    }
+}
+
+/// Schedule legality across random configs: op-slot conservation and
+/// utilization bounds.
+#[test]
+fn property_op_conservation() {
+    let mut rng = XorShift64::new(0xBEEF);
+    for _ in 0..25 {
+        let m = random_matrix(&mut rng);
+        let cfg = random_config(&mut rng);
+        let prog = compile(&m, &cfg).unwrap();
+        let p = prog.predicted;
+        assert_eq!(p.macs as usize, m.off_diag_nnz());
+        assert_eq!(p.finals as usize, m.n);
+        let slots = p.cycles * cfg.arch.num_cus() as u64;
+        assert_eq!(p.exec + p.bnop + p.pnop + p.dnop + p.lnop, slots);
+        assert!(p.utilization(cfg.arch.num_cus()) <= 1.0);
+    }
+}
+
+/// The encoded instruction streams must round-trip bit-exactly.
+#[test]
+fn property_isa_roundtrip_on_real_programs() {
+    use mgd_sptrsv::compiler::isa::Instr;
+    let mut rng = XorShift64::new(0xCAFE);
+    for _ in 0..6 {
+        let m = random_matrix(&mut rng);
+        let cfg = random_config(&mut rng);
+        let prog = compile(&m, &cfg).unwrap();
+        for row in &prog.instrs {
+            for ins in row {
+                assert_eq!(Instr::decode(ins.encode()), *ins);
+            }
+        }
+    }
+}
+
+/// Multiple RHS against one program (the transient-simulation pattern).
+#[test]
+fn many_rhs_one_program() {
+    let m = gen::circuit(400, 5, 0.8, GenSeed(7));
+    let cfg = CompilerConfig::default();
+    let prog = compile(&m, &cfg).unwrap();
+    let mut acc = Accelerator::new(cfg.arch);
+    for k in 0..8 {
+        let b: Vec<f32> = (0..m.n).map(|i| ((i * k) % 17) as f32 - 8.0).collect();
+        let run = acc.run(&prog, &b).unwrap();
+        assert_close_to_reference(&m, &b, &run.x, 1e-3);
+    }
+}
+
+/// Medium-node splitting (extension): split + compile + simulate + extract.
+#[test]
+fn split_extension_end_to_end() {
+    let m = gen::power_law(500, 1.15, 150, GenSeed(9));
+    let split = mgd_sptrsv::compiler::split::split_heavy_nodes(&m, 12).unwrap();
+    assert!(split.intermediates > 0);
+    let cfg = CompilerConfig::default();
+    let prog = compile(&split.matrix, &cfg).unwrap();
+    let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32).collect();
+    let xb = split.expand_b(&b);
+    let mut acc = Accelerator::new(cfg.arch);
+    let run = acc.run(&prog, &xb).unwrap();
+    let x = split.extract_x(&run.x);
+    assert_close_to_reference(&m, &b, &x, 5e-3);
+}
+
+/// Failure injection: corrupted instruction streams must be rejected by
+/// the simulator's consistency checks, not silently produce garbage.
+#[test]
+fn corrupted_program_detected() {
+    let m = gen::banded(120, 4, 0.6, GenSeed(11));
+    let cfg = CompilerConfig::default();
+    let prog = compile(&m, &cfg).unwrap();
+    let b = vec![1.0f32; m.n];
+
+    // Flip an exec into a nop: stream underrun or drain check must fire.
+    let mut bad = prog.clone();
+    'outer: for row in bad.instrs.iter_mut() {
+        for ins in row.iter_mut() {
+            if ins.exec {
+                *ins = mgd_sptrsv::compiler::isa::Instr::nop(
+                    mgd_sptrsv::compiler::isa::NopKind::Dnop,
+                );
+                break 'outer;
+            }
+        }
+    }
+    let mut acc = Accelerator::new(cfg.arch);
+    assert!(acc.run(&bad, &b).is_err(), "corruption must be detected");
+}
