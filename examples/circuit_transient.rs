@@ -7,16 +7,17 @@
 //! 1. L3 compiles the matrix into an accelerator program, runs the
 //!    cycle-accurate simulator once, and verifies the double-entry check;
 //! 2. the solve service batches 500 time-step requests over worker threads;
-//! 3. every numeric solve runs on the AOT-compiled JAX/Pallas level kernels
-//!    through PJRT (python never runs here);
+//! 3. every numeric solve runs on the selected `SolverBackend` — the
+//!    native parallel level executor by default, or the AOT-compiled
+//!    JAX/Pallas kernels through PJRT when built with `--features pjrt`
+//!    and `make artifacts` has produced the HLO modules;
 //! 4. every 50th solution is re-verified against the serial reference.
 //!
-//! Run: `make artifacts && cargo run --release --example circuit_transient`
+//! Run: `cargo run --release --example circuit_transient`
 
 use mgd_sptrsv::coordinator::{ServiceConfig, SolveService};
 use mgd_sptrsv::matrix::gen::{self, GenSeed};
 use mgd_sptrsv::matrix::triangular::solve_serial;
-use std::path::PathBuf;
 use std::time::Instant;
 
 const STEPS: usize = 500;
@@ -30,14 +31,14 @@ fn main() -> anyhow::Result<()> {
         m.nnz(),
         m.binary_nodes()
     );
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let cfg = ServiceConfig::default();
     let t0 = Instant::now();
-    let svc = SolveService::start(&m, &artifacts, cfg)?;
+    let svc = SolveService::start(&m, cfg)?;
     println!(
-        "service up in {:.2}s: compile {:.1} ms, accel {} cycles/solve \
+        "service up in {:.2}s on the {} backend: compile {:.1} ms, accel {} cycles/solve \
          ({:.2} GOPS, {:.1}% util, {:.1} GOPS/W)",
         t0.elapsed().as_secs_f64(),
+        svc.backend_name(),
         svc.program.compile.compile_seconds * 1e3,
         svc.metrics.cycles,
         svc.metrics.gops,
@@ -117,7 +118,8 @@ fn main() -> anyhow::Result<()> {
         STEPS as f64 / wall2,
         wall / wall2,
     );
+    let backend = svc.backend_name();
     svc.shutdown();
-    println!("E2E OK: all layers composed (compiler -> sim verify -> PJRT numeric path)");
+    println!("E2E OK: all layers composed (compiler -> sim verify -> {backend} numeric path)");
     Ok(())
 }

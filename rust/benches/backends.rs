@@ -1,0 +1,18 @@
+//! `cargo bench --bench backends` — native-vs-PJRT backend comparison.
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("backends", &scale) {
+        Ok(out) => {
+            println!("==== backends (scale={scale}) ====");
+            println!("{out}");
+            println!("[backends completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("backends failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,10 +1,10 @@
 //! Microbenchmarks of the hot paths (the §Perf profiling harness):
-//! scheduler cycles/s, simulator cycles/s, full compile, and the PJRT
-//! level-kernel dispatch.
+//! scheduler cycles/s, simulator cycles/s, full compile, and the numeric
+//! level-executor dispatch (native always; PJRT when available).
 
 use mgd_sptrsv::compiler::{compile, schedule_only, CompilerConfig};
 use mgd_sptrsv::matrix::gen::{self, GenSeed};
-use mgd_sptrsv::runtime::{LevelSolver, PjrtRuntime};
+use mgd_sptrsv::runtime::{LevelSolver, NativeBackend, NativeConfig, SolverBackend};
 use mgd_sptrsv::sim::Accelerator;
 use mgd_sptrsv::util::timing::fmt_duration;
 use std::time::Instant;
@@ -51,22 +51,51 @@ fn main() {
         (run.stats.cycles * 64) as f64 / dt.as_secs_f64() / 1e6
     );
 
-    // PJRT numeric path (if artifacts are built).
-    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    match PjrtRuntime::load(&artifacts) {
-        Ok(rt) => {
-            let solver = LevelSolver::new(&m);
-            let t0 = Instant::now();
-            let x = solver.solve(&rt, &b).expect("pjrt solve");
-            let dt = t0.elapsed();
-            std::hint::black_box(&x);
-            println!(
-                "pjrt solve: {} ({} levels, {:.1} us/level)",
-                fmt_duration(dt),
-                solver.num_levels(),
-                dt.as_micros() as f64 / solver.num_levels() as f64
-            );
+    // Native numeric path (the default serve backend).
+    let solver = LevelSolver::new(&m);
+    let native = NativeBackend::new(NativeConfig::default());
+    let t0 = Instant::now();
+    let x = native.solve(&solver, &b).expect("native solve");
+    let dt = t0.elapsed();
+    std::hint::black_box(&x);
+    println!(
+        "native solve ({} threads): {} ({} levels, {:.1} us/level)",
+        native.threads(),
+        fmt_duration(dt),
+        solver.num_levels(),
+        dt.as_micros() as f64 / solver.num_levels() as f64
+    );
+    let bs: Vec<Vec<f32>> = (0..8).map(|_| b.clone()).collect();
+    let t0 = Instant::now();
+    let xs = native.solve_multi(&solver, &bs).expect("native multi");
+    let dt = t0.elapsed();
+    std::hint::black_box(&xs);
+    println!(
+        "native solve_multi x8: {} ({:.2} ms/rhs)",
+        fmt_duration(dt),
+        dt.as_secs_f64() * 1e3 / 8.0
+    );
+
+    // PJRT numeric path (feature `pjrt` + built artifacts only).
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        match mgd_sptrsv::runtime::PjrtBackend::load(&artifacts) {
+            Ok(backend) => {
+                let t0 = Instant::now();
+                let x = backend.solve(&solver, &b).expect("pjrt solve");
+                let dt = t0.elapsed();
+                std::hint::black_box(&x);
+                println!(
+                    "pjrt solve: {} ({} levels, {:.1} us/level)",
+                    fmt_duration(dt),
+                    solver.num_levels(),
+                    dt.as_micros() as f64 / solver.num_levels() as f64
+                );
+            }
+            Err(e) => println!("pjrt solve: skipped ({e:#})"),
         }
-        Err(e) => println!("pjrt solve: skipped ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt solve: skipped (built without the `pjrt` feature)");
 }

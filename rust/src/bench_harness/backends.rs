@@ -1,0 +1,149 @@
+//! Native-vs-PJRT backend comparison: per-workload solve latency on each
+//! available [`SolverBackend`], scalar and batched (the ROADMAP's
+//! multi-backend scaling angle).
+//!
+//! The native executor always reports; the PJRT column reads `n/a` unless
+//! the crate was built with `--features pjrt` *and* the AOT artifacts
+//! load. Every timed solve is first checked against the serial reference,
+//! so the table cannot quietly report a fast-but-wrong backend.
+
+use super::workloads::Workload;
+use crate::matrix::triangular::max_relative_residual;
+use crate::runtime::{LevelSolver, NativeBackend, NativeConfig, SolverBackend};
+use crate::util::timing::bench_best;
+use crate::util::Table;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Time one backend on one plan: verified solve, then best-of latency for
+/// a scalar solve and a batched `rhs`-wide solve (per-RHS).
+fn time_backend(
+    backend: &dyn SolverBackend,
+    plan: &LevelSolver,
+    w: &Workload,
+    rhs: usize,
+) -> Result<(f64, f64)> {
+    let b: Vec<f32> = (0..w.matrix.n).map(|i| (i % 7) as f32 - 3.0).collect();
+    let x = backend.solve(plan, &b)?;
+    let resid = max_relative_residual(&w.matrix, &x, &b);
+    ensure!(
+        resid < 1e-3,
+        "{} backend wrong on {} (residual {resid:.2e})",
+        backend.name(),
+        w.name
+    );
+    // A timed iteration that errors would otherwise register as a (bogus)
+    // fast latency — capture the first failure and surface it.
+    let mut err: Option<anyhow::Error> = None;
+    let scalar = bench_best(
+        || match backend.solve(plan, &b) {
+            Ok(x) => x,
+            Err(e) => {
+                err.get_or_insert(e);
+                Vec::new()
+            }
+        },
+        2,
+        Duration::from_millis(20),
+    );
+    if let Some(e) = err {
+        return Err(e.context(format!("{} timing loop failed on {}", backend.name(), w.name)));
+    }
+    let bs: Vec<Vec<f32>> = (0..rhs)
+        .map(|k| (0..w.matrix.n).map(|i| ((i + k) % 9) as f32 - 4.0).collect())
+        .collect();
+    let mut err: Option<anyhow::Error> = None;
+    let batched = bench_best(
+        || match backend.solve_multi(plan, &bs) {
+            Ok(xs) => xs,
+            Err(e) => {
+                err.get_or_insert(e);
+                Vec::new()
+            }
+        },
+        2,
+        Duration::from_millis(20),
+    );
+    if let Some(e) = err {
+        return Err(e.context(format!(
+            "{} batched timing loop failed on {}",
+            backend.name(),
+            w.name
+        )));
+    }
+    Ok((
+        scalar.as_secs_f64() * 1e3,
+        batched.as_secs_f64() * 1e3 / rhs as f64,
+    ))
+}
+
+/// Build the comparison table over `suite`, batching `rhs` RHS per
+/// multi-solve round.
+pub fn backend_compare(suite: &[Workload], rhs: usize) -> Result<Table> {
+    let native: Arc<dyn SolverBackend> = Arc::new(NativeBackend::new(NativeConfig::default()));
+    let pjrt = pjrt_backend();
+    let mut t = Table::new(vec![
+        "workload".to_string(),
+        "n".to_string(),
+        "nnz".to_string(),
+        "levels".to_string(),
+        "native ms".to_string(),
+        format!("native ms/rhs (x{rhs})"),
+        "pjrt ms".to_string(),
+        format!("pjrt ms/rhs (x{rhs})"),
+    ]);
+    for w in suite {
+        let plan = LevelSolver::new(&w.matrix);
+        let (n_scalar, n_batched) = time_backend(native.as_ref(), &plan, w, rhs)?;
+        let (p_scalar, p_batched) = match &pjrt {
+            Some(p) => {
+                let (s, b) = time_backend(p.as_ref(), &plan, w, rhs)?;
+                (format!("{s:.3}"), format!("{b:.3}"))
+            }
+            None => ("n/a".to_string(), "n/a".to_string()),
+        };
+        t.row(vec![
+            w.name.to_string(),
+            w.matrix.n.to_string(),
+            w.matrix.nnz().to_string(),
+            plan.num_levels().to_string(),
+            format!("{n_scalar:.3}"),
+            format!("{n_batched:.3}"),
+            p_scalar,
+            p_batched,
+        ]);
+    }
+    Ok(t)
+}
+
+/// The PJRT backend, when the feature is compiled in and artifacts load.
+/// Uses the crate-relative `rust/artifacts` convention shared with
+/// `client.rs` and `benches/micro.rs` so the column resolves regardless of
+/// the invocation directory.
+fn pjrt_backend() -> Option<Arc<dyn SolverBackend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(b) = crate::runtime::PjrtBackend::load(&dir) {
+            return Some(Arc::new(b));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads;
+
+    #[test]
+    fn compare_runs_on_a_small_suite() {
+        let suite = workloads::suite_small(2);
+        let t = backend_compare(&suite, 4).unwrap();
+        assert_eq!(t.len(), 2);
+        let s = t.render();
+        assert!(s.contains("native ms"));
+        assert!(s.contains("pjrt"));
+    }
+}

@@ -6,6 +6,7 @@
 //! where the crossovers fall — is the reproduction target, not absolute
 //! values from the authors' testbed.
 
+pub mod backends;
 pub mod fig10;
 pub mod fig11;
 pub mod fig9;

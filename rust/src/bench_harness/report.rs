@@ -1,7 +1,7 @@
 //! Experiment runner used by the CLI and the `cargo bench` targets: maps an
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
-use super::{fig10, fig11, fig9, tables, workloads};
+use super::{backends, fig10, fig11, fig9, tables, workloads};
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
 
@@ -28,6 +28,7 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
             let (t, rows) = fig11::compare(&sweep, &arch, 1)?;
             format!("{}\n{}", t.render(), fig11::speedup_summary(&rows).render())
         }
+        "backends" => backends::backend_compare(&suite, 8)?.render(),
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -53,6 +54,7 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig9a", "fig9bc", "fig9def", "fig10", "fig11", "fig12", "table2", "table3", "table4",
+    "backends",
 ];
 
 #[cfg(test)]

@@ -3,8 +3,8 @@
 //! ```text
 //! mgd compile  <matrix.mtx | gen:<family>:<n>:<seed>>   — compile & report
 //! mgd sim      <matrix>                                 — compile + simulate + verify
-//! mgd solve    <matrix> [--rhs ones|ramp] [--artifacts DIR]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|all> [--scale small|full]
+//! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto] [--artifacts DIR]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|all> [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
 
@@ -15,6 +15,7 @@ use crate::coordinator::{ServiceConfig, SolveService};
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
+use crate::runtime::{BackendConfig, BackendKind};
 use crate::sim::Accelerator;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
@@ -109,14 +110,27 @@ fn run_inner() -> Result<()> {
             let artifacts = flag_value(&args, "--artifacts")
                 .map(PathBuf::from)
                 .unwrap_or_else(|| PathBuf::from("artifacts"));
-            let svc = SolveService::start(&m, &artifacts, ServiceConfig::default())?;
+            let kind: BackendKind = flag_value(&args, "--backend")
+                .as_deref()
+                .unwrap_or("auto")
+                .parse()?;
+            let cfg = ServiceConfig {
+                backend: BackendConfig {
+                    kind,
+                    artifacts,
+                    ..BackendConfig::default()
+                },
+                ..ServiceConfig::default()
+            };
+            let svc = SolveService::start(&m, cfg)?;
             let b: Vec<f32> = match flag_value(&args, "--rhs").as_deref() {
                 Some("ramp") => (0..m.n).map(|i| i as f32 / m.n as f32).collect(),
                 _ => vec![1.0f32; m.n],
             };
             let resp = svc.solve(b)?;
             println!(
-                "x[0..4] = {:?}; host {:.3} ms; accel {:.3} µs ({} cycles, {:.2} GOPS, {:.1} GOPS/W)",
+                "backend {}; x[0..4] = {:?}; host {:.3} ms; accel {:.3} µs ({} cycles, {:.2} GOPS, {:.1} GOPS/W)",
+                svc.backend_name(),
                 &resp.x[..resp.x.len().min(4)],
                 resp.host_seconds * 1e3,
                 resp.metrics.accel_seconds * 1e6,
@@ -160,12 +174,13 @@ fn print_usage() {
          usage:\n\
          \x20 mgd compile <matrix>             compile & report schedule stats\n\
          \x20 mgd sim     <matrix>             compile + cycle-accurate sim + verify\n\
-         \x20 mgd solve   <matrix> [--rhs ramp] [--artifacts DIR]\n\
+         \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto] [--artifacts DIR]\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
          families: circuit banded grid powerlaw shallow chain\n\
-         experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4"
+         backend: native (default serve path), pjrt (needs --features pjrt + artifacts), auto\n\
+         experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4 backends"
     );
 }
 
@@ -194,5 +209,27 @@ mod tests {
         assert!(load_matrix("gen:nosuch:10:1").is_err());
         assert!(load_matrix("gen:circuit:10").is_err());
         assert!(load_matrix("/nonexistent/file.mtx").is_err());
+    }
+
+    #[test]
+    fn backend_flag_parses_like_the_solve_command() {
+        let args: Vec<String> = ["solve", "gen:chain:10:1", "--backend", "native"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let kind: BackendKind = flag_value(&args, "--backend")
+            .as_deref()
+            .unwrap_or("auto")
+            .parse()
+            .unwrap();
+        assert_eq!(kind, BackendKind::Native);
+        let none: Vec<String> = vec!["solve".into()];
+        let kind: BackendKind = flag_value(&none, "--backend")
+            .as_deref()
+            .unwrap_or("auto")
+            .parse()
+            .unwrap();
+        assert_eq!(kind, BackendKind::Auto);
+        assert!("gpu".parse::<BackendKind>().is_err());
     }
 }

@@ -3,13 +3,19 @@
 //! In the paper's motivating applications (transient circuit simulation,
 //! preconditioned iterative solvers) the same triangular factor is solved
 //! against a *stream* of right-hand sides. The service compiles the matrix
-//! once (accelerator program + PJRT level plan), then serves RHS requests
+//! once (accelerator program + shared level plan), then serves RHS requests
 //! from worker threads with batched dispatch:
 //!
-//! - numerics run on the PJRT executables ([`crate::runtime`]),
+//! - numerics run on the configured [`crate::runtime::SolverBackend`] —
+//!   the native parallel level executor by default, the PJRT kernels when
+//!   the `pjrt` feature is enabled and its artifacts load;
 //! - per-request accelerator metrics (cycles, energy) come from the
 //!   cycle-accurate simulator, run once per matrix — the schedule is
 //!   RHS-independent, so the cost model is shared across requests.
+//!
+//! Failures are loud: backend construction errors fail
+//! [`SolveService::start`], and per-request solver errors are replied to
+//! the requester instead of being dropped.
 
 pub mod metrics;
 pub mod service;

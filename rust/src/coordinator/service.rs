@@ -2,16 +2,22 @@
 //!
 //! Requests flow through an mpsc queue into worker threads; each worker
 //! batches up to `batch_size` requests per dequeue round to amortize
-//! dispatch overhead (the PJRT executables and level plans are shared,
+//! dispatch overhead (the solver backend and level plans are shared,
 //! read-only). Responses return through per-request channels.
+//!
+//! The numeric path is a pluggable [`SolverBackend`] chosen at startup by
+//! [`create_backend`]: native by default, PJRT when the `pjrt` feature is
+//! enabled and its artifacts load. A backend that cannot initialize fails
+//! [`SolveService::start`] immediately, and per-request solver errors are
+//! replied to the requester — workers never exit silently with requests
+//! pending.
 
 use super::metrics::SolveMetrics;
 use crate::compiler::{compile, CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
-use crate::runtime::{LevelSolver, PjrtRuntime};
+use crate::runtime::{create_backend, BackendConfig, LevelSolver, SolverBackend};
 use crate::sim::Accelerator;
 use anyhow::{Context, Result};
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -25,6 +31,8 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Max requests drained per batch round.
     pub batch_size: usize,
+    /// Numeric backend selection (native by default).
+    pub backend: BackendConfig,
 }
 
 impl Default for ServiceConfig {
@@ -33,6 +41,7 @@ impl Default for ServiceConfig {
             compiler: CompilerConfig::default(),
             workers: 2,
             batch_size: 8,
+            backend: BackendConfig::default(),
         }
     }
 }
@@ -50,7 +59,8 @@ pub struct SolveRequest {
 pub struct SolveResponse {
     /// Solution vector.
     pub x: Vec<f32>,
-    /// Host wall-clock latency of the numeric path (seconds).
+    /// Host wall-clock latency of the numeric path (seconds). May be 0.0
+    /// for tiny solves at coarse timer resolution.
     pub host_seconds: f64,
     /// Shared accelerator metrics for this matrix.
     pub metrics: SolveMetrics,
@@ -65,12 +75,26 @@ pub struct SolveService {
     /// Shared per-matrix metrics.
     pub metrics: SolveMetrics,
     served: Arc<AtomicU64>,
+    backend_name: &'static str,
 }
 
 impl SolveService {
-    /// Compile `m`, simulate once for metrics, load the PJRT runtime, and
-    /// spawn the worker pool.
-    pub fn start(m: &CsrMatrix, artifacts: &Path, cfg: ServiceConfig) -> Result<Self> {
+    /// Compile `m`, simulate once for metrics, construct the configured
+    /// backend ([`create_backend`]), and spawn the worker pool. Backend
+    /// construction failures — e.g. an explicit `pjrt` request without the
+    /// toolchain — are startup errors, not hung requests.
+    pub fn start(m: &CsrMatrix, cfg: ServiceConfig) -> Result<Self> {
+        let backend = create_backend(&cfg.backend).context("construct solver backend")?;
+        Self::start_with_backend(m, backend, cfg)
+    }
+
+    /// Like [`SolveService::start`] but with a caller-provided backend
+    /// (dependency injection for tests, benches and embedders).
+    pub fn start_with_backend(
+        m: &CsrMatrix,
+        backend: Arc<dyn SolverBackend>,
+        cfg: ServiceConfig,
+    ) -> Result<Self> {
         let program = Arc::new(compile(m, &cfg.compiler).context("compile")?);
         // One cycle-accurate run (RHS-independent schedule): double-entry
         // verification + the cost model shared by all requests.
@@ -82,8 +106,7 @@ impl SolveService {
             .context("double-entry check")?;
         let metrics = SolveMetrics::from_run(&run.stats, &cfg.compiler.arch, program.flops());
         let solver = Arc::new(LevelSolver::new(m));
-        // Validate the artifacts once on the calling thread (fail fast).
-        PjrtRuntime::load(artifacts).context("load artifacts")?;
+        let backend_name = backend.name();
         let (tx, rx) = mpsc::channel::<SolveRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let served = Arc::new(AtomicU64::new(0));
@@ -91,46 +114,42 @@ impl SolveService {
         for _ in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let solver = Arc::clone(&solver);
-            // PJRT clients are not Send/Sync (Rc-backed FFI handles), so
-            // each worker owns a private runtime with its own compiled
-            // executables.
-            let artifacts = artifacts.to_path_buf();
+            let backend = Arc::clone(&backend);
             let metrics = metrics.clone();
             let served = Arc::clone(&served);
             let batch = cfg.batch_size.max(1);
             workers.push(std::thread::spawn(move || {
-                let runtime = match PjrtRuntime::load(&artifacts) {
-                    Ok(rt) => rt,
-                    Err(_) => return, // validated above; only races can fail
-                };
                 loop {
-                // Drain up to `batch` requests in one round.
-                let mut reqs = Vec::with_capacity(batch);
-                {
-                    let guard = rx.lock().unwrap();
-                    match guard.recv() {
-                        Ok(r) => reqs.push(r),
-                        Err(_) => return, // channel closed
-                    }
-                    while reqs.len() < batch {
-                        match guard.try_recv() {
+                    // Drain up to `batch` requests in one round.
+                    let mut reqs = Vec::with_capacity(batch);
+                    {
+                        let guard = rx.lock().unwrap();
+                        match guard.recv() {
                             Ok(r) => reqs.push(r),
-                            Err(_) => break,
+                            Err(_) => return, // channel closed
+                        }
+                        while reqs.len() < batch {
+                            match guard.try_recv() {
+                                Ok(r) => reqs.push(r),
+                                Err(_) => break,
+                            }
                         }
                     }
-                }
-                    // Batched rounds go through the multi-RHS kernels,
-                    // amortizing PJRT dispatch (EXPERIMENTS.md §Perf).
+                    // Batched rounds go through the backend's multi-RHS
+                    // path, amortizing dispatch and gather staging.
                     let t0 = Instant::now();
-                    if reqs.len() > 1 {
-                        let bs: Vec<Vec<f32>> =
-                            reqs.iter().map(|r| r.b.clone()).collect();
-                        match solver.solve_multi(&runtime, &bs) {
+                    if reqs.len() > 1 && backend.supports_multi_rhs() {
+                        let count = reqs.len();
+                        // Move the RHS vectors out of the requests instead
+                        // of cloning them; replies only need the channels.
+                        let (bs, replies): (Vec<Vec<f32>>, Vec<_>) =
+                            reqs.into_iter().map(|r| (r.b, r.reply)).unzip();
+                        match backend.solve_multi(&solver, &bs) {
                             Ok(xs) => {
-                                let per = t0.elapsed().as_secs_f64() / reqs.len() as f64;
-                                for (req, x) in reqs.into_iter().zip(xs) {
+                                let per = t0.elapsed().as_secs_f64() / count as f64;
+                                for (reply, x) in replies.into_iter().zip(xs) {
                                     served.fetch_add(1, Ordering::Relaxed);
-                                    let _ = req.reply.send(Ok(SolveResponse {
+                                    let _ = reply.send(Ok(SolveResponse {
                                         x,
                                         host_seconds: per,
                                         metrics: metrics.clone(),
@@ -138,23 +157,24 @@ impl SolveService {
                                 }
                             }
                             Err(e) => {
+                                // Propagate the failure to every caller in
+                                // the round; a worker must never drop
+                                // requests on the floor.
                                 let msg = format!("{e:#}");
-                                for req in reqs {
+                                for reply in replies {
                                     served.fetch_add(1, Ordering::Relaxed);
-                                    let _ =
-                                        req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                                    let _ = reply.send(Err(anyhow::anyhow!(msg.clone())));
                                 }
                             }
                         }
                     } else {
                         for req in reqs {
                             let t0 = Instant::now();
-                            let out =
-                                solver.solve(&runtime, &req.b).map(|x| SolveResponse {
-                                    x,
-                                    host_seconds: t0.elapsed().as_secs_f64(),
-                                    metrics: metrics.clone(),
-                                });
+                            let out = backend.solve(&solver, &req.b).map(|x| SolveResponse {
+                                x,
+                                host_seconds: t0.elapsed().as_secs_f64(),
+                                metrics: metrics.clone(),
+                            });
                             served.fetch_add(1, Ordering::Relaxed);
                             let _ = req.reply.send(out);
                         }
@@ -168,6 +188,7 @@ impl SolveService {
             program,
             metrics,
             served,
+            backend_name,
         })
     }
 
@@ -191,6 +212,11 @@ impl SolveService {
     /// Requests served so far.
     pub fn served(&self) -> u64 {
         self.served.load(Ordering::Relaxed)
+    }
+
+    /// Name of the numeric backend serving requests.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
     }
 
     /// Stop the workers (drains the queue first).
@@ -217,11 +243,7 @@ mod tests {
     use crate::arch::ArchConfig;
     use crate::matrix::gen::{self, GenSeed};
     use crate::matrix::triangular::assert_close_to_reference;
-    use std::path::PathBuf;
-
-    fn artifacts() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
+    use crate::runtime::BackendKind;
 
     fn small_cfg() -> ServiceConfig {
         ServiceConfig {
@@ -234,17 +256,14 @@ mod tests {
             },
             workers: 2,
             batch_size: 4,
+            backend: BackendConfig::default(),
         }
     }
 
     #[test]
     fn serves_concurrent_requests_correctly() {
-        if !artifacts().join("manifest.txt").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let m = gen::circuit(400, 5, 0.8, GenSeed(1));
-        let svc = SolveService::start(&m, &artifacts(), small_cfg()).unwrap();
+        let svc = SolveService::start(&m, small_cfg()).unwrap();
         let mut rxs = Vec::new();
         let mut bs = Vec::new();
         for k in 0..12 {
@@ -256,19 +275,63 @@ mod tests {
             let resp = rx.recv().unwrap().unwrap();
             assert_close_to_reference(&m, &b, &resp.x, 1e-3);
             assert!(resp.metrics.gops > 0.0);
-            assert!(resp.host_seconds > 0.0);
+            // >= 0.0, not > 0.0: tiny solves can land under the host
+            // timer's resolution.
+            assert!(resp.host_seconds >= 0.0);
         }
         assert_eq!(svc.served(), 12);
         svc.shutdown();
     }
 
     #[test]
+    fn default_backend_is_native_without_pjrt_artifacts() {
+        let m = gen::banded(200, 4, 0.6, GenSeed(3));
+        let svc = SolveService::start(&m, small_cfg()).unwrap();
+        // Auto selection: PJRT artifacts are absent in a clean checkout,
+        // so the service must come up on the native executor.
+        assert_eq!(svc.backend_name(), "native");
+        let resp = svc.solve(vec![1.0f32; m.n]).unwrap();
+        assert_close_to_reference(&m, &vec![1.0f32; m.n], &resp.x, 1e-3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn explicit_pjrt_without_toolchain_fails_at_start_not_at_solve() {
+        // The seed bug: a worker whose runtime failed to load returned
+        // silently, so submitted requests hung forever. Backend
+        // construction now happens before any worker spawns.
+        let m = gen::banded(150, 4, 0.6, GenSeed(4));
+        let cfg = ServiceConfig {
+            backend: BackendConfig {
+                kind: BackendKind::Pjrt,
+                artifacts: std::path::PathBuf::from("/nonexistent/artifacts"),
+                ..BackendConfig::default()
+            },
+            ..small_cfg()
+        };
+        let err = SolveService::start(&m, cfg).err().expect("must not hang");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt") || msg.contains("PJRT"), "{msg}");
+    }
+
+    #[test]
+    fn worker_replies_with_error_on_bad_request() {
+        // A malformed RHS must produce an error reply, not a hang or a
+        // worker exit.
+        let m = gen::banded(100, 4, 0.6, GenSeed(5));
+        let svc = SolveService::start(&m, small_cfg()).unwrap();
+        let err = svc.solve(vec![1.0f32; m.n + 7]).unwrap_err();
+        assert!(format!("{err:#}").contains("rhs length"));
+        // The service keeps serving after an error round.
+        let ok = svc.solve(vec![1.0f32; m.n]).unwrap();
+        assert_close_to_reference(&m, &vec![1.0f32; m.n], &ok.x, 1e-3);
+        svc.shutdown();
+    }
+
+    #[test]
     fn metrics_match_program_prediction() {
-        if !artifacts().join("manifest.txt").exists() {
-            return;
-        }
         let m = gen::banded(300, 5, 0.6, GenSeed(2));
-        let svc = SolveService::start(&m, &artifacts(), small_cfg()).unwrap();
+        let svc = SolveService::start(&m, small_cfg()).unwrap();
         assert_eq!(svc.metrics.cycles, svc.program.predicted.cycles);
         svc.shutdown();
     }

@@ -17,12 +17,28 @@
 //!   (CUs, crossbar interconnects, software-managed memories, energy model).
 //! - [`baselines`] — coarse dataflow, fine dataflow (DPU-v2 model), CPU and
 //!   GPU comparators.
-//! - [`runtime`] — PJRT (via the `xla` crate) loader/executor for the
-//!   AOT-compiled JAX/Pallas level kernels in `artifacts/`.
+//! - [`runtime`] — the pluggable numeric serve path: a `SolverBackend`
+//!   trait over a shared level plan (`LevelSolver`), with a pure-Rust
+//!   parallel level executor (`NativeBackend`, the default) and an
+//!   optional PJRT loader/executor for the AOT-compiled JAX/Pallas level
+//!   kernels in `artifacts/` behind the `pjrt` cargo feature.
 //! - [`coordinator`] — the L3 solve service: multi-RHS batching over the
-//!   numeric runtime plus per-solve accelerator metrics.
+//!   selected backend plus per-solve accelerator metrics; backend
+//!   construction failures fail startup, solver errors are replied to the
+//!   requester.
 //! - [`bench_harness`] — regenerates every table and figure of the paper's
-//!   evaluation (see DESIGN.md §3).
+//!   evaluation (see DESIGN.md §3), plus a native-vs-PJRT backend
+//!   comparison table (`mgd bench backends`).
+//!
+//! ## Cargo features
+//!
+//! - `pjrt` (off by default): compiles the PJRT client wrapper and the
+//!   `PjrtBackend`. The default build is pure Rust — no XLA toolchain, no
+//!   prebuilt HLO artifacts, zero FFI. With the feature on, backend
+//!   selection (`BackendKind::Auto`) still falls back to native unless the
+//!   artifacts actually load, and builds without the toolchain link
+//!   against the in-tree `xla_shim` stub so `--features pjrt` always
+//!   compiles.
 //!
 //! ## Quickstart
 //!

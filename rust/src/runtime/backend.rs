@@ -1,0 +1,224 @@
+//! The pluggable numeric-backend abstraction of the serve path.
+//!
+//! A [`SolverBackend`] executes the level plans prepared once per matrix by
+//! [`LevelSolver`](super::LevelSolver) against a stream of right-hand
+//! sides. Two implementations exist:
+//!
+//! - [`NativeBackend`](super::NativeBackend) (always available): a pure-Rust
+//!   `std::thread` worker pool that chunks the rows of each level across
+//!   threads — the default request path.
+//! - `PjrtBackend` (behind the `pjrt` cargo feature): dispatches the
+//!   AOT-compiled JAX/Pallas level kernels through PJRT, one compiled
+//!   executable per `(batch, edge_budget)` variant.
+//!
+//! Backend choice is a [`BackendKind`] in [`BackendConfig`]; [`create_backend`]
+//! is the single construction point used by the coordinator, the CLI and the
+//! bench harness. Construction errors propagate — a backend that cannot
+//! initialize fails `SolveService::start` instead of hanging requests.
+
+use super::level_exec::LevelSolver;
+use super::native::{NativeBackend, NativeConfig};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// A numeric executor for prepared level plans.
+///
+/// Implementations must be shareable across the coordinator's worker
+/// threads (`Send + Sync`); per-thread state (e.g. non-`Send` FFI handles)
+/// belongs in thread-local storage inside the backend.
+pub trait SolverBackend: Send + Sync {
+    /// Short backend identifier for logs, tables and responses.
+    fn name(&self) -> &'static str;
+
+    /// True when [`SolverBackend::solve_multi`] batches more efficiently
+    /// than repeated scalar solves (capability probe used by the service's
+    /// batching loop).
+    fn supports_multi_rhs(&self) -> bool {
+        false
+    }
+
+    /// Solve `L x = b` through the prepared plan.
+    fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>>;
+
+    /// Solve a batch of RHS; the default falls back to scalar solves.
+    fn solve_multi(&self, plan: &LevelSolver, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        bs.iter().map(|b| self.solve(plan, b)).collect()
+    }
+}
+
+/// Which backend to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when the feature is enabled *and* its artifacts load, else native.
+    Auto,
+    /// The pure-Rust parallel level executor.
+    Native,
+    /// The PJRT kernel path (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "native" => Ok(Self::Native),
+            "pjrt" => Ok(Self::Pjrt),
+            other => bail!("unknown backend {other:?} (expected native|pjrt|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Backend construction options.
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    /// Which backend to construct.
+    pub kind: BackendKind,
+    /// Artifact directory for the PJRT backend (`manifest.txt` + HLO text).
+    pub artifacts: PathBuf,
+    /// Native executor tuning.
+    pub native: NativeConfig,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        Self {
+            kind: BackendKind::Auto,
+            artifacts: PathBuf::from("artifacts"),
+            native: NativeConfig::default(),
+        }
+    }
+}
+
+/// Construct the configured backend.
+///
+/// - `Native` always succeeds.
+/// - `Pjrt` errors when the crate was built without the `pjrt` feature or
+///   when the artifacts fail to load (no silent fallback: an explicit
+///   request for PJRT that cannot be served is a startup error).
+/// - `Auto` prefers PJRT when available and quietly falls back to native.
+pub fn create_backend(cfg: &BackendConfig) -> Result<Arc<dyn SolverBackend>> {
+    match cfg.kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new(cfg.native))),
+        BackendKind::Pjrt => load_pjrt(cfg),
+        BackendKind::Auto => match load_pjrt(cfg) {
+            Ok(b) => Ok(b),
+            Err(_e) => {
+                #[cfg(feature = "pjrt")]
+                eprintln!("pjrt backend unavailable ({_e:#}); falling back to native");
+                Ok(Arc::new(NativeBackend::new(cfg.native)))
+            }
+        },
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn load_pjrt(cfg: &BackendConfig) -> Result<Arc<dyn SolverBackend>> {
+    use anyhow::Context;
+    let backend = super::level_exec::PjrtBackend::load(&cfg.artifacts)
+        .with_context(|| format!("load PJRT backend from {}", cfg.artifacts.display()))?;
+    Ok(Arc::new(backend))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt(cfg: &BackendConfig) -> Result<Arc<dyn SolverBackend>> {
+    bail!(
+        "backend 'pjrt' requires a build with `--features pjrt` \
+         (artifacts dir: {})",
+        cfg.artifacts.display()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::assert_close_to_reference;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert_eq!("auto".parse::<BackendKind>().unwrap(), BackendKind::Auto);
+        assert!("cuda".parse::<BackendKind>().is_err());
+        for k in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(k.to_string().parse::<BackendKind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn native_backend_always_constructs() {
+        let cfg = BackendConfig {
+            kind: BackendKind::Native,
+            ..BackendConfig::default()
+        };
+        let b = create_backend(&cfg).unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(b.supports_multi_rhs());
+    }
+
+    #[test]
+    fn pjrt_without_toolchain_errors_explicitly() {
+        // Without the feature this is a build-flag error; with the feature
+        // (and the xla_shim stub or a missing artifacts dir) the load fails.
+        // Either way an explicit pjrt request must error, not hang.
+        let cfg = BackendConfig {
+            kind: BackendKind::Pjrt,
+            artifacts: PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        assert!(create_backend(&cfg).is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_to_a_working_backend() {
+        let cfg = BackendConfig {
+            artifacts: PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        let backend = create_backend(&cfg).unwrap();
+        let m = gen::circuit(300, 4, 0.8, GenSeed(9));
+        let plan = LevelSolver::new(&m);
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let x = backend.solve(&plan, &b).unwrap();
+        assert_close_to_reference(&m, &b, &x, 1e-3);
+    }
+
+    #[test]
+    fn default_solve_multi_matches_scalar_path() {
+        struct ScalarOnly;
+        impl SolverBackend for ScalarOnly {
+            fn name(&self) -> &'static str {
+                "scalar-only"
+            }
+            fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
+                Ok(crate::matrix::triangular::solve_serial(plan.matrix(), b))
+            }
+        }
+        let m = gen::banded(200, 4, 0.6, GenSeed(3));
+        let plan = LevelSolver::new(&m);
+        let bs: Vec<Vec<f32>> = (0..3)
+            .map(|k| (0..m.n).map(|i| ((i + k) % 7) as f32).collect())
+            .collect();
+        let backend = ScalarOnly;
+        assert!(!backend.supports_multi_rhs());
+        let xs = backend.solve_multi(&plan, &bs).unwrap();
+        assert_eq!(xs.len(), 3);
+        for (b, x) in bs.iter().zip(&xs) {
+            assert_close_to_reference(&m, b, x, 1e-3);
+        }
+    }
+}

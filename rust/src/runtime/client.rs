@@ -1,5 +1,14 @@
 //! PJRT client wrapper: HLO-text loading, one compiled executable per
-//! `(batch, edge_budget)` kernel variant.
+//! `(batch, edge_budget)` kernel variant. Compiled only with the `pjrt`
+//! cargo feature.
+//!
+//! Offline builds link against [`crate::runtime::xla_shim`], whose
+//! constructors fail cleanly (backend selection then falls back to the
+//! native executor). On a machine with the XLA toolchain, depend on the
+//! real `xla` crate and drop the alias import below — the call surface is
+//! identical.
+
+use crate::runtime::xla_shim as xla;
 
 use anyhow::{bail, ensure, Context, Result};
 use std::path::{Path, PathBuf};

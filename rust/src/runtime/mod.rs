@@ -1,12 +1,35 @@
-//! PJRT numeric runtime: load the AOT-compiled JAX/Pallas level kernels
-//! from `artifacts/*.hlo.txt` and execute them on the request path.
+//! Numeric runtime of the request path: pluggable solver backends over a
+//! shared level plan.
 //!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire request-path numeric stack (see /opt/xla-example/load_hlo for
-//! the wiring pattern).
+//! [`LevelSolver`] preprocesses a matrix once (level sets, per-level
+//! max-degree, gather layout); a [`SolverBackend`] then executes the plan
+//! for each right-hand side:
+//!
+//! - [`NativeBackend`] — the default: a pure-Rust `std::thread` worker
+//!   pool that chunks the rows of each level across threads. No FFI, no
+//!   build artifacts; this is what a clean `cargo build` serves with.
+//! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled
+//!   JAX/Pallas level kernels from `artifacts/*.hlo.txt` and executes
+//!   them through PJRT. Python runs only at build time (`make
+//!   artifacts`). Selected by [`BackendKind::Auto`] only when the feature
+//!   is on *and* the artifacts load.
+//!
+//! Construct backends through [`create_backend`]; the coordinator, CLI
+//! (`--backend native|pjrt|auto`) and bench harness all route through it.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod level_exec;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub(crate) mod xla_shim;
 
+pub use backend::{create_backend, BackendConfig, BackendKind, SolverBackend};
+pub use level_exec::{LevelPlan, LevelSolver};
+pub use native::{NativeBackend, NativeConfig, NativeStats};
+
+#[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
-pub use level_exec::LevelSolver;
+#[cfg(feature = "pjrt")]
+pub use level_exec::PjrtBackend;

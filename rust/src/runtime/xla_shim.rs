@@ -1,0 +1,124 @@
+//! API-surface shim for the `xla` crate (PJRT bindings), used to compile
+//! the `pjrt` feature on machines without the XLA toolchain.
+//!
+//! The signatures mirror the subset of `xla-rs` that [`super::client`]
+//! calls. Every constructor fails with [`Error::Unavailable`], so a
+//! `pjrt`-feature build still links and runs — backend selection simply
+//! falls back to the native executor when [`PjRtClient::cpu`] errors.
+//!
+//! On a machine with the real toolchain, replace this module with the
+//! actual `xla` crate (add the dependency and drop the
+//! `use crate::runtime::xla_shim as xla;` alias in `client.rs`); no other
+//! code changes are needed.
+
+#![allow(dead_code)] // stub types are placeholders for the real crate's ABI
+
+use std::fmt;
+
+/// Error type matching the `xla` crate's role in `Result` signatures.
+#[derive(Debug)]
+pub enum Error {
+    /// The XLA/PJRT toolchain is not linked into this build.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: XLA/PJRT toolchain not linked (stub `xla_shim` build; \
+                 swap in the real `xla` crate to enable the pjrt backend)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// A PJRT device client (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The CPU client. Always fails in the shim build.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// A compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (stub: never constructed).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// An HLO module parsed from text.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
