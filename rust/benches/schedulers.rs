@@ -1,0 +1,19 @@
+//! `cargo bench --bench schedulers` — level-barrier vs barrier-free MGD
+//! native scheduler comparison (emits BENCH_schedulers.json).
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("schedulers", &scale) {
+        Ok(out) => {
+            println!("==== schedulers (scale={scale}) ====");
+            println!("{out}");
+            println!("[schedulers completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("schedulers failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

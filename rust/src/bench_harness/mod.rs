@@ -11,6 +11,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig9;
 pub mod report;
+pub mod schedulers;
 pub mod tables;
 pub mod workloads;
 

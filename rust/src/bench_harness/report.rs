@@ -1,7 +1,7 @@
 //! Experiment runner used by the CLI and the `cargo bench` targets: maps an
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
-use super::{backends, fig10, fig11, fig9, tables, workloads};
+use super::{backends, fig10, fig11, fig9, schedulers, tables, workloads};
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
 
@@ -29,6 +29,20 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
             format!("{}\n{}", t.render(), fig11::speedup_summary(&rows).render())
         }
         "backends" => backends::backend_compare(&suite, 8)?.render(),
+        "schedulers" => {
+            let sched_suite = workloads::scheduler_suite(scale);
+            let rhs = 8;
+            let (t, rows) = schedulers::scheduler_compare(&sched_suite, rhs)?;
+            let json_path = std::path::Path::new("BENCH_schedulers.json");
+            schedulers::write_json(json_path, &rows, rhs)?;
+            format!(
+                "{}\ndeep/narrow geomean speedup (mgd over level): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                schedulers::deep_geomean_speedup(&rows),
+                json_path.display(),
+            )
+        }
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -53,8 +67,17 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
 
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: &[&str] = &[
-    "fig9a", "fig9bc", "fig9def", "fig10", "fig11", "fig12", "table2", "table3", "table4",
+    "fig9a",
+    "fig9bc",
+    "fig9def",
+    "fig10",
+    "fig11",
+    "fig12",
+    "table2",
+    "table3",
+    "table4",
     "backends",
+    "schedulers",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,305 @@
+//! Level-barrier vs barrier-free MGD scheduler comparison
+//! (`mgd bench schedulers`): per-workload solve latency of the native
+//! backend under both schedulers, scalar and batched, plus a
+//! machine-readable `BENCH_schedulers.json` artifact.
+//!
+//! Every timed configuration is verified first — the level scheduler
+//! against the serial-reference residual, the MGD scheduler **bitwise**
+//! against [`solve_serial`] (its contract) — so the table cannot quietly
+//! report a fast-but-wrong scheduler.
+
+use super::workloads::Workload;
+use crate::matrix::triangular::{max_relative_residual, solve_serial};
+use crate::runtime::{LevelSolver, NativeBackend, NativeConfig, SchedulerKind, SolverBackend};
+use crate::util::timing::bench_best;
+use crate::util::Table;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// One workload's measurements (milliseconds; `*_rhs` are per-RHS over a
+/// batched solve).
+#[derive(Debug, Clone)]
+pub struct SchedRow {
+    /// Workload name.
+    pub name: &'static str,
+    /// Matrix order.
+    pub n: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Level count (barriers per level-scheduler solve).
+    pub levels: usize,
+    /// Scalar solve, level scheduler.
+    pub level_ms: f64,
+    /// Scalar solve, MGD scheduler.
+    pub mgd_ms: f64,
+    /// Per-RHS batched solve, level scheduler.
+    pub level_ms_rhs: f64,
+    /// Per-RHS batched solve, MGD scheduler.
+    pub mgd_ms_rhs: f64,
+}
+
+impl SchedRow {
+    /// Scalar speedup of MGD over the level scheduler (> 1 = MGD wins).
+    pub fn speedup(&self) -> f64 {
+        self.level_ms / self.mgd_ms.max(1e-12)
+    }
+
+    /// Batched per-RHS speedup of MGD over the level scheduler.
+    pub fn batched_speedup(&self) -> f64 {
+        self.level_ms_rhs / self.mgd_ms_rhs.max(1e-12)
+    }
+
+    /// Deep/narrow workloads are the paper's target regime; the rest are
+    /// wide controls.
+    pub fn is_deep(&self) -> bool {
+        self.name.starts_with("deep_") || self.name.starts_with("narrow_")
+    }
+}
+
+fn time_scheduler(
+    backend: &NativeBackend,
+    plan: &LevelSolver,
+    w: &Workload,
+    rhs: usize,
+) -> Result<(f64, f64)> {
+    let b: Vec<f32> = (0..w.matrix.n).map(|i| (i % 7) as f32 - 3.0).collect();
+    let x = backend.solve(plan, &b)?;
+    match backend.resolve_scheduler(plan) {
+        SchedulerKind::Mgd => {
+            // The MGD contract is bitwise equality with the serial
+            // reference, independent of thread count and steal order.
+            let want = solve_serial(&w.matrix, &b);
+            for i in 0..w.matrix.n {
+                ensure!(
+                    x[i].to_bits() == want[i].to_bits(),
+                    "mgd scheduler not bitwise-serial on {} row {i}: {} vs {}",
+                    w.name,
+                    x[i],
+                    want[i],
+                );
+            }
+        }
+        _ => {
+            let resid = max_relative_residual(&w.matrix, &x, &b);
+            ensure!(
+                resid < 1e-3,
+                "level scheduler wrong on {} (residual {resid:.2e})",
+                w.name
+            );
+        }
+    }
+    let mut err: Option<anyhow::Error> = None;
+    let scalar = bench_best(
+        || match backend.solve(plan, &b) {
+            Ok(x) => x,
+            Err(e) => {
+                err.get_or_insert(e);
+                Vec::new()
+            }
+        },
+        2,
+        Duration::from_millis(20),
+    );
+    if let Some(e) = err {
+        return Err(e.context(format!("scalar timing loop failed on {}", w.name)));
+    }
+    let bs: Vec<Vec<f32>> = (0..rhs)
+        .map(|k| (0..w.matrix.n).map(|i| ((i + k) % 9) as f32 - 4.0).collect())
+        .collect();
+    let mut err: Option<anyhow::Error> = None;
+    let batched = bench_best(
+        || match backend.solve_multi(plan, &bs) {
+            Ok(xs) => xs,
+            Err(e) => {
+                err.get_or_insert(e);
+                Vec::new()
+            }
+        },
+        2,
+        Duration::from_millis(20),
+    );
+    if let Some(e) = err {
+        return Err(e.context(format!("batched timing loop failed on {}", w.name)));
+    }
+    Ok((
+        scalar.as_secs_f64() * 1e3,
+        batched.as_secs_f64() * 1e3 / rhs as f64,
+    ))
+}
+
+/// Compare both native schedulers over `suite`, batching `rhs` RHS per
+/// multi-solve round.
+pub fn scheduler_compare(suite: &[Workload], rhs: usize) -> Result<(Table, Vec<SchedRow>)> {
+    let mk = |scheduler| {
+        NativeBackend::new(NativeConfig {
+            scheduler,
+            ..NativeConfig::default()
+        })
+    };
+    let level = mk(SchedulerKind::Level);
+    let mgd = mk(SchedulerKind::Mgd);
+    let mut t = Table::new(vec![
+        "workload".to_string(),
+        "n".to_string(),
+        "nnz".to_string(),
+        "levels".to_string(),
+        "level ms".to_string(),
+        "mgd ms".to_string(),
+        "speedup".to_string(),
+        format!("level ms/rhs (x{rhs})"),
+        format!("mgd ms/rhs (x{rhs})"),
+        "batched speedup".to_string(),
+    ]);
+    let mut rows = Vec::with_capacity(suite.len());
+    for w in suite {
+        let plan = LevelSolver::new(&w.matrix);
+        let (level_ms, level_ms_rhs) = time_scheduler(&level, &plan, w, rhs)?;
+        let (mgd_ms, mgd_ms_rhs) = time_scheduler(&mgd, &plan, w, rhs)?;
+        let row = SchedRow {
+            name: w.name,
+            n: w.matrix.n,
+            nnz: w.matrix.nnz(),
+            levels: plan.num_levels(),
+            level_ms,
+            mgd_ms,
+            level_ms_rhs,
+            mgd_ms_rhs,
+        };
+        t.row(vec![
+            row.name.to_string(),
+            row.n.to_string(),
+            row.nnz.to_string(),
+            row.levels.to_string(),
+            format!("{level_ms:.3}"),
+            format!("{mgd_ms:.3}"),
+            format!("{:.2}x", row.speedup()),
+            format!("{level_ms_rhs:.3}"),
+            format!("{mgd_ms_rhs:.3}"),
+            format!("{:.2}x", row.batched_speedup()),
+        ]);
+        rows.push(row);
+    }
+    Ok((t, rows))
+}
+
+/// Geometric-mean MGD speedup over the deep/narrow rows (the paper's
+/// target regime), scalar path.
+pub fn deep_geomean_speedup(rows: &[SchedRow]) -> f64 {
+    let deep: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.is_deep())
+        .map(|r| r.speedup())
+        .collect();
+    if deep.is_empty() {
+        return 1.0;
+    }
+    (deep.iter().map(|s| s.ln()).sum::<f64>() / deep.len() as f64).exp()
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[SchedRow], rhs: usize) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"schedulers\",\n");
+    out.push_str(&format!("  \"rhs_batch\": {rhs},\n"));
+    out.push_str(&format!(
+        "  \"deep_geomean_speedup\": {:.4},\n  \"rows\": [\n",
+        deep_geomean_speedup(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"n\": {}, \"nnz\": {}, \"levels\": {}, \
+             \"deep\": {}, \"level_ms\": {:.6}, \"mgd_ms\": {:.6}, \"speedup\": {:.4}, \
+             \"level_ms_per_rhs\": {:.6}, \"mgd_ms_per_rhs\": {:.6}, \
+             \"batched_speedup\": {:.4}}}{}\n",
+            r.name,
+            r.n,
+            r.nnz,
+            r.levels,
+            r.is_deep(),
+            r.level_ms,
+            r.mgd_ms,
+            r.speedup(),
+            r.level_ms_rhs,
+            r.mgd_ms_rhs,
+            r.batched_speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_schedulers.json`).
+pub fn write_json(path: &Path, rows: &[SchedRow], rhs: usize) -> Result<()> {
+    std::fs::write(path, render_json(rows, rhs))
+        .with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::workloads;
+    use crate::matrix::gen::{self, GenSeed};
+
+    fn tiny_suite() -> Vec<Workload> {
+        vec![
+            Workload {
+                name: "deep_chain",
+                matrix: gen::chain(400, GenSeed(41)),
+            },
+            Workload {
+                name: "wide_shallow",
+                matrix: gen::shallow(600, 0.4, GenSeed(42)),
+            },
+        ]
+    }
+
+    #[test]
+    fn compare_runs_and_verifies_both_schedulers() {
+        let (t, rows) = scheduler_compare(&tiny_suite(), 3).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("level ms"));
+        assert!(s.contains("mgd ms"));
+        assert!(rows[0].is_deep());
+        assert!(!rows[1].is_deep());
+        for r in &rows {
+            assert!(r.level_ms > 0.0 && r.mgd_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let (_, rows) = scheduler_compare(&tiny_suite(), 2).unwrap();
+        let j = render_json(&rows, 2);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"schedulers\""));
+        assert!(j.contains("\"workload\": \"deep_chain\""));
+        assert!(j.contains("\"deep_geomean_speedup\""));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn scheduler_suite_shapes_are_as_labeled() {
+        let suite = workloads::scheduler_suite("small");
+        assert_eq!(suite.len(), 6);
+        let avg_width = |w: &Workload| {
+            let plan = crate::runtime::LevelSolver::new(&w.matrix);
+            w.matrix.n / plan.num_levels().max(1)
+        };
+        for w in &suite {
+            w.matrix.validate().unwrap();
+        }
+        // Guaranteed-by-construction shapes: the chain is width 1, the
+        // tight band is chained at least every 3 rows, and shallow's
+        // deps-from-the-first-quarter rule bounds its depth at ~log4(n).
+        let by_name = |name: &str| suite.iter().find(|w| w.name == name).unwrap();
+        assert_eq!(avg_width(by_name("deep_chain")), 1);
+        assert!(avg_width(by_name("narrow_band")) <= 4);
+        assert!(avg_width(by_name("wide_shallow")) >= 32);
+        assert!(avg_width(by_name("wide_scatter")) >= 32);
+    }
+}

@@ -79,6 +79,30 @@ pub fn suite_small(k: usize) -> Vec<Workload> {
     s
 }
 
+/// Scheduler-comparison workloads (`mgd bench schedulers`): deep/narrow
+/// DAG shapes where per-level barriers dominate the level scheduler —
+/// the regime the paper's medium-granularity dataflow targets — plus
+/// wide controls where barriers amortize and the level path is at its
+/// best. `scale` ∈ {"small", "full"} sizes the matrices.
+pub fn scheduler_suite(scale: &str) -> Vec<Workload> {
+    let f = if scale == "small" { 1 } else { 4 };
+    let mk = |name, matrix| Workload { name, matrix };
+    vec![
+        // ~n levels of width 1: the worst case for one-barrier-per-level.
+        mk("deep_chain", gen::chain(30_000 * f, GenSeed(201))),
+        // High-locality circuit: thousands of levels a few rows wide.
+        mk("deep_circuit", gen::circuit(20_000 * f, 3, 0.95, GenSeed(202))),
+        // Tight band: a long dependency ladder, width ≈ bandwidth.
+        mk("narrow_band", gen::banded(20_000 * f, 3, 0.9, GenSeed(203))),
+        // 2-D wavefront: level width grows then shrinks along the sweep.
+        mk("grid_wavefront", gen::grid2d(100 * f, 100 * f, true, GenSeed(204))),
+        // Few huge levels: the level scheduler's best case (control).
+        mk("wide_shallow", gen::shallow(30_000 * f, 0.4, GenSeed(205))),
+        // Denser scattered deps, still log-depth: a second wide control.
+        mk("wide_scatter", gen::shallow(20_000 * f, 0.7, GenSeed(206))),
+    ]
+}
+
 /// The 245-benchmark sweep of Fig. 12: node counts from 19 to ~85k across
 /// all generator families. Returns (name, matrix) pairs ordered by binary
 /// node count like the paper's x-axis.

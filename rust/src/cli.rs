@@ -3,8 +3,10 @@
 //! ```text
 //! mgd compile  <matrix.mtx | gen:<family>:<n>:<seed>>   — compile & report
 //! mgd sim      <matrix>                                 — compile + simulate + verify
-//! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto] [--artifacts DIR]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|all> [--scale small|full]
+//! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto]
+//!                        [--scheduler level|mgd|auto] [--artifacts DIR]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|all>
+//!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
 
@@ -15,7 +17,7 @@ use crate::coordinator::{ServiceConfig, SolveService};
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
-use crate::runtime::{BackendConfig, BackendKind};
+use crate::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
 use crate::sim::Accelerator;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
@@ -114,11 +116,18 @@ fn run_inner() -> Result<()> {
                 .as_deref()
                 .unwrap_or("auto")
                 .parse()?;
+            let scheduler: SchedulerKind = flag_value(&args, "--scheduler")
+                .as_deref()
+                .unwrap_or("auto")
+                .parse()?;
             let cfg = ServiceConfig {
                 backend: BackendConfig {
                     kind,
                     artifacts,
-                    ..BackendConfig::default()
+                    native: NativeConfig {
+                        scheduler,
+                        ..NativeConfig::default()
+                    },
                 },
                 ..ServiceConfig::default()
             };
@@ -174,13 +183,17 @@ fn print_usage() {
          usage:\n\
          \x20 mgd compile <matrix>             compile & report schedule stats\n\
          \x20 mgd sim     <matrix>             compile + cycle-accurate sim + verify\n\
-         \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto] [--artifacts DIR]\n\
+         \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
          families: circuit banded grid powerlaw shallow chain\n\
          backend: native (default serve path), pjrt (needs --features pjrt + artifacts), auto\n\
-         experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4 backends"
+         scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
+         \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
+         experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
+         \x20 backends schedulers"
     );
 }
 
@@ -209,6 +222,28 @@ mod tests {
         assert!(load_matrix("gen:nosuch:10:1").is_err());
         assert!(load_matrix("gen:circuit:10").is_err());
         assert!(load_matrix("/nonexistent/file.mtx").is_err());
+    }
+
+    #[test]
+    fn scheduler_flag_parses_like_the_solve_command() {
+        let args: Vec<String> = ["solve", "gen:chain:10:1", "--scheduler", "mgd"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let scheduler: SchedulerKind = flag_value(&args, "--scheduler")
+            .as_deref()
+            .unwrap_or("auto")
+            .parse()
+            .unwrap();
+        assert_eq!(scheduler, SchedulerKind::Mgd);
+        let none: Vec<String> = vec!["solve".into()];
+        let scheduler: SchedulerKind = flag_value(&none, "--scheduler")
+            .as_deref()
+            .unwrap_or("auto")
+            .parse()
+            .unwrap();
+        assert_eq!(scheduler, SchedulerKind::Auto);
+        assert!("coarse".parse::<SchedulerKind>().is_err());
     }
 
     #[test]

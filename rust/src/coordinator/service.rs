@@ -284,6 +284,45 @@ mod tests {
     }
 
     #[test]
+    fn serves_through_the_mgd_scheduler() {
+        use crate::runtime::{NativeConfig, SchedulerKind};
+        // A deep matrix served with the barrier-free scheduler pinned:
+        // requests flow through `MgdPlan`/`mgd_exec` end to end.
+        let m = gen::banded(600, 3, 0.9, GenSeed(6));
+        let cfg = ServiceConfig {
+            backend: BackendConfig {
+                kind: BackendKind::Native,
+                native: NativeConfig {
+                    threads: 4,
+                    scheduler: SchedulerKind::Mgd,
+                    ..NativeConfig::default()
+                },
+                ..BackendConfig::default()
+            },
+            ..small_cfg()
+        };
+        let svc = SolveService::start(&m, cfg).unwrap();
+        assert_eq!(svc.backend_name(), "native");
+        let mut rxs = Vec::new();
+        let mut bs = Vec::new();
+        for k in 0..6 {
+            let b: Vec<f32> = (0..m.n).map(|i| ((i + 2 * k) % 5) as f32 - 2.0).collect();
+            rxs.push(svc.submit(b.clone()).unwrap());
+            bs.push(b);
+        }
+        for (rx, b) in rxs.into_iter().zip(bs) {
+            let resp = rx.recv().unwrap().unwrap();
+            // The MGD scheduler's contract is bitwise-serial numerics.
+            let want = crate::matrix::triangular::solve_serial(&m, &b);
+            for i in 0..m.n {
+                assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+            }
+        }
+        assert_eq!(svc.served(), 6);
+        svc.shutdown();
+    }
+
+    #[test]
     fn default_backend_is_native_without_pjrt_artifacts() {
         let m = gen::banded(200, 4, 0.6, GenSeed(3));
         let svc = SolveService::start(&m, small_cfg()).unwrap();

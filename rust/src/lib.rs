@@ -18,17 +18,27 @@
 //! - [`baselines`] — coarse dataflow, fine dataflow (DPU-v2 model), CPU and
 //!   GPU comparators.
 //! - [`runtime`] — the pluggable numeric serve path: a `SolverBackend`
-//!   trait over a shared level plan (`LevelSolver`), with a pure-Rust
-//!   parallel level executor (`NativeBackend`, the default) and an
-//!   optional PJRT loader/executor for the AOT-compiled JAX/Pallas level
-//!   kernels in `artifacts/` behind the `pjrt` cargo feature.
+//!   trait over a shared plan (`LevelSolver`, which also carries a cached
+//!   medium-granularity `MgdPlan`). The default `NativeBackend` is pure
+//!   Rust with a scheduler seam (`--scheduler level|mgd|auto`): the
+//!   barriered *level* executor is retained as the simple/reference
+//!   scheduler, while the *mgd* scheduler runs the paper's
+//!   medium-granularity dataflow at serve time — barrier-free node
+//!   scheduling with work-stealing deques, atomic dependency counters
+//!   (Release/Acquire protocol in `runtime/atomics.md`), node-local
+//!   partial sums and ICR-ordered gathers — bitwise-identical to the
+//!   serial reference at any thread count; `auto` picks per matrix from
+//!   level-width statistics. An optional PJRT loader/executor for the
+//!   AOT-compiled JAX/Pallas level kernels in `artifacts/` sits behind
+//!   the `pjrt` cargo feature.
 //! - [`coordinator`] — the L3 solve service: multi-RHS batching over the
 //!   selected backend plus per-solve accelerator metrics; backend
 //!   construction failures fail startup, solver errors are replied to the
 //!   requester.
 //! - [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md §3), plus a native-vs-PJRT backend
-//!   comparison table (`mgd bench backends`).
+//!   comparison table (`mgd bench backends`) and a level-vs-mgd scheduler
+//!   comparison (`mgd bench schedulers`, emits `BENCH_schedulers.json`).
 //!
 //! ## Cargo features
 //!

@@ -233,6 +233,25 @@ pub fn factor_like(n: usize, bw: usize, fringe: usize, seed: GenSeed) -> CsrMatr
     realize(n, pattern, &mut rng)
 }
 
+/// One small matrix per generator family with fixed seeds — the shared
+/// coverage suite used by the runtime/executor property tests (one
+/// definition so "all generators" means the same thing everywhere).
+/// The `power_law` entry's hubs exceed the default 32-edge budget, which
+/// several tests rely on to exercise overflow/hub paths.
+#[cfg(test)]
+pub fn test_suite() -> Vec<(&'static str, CsrMatrix)> {
+    vec![
+        ("banded", banded(500, 6, 0.5, GenSeed(1))),
+        ("chain", chain(120, GenSeed(2))),
+        ("circuit", circuit(600, 5, 0.8, GenSeed(3))),
+        ("grid2d", grid2d(20, 20, true, GenSeed(4))),
+        ("shallow", shallow(900, 0.4, GenSeed(5))),
+        ("random_lower", random_lower(400, 2000, GenSeed(6))),
+        ("power_law", power_law(400, 1.1, 120, GenSeed(7))),
+        ("factor_like", factor_like(500, 8, 4, GenSeed(8))),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -4,9 +4,11 @@
 //! [`LevelSolver`](super::LevelSolver) against a stream of right-hand
 //! sides. Two implementations exist:
 //!
-//! - [`NativeBackend`](super::NativeBackend) (always available): a pure-Rust
-//!   `std::thread` worker pool that chunks the rows of each level across
-//!   threads — the default request path.
+//! - [`NativeBackend`](super::NativeBackend) (always available): pure
+//!   Rust, the default request path. Executes through one of two
+//!   schedulers chosen by [`NativeConfig::scheduler`]
+//!   (`SchedulerKind::{Level, Mgd, Auto}`): the barriered level pool or
+//!   the barrier-free medium-granularity DAG executor.
 //! - `PjrtBackend` (behind the `pjrt` cargo feature): dispatches the
 //!   AOT-compiled JAX/Pallas level kernels through PJRT, one compiled
 //!   executable per `(batch, edge_budget)` variant.
@@ -168,6 +170,28 @@ mod tests {
         let b = create_backend(&cfg).unwrap();
         assert_eq!(b.name(), "native");
         assert!(b.supports_multi_rhs());
+    }
+
+    #[test]
+    fn native_backend_honors_scheduler_choice() {
+        use super::super::native::SchedulerKind;
+        for scheduler in [SchedulerKind::Level, SchedulerKind::Mgd, SchedulerKind::Auto] {
+            let cfg = BackendConfig {
+                kind: BackendKind::Native,
+                native: crate::runtime::NativeConfig {
+                    threads: 2,
+                    scheduler,
+                    ..crate::runtime::NativeConfig::default()
+                },
+                ..BackendConfig::default()
+            };
+            let backend = create_backend(&cfg).unwrap();
+            let m = gen::chain(150, GenSeed(17)); // deep: the mgd sweet spot
+            let plan = LevelSolver::new(&m);
+            let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32 - 2.0).collect();
+            let x = backend.solve(&plan, &b).unwrap();
+            assert_close_to_reference(&m, &b, &x, 1e-3);
+        }
     }
 
     #[test]

@@ -14,9 +14,10 @@
 //! like the L2 python mirror; the native backend reproduces the same
 //! budget/carry split in pure Rust.
 
+use super::mgd_plan::{MgdPlan, MgdPlanConfig};
 use crate::graph::{Dag, Levels};
 use crate::matrix::CsrMatrix;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Per-level execution plan: the level's rows (ascending ids) and the
 /// maximum off-diagonal in-degree, which sizes the gather tile.
@@ -34,6 +35,9 @@ pub struct LevelPlan {
 pub struct LevelSolver {
     matrix: Arc<CsrMatrix>,
     plans: Arc<Vec<LevelPlan>>,
+    /// Lazily-built medium-granularity plan (the `mgd` scheduler's input),
+    /// cached so repeated solves share one preprocessing pass.
+    mgd: OnceLock<Arc<MgdPlan>>,
 }
 
 impl LevelSolver {
@@ -55,7 +59,20 @@ impl LevelSolver {
         Self {
             matrix: Arc::new(m.clone()),
             plans: Arc::new(plans),
+            mgd: OnceLock::new(),
         }
+    }
+
+    /// The medium-granularity plan of this matrix, built on first use and
+    /// cached for every later solve. The sizing of the first caller wins;
+    /// node sizing is a performance knob, never a correctness one (every
+    /// clustering yields bitwise-identical solutions — see
+    /// [`MgdPlan`]'s module docs).
+    pub fn mgd_plan(&self, cfg: MgdPlanConfig) -> Arc<MgdPlan> {
+        Arc::clone(
+            self.mgd
+                .get_or_init(|| Arc::new(MgdPlan::build(&self.matrix, cfg))),
+        )
     }
 
     /// Matrix order.
@@ -342,6 +359,23 @@ mod tests {
             assert_eq!(lp.max_deg, want);
         }
         assert_eq!(plan.max_deg(), m.max_in_degree());
+    }
+
+    #[test]
+    fn mgd_plan_is_cached_and_first_config_wins() {
+        let m = gen::circuit(300, 4, 0.8, GenSeed(7));
+        let plan = LevelSolver::new(&m);
+        let a = plan.mgd_plan(MgdPlanConfig {
+            max_node_rows: 8,
+            max_node_edges: 64,
+        });
+        let b = plan.mgd_plan(MgdPlanConfig {
+            max_node_rows: 32,
+            max_node_edges: 1024,
+        });
+        assert!(Arc::ptr_eq(&a, &b), "second call must hit the cache");
+        assert_eq!(b.config.max_node_rows, 8);
+        assert_eq!(a.n, m.n);
     }
 
     #[test]

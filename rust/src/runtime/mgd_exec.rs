@@ -1,0 +1,444 @@
+//! Barrier-free medium-granularity DAG executor (the `mgd` scheduler of
+//! the native backend).
+//!
+//! Executes an [`MgdPlan`] with counter-driven readiness instead of the
+//! per-level barriers of the level scheduler: each node carries an atomic
+//! dependency counter seeded with its distinct-predecessor count; whoever
+//! completes a node decrements its successors' counters and pushes any
+//! counter that hits zero onto its *own* deque, so a freshly-enabled
+//! consumer runs next on the worker that just produced its operands
+//! (cache-warm, the runtime analog of the compiler's producer forwarding).
+//! Workers pop their own deque LIFO and steal FIFO from the back of a
+//! victim's deque when idle — deep/narrow DAG regions flow through one
+//! worker with zero barrier waits while wide regions fan out.
+//!
+//! Within a node, execution keeps the current row's partial sum in a plain
+//! accumulator (the "feedback register" of paper §IV.B) and parks each
+//! completed in-node solution in a node-local buffer (the psum slab);
+//! later rows of the same node resolve intra-node operands from that
+//! buffer without touching the shared `x` slab. External operands are
+//! gathered once per node and RHS through the plan's deduplicated,
+//! ascending [`MgdNode::ext`] list (the ICR-ordered gather).
+//!
+//! Results are **bitwise identical** to
+//! [`solve_serial`](crate::matrix::triangular::solve_serial) for any
+//! thread count and steal order: each row reduces its edges in CSR order
+//! with a single `f32` accumulator and divides by the diagonal, and every
+//! operand is read after a happens-before edge from its producer (see
+//! `runtime/atomics.md` for the full protocol).
+
+use super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
+use anyhow::{ensure, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Counters recorded by one [`execute`] call.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MgdExecStats {
+    /// Medium nodes executed (== plan nodes on success).
+    pub nodes_executed: u64,
+    /// Nodes obtained by stealing from another worker's deque.
+    pub steals: u64,
+}
+
+/// Shared state of one barrier-free solve. Generic over the RHS view so
+/// callers can pass `&[Vec<f32>]` or borrowed `&[&[f32]]` without a
+/// staging copy.
+struct Run<'a, B: AsRef<[f32]> + Sync> {
+    plan: &'a MgdPlan,
+    bs: &'a [B],
+    /// `f32` bits of the solution, `(rhs, n)` row-major.
+    x: &'a [AtomicU32],
+    /// Remaining-dependency counter per node.
+    counters: Vec<AtomicU32>,
+    /// Per-worker deque of ready node ids.
+    deques: Vec<Mutex<VecDeque<u32>>>,
+    /// Per-deque length mirror so idle workers scan victims without
+    /// taking locks (advisory; the lock is the source of truth).
+    lens: Vec<AtomicUsize>,
+    /// Nodes not yet completed; 0 is the global exit condition.
+    remaining: AtomicUsize,
+    /// A node job panicked: everyone bails out.
+    poisoned: AtomicBool,
+    steals: AtomicU64,
+}
+
+/// Execute `plan` for every RHS in `bs` on `threads` workers (including
+/// the calling thread). Returns the solutions and the run counters.
+pub fn execute<B: AsRef<[f32]> + Sync>(
+    plan: &MgdPlan,
+    bs: &[B],
+    threads: usize,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    let n = plan.n;
+    let r = bs.len();
+    if r == 0 {
+        return Ok((Vec::new(), MgdExecStats::default()));
+    }
+    for b in bs {
+        let len = b.as_ref().len();
+        ensure!(len == n, "rhs length {len} != matrix order {n}");
+    }
+    let x: Vec<AtomicU32> = std::iter::repeat_with(|| AtomicU32::new(0))
+        .take(r * n)
+        .collect();
+    let num_nodes = plan.nodes.len();
+    // Never spawn more workers than the plan can keep busy: `par_width`
+    // bounds useful parallelism, so a pure chain (width 1) runs entirely
+    // on the calling thread with zero spawn cost.
+    let nworkers = threads
+        .max(1)
+        .min(num_nodes.max(1))
+        .min(plan.par_width.max(1));
+    if nworkers <= 1 {
+        // Serial path: node ids are topological, no scheduling needed.
+        let mut scratch = Vec::new();
+        let mut local = Vec::new();
+        for node in &plan.nodes {
+            run_node(n, node, bs, &x, &mut scratch, &mut local);
+        }
+        let stats = MgdExecStats {
+            nodes_executed: num_nodes as u64,
+            steals: 0,
+        };
+        return Ok((unpack(&x, r, n), stats));
+    }
+    let run = Run {
+        plan,
+        bs,
+        x: &x,
+        counters: plan
+            .nodes
+            .iter()
+            .map(|nd| AtomicU32::new(nd.init_deps))
+            .collect(),
+        deques: (0..nworkers).map(|_| Mutex::new(VecDeque::new())).collect(),
+        lens: (0..nworkers).map(|_| AtomicUsize::new(0)).collect(),
+        remaining: AtomicUsize::new(num_nodes),
+        poisoned: AtomicBool::new(false),
+        steals: AtomicU64::new(0),
+    };
+    // Seed the roots round-robin so the fan-out starts distributed.
+    for (i, &root) in plan.roots.iter().enumerate() {
+        let w = i % nworkers;
+        run.deques[w].lock().unwrap().push_back(root);
+        run.lens[w].fetch_add(1, Ordering::Relaxed);
+    }
+    std::thread::scope(|s| {
+        for w in 1..nworkers {
+            let run = &run;
+            std::thread::Builder::new()
+                .name(format!("mgd-exec-{w}"))
+                .spawn_scoped(s, move || worker_loop(run, w))
+                .expect("spawn mgd worker thread");
+        }
+        // The calling thread is worker 0 — no idle coordinator.
+        worker_loop(&run, 0);
+    });
+    ensure!(
+        !run.poisoned.load(Ordering::Relaxed),
+        "mgd node job panicked"
+    );
+    debug_assert_eq!(run.remaining.load(Ordering::Relaxed), 0);
+    let stats = MgdExecStats {
+        nodes_executed: num_nodes as u64,
+        steals: run.steals.load(Ordering::Relaxed),
+    };
+    Ok((unpack(&x, r, n), stats))
+}
+
+fn unpack(x: &[AtomicU32], r: usize, n: usize) -> Vec<Vec<f32>> {
+    (0..r)
+        .map(|k| {
+            (0..n)
+                .map(|i| f32::from_bits(x[k * n + i].load(Ordering::Relaxed)))
+                .collect()
+        })
+        .collect()
+}
+
+fn worker_loop<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) {
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut local: Vec<f32> = Vec::new();
+    let mut idle_spins = 0u32;
+    loop {
+        if run.poisoned.load(Ordering::Relaxed) {
+            return;
+        }
+        let nid = pop_own(run, w).or_else(|| steal(run, w));
+        let Some(nid) = nid else {
+            // `remaining == 0` is the only clean exit: every node completed,
+            // so no deque can ever become non-empty again.
+            if run.remaining.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            // Tiered backoff: spin briefly, then yield, then doze — a
+            // worker idling through a long serial DAG stretch must not
+            // burn a whole core (the ~50 µs wake lag is small next to a
+            // node's execution time).
+            idle_spins = idle_spins.saturating_add(1);
+            if idle_spins < 64 {
+                std::hint::spin_loop();
+            } else if idle_spins < 1024 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            continue;
+        };
+        idle_spins = 0;
+        // Catch panics so one bad node cannot strand the other workers in
+        // their idle loops; the poison flag turns it into a solve error.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_node(
+                run.plan.n,
+                &run.plan.nodes[nid as usize],
+                run.bs,
+                run.x,
+                &mut scratch,
+                &mut local,
+            );
+        }))
+        .is_ok();
+        if !ok {
+            run.poisoned.store(true, Ordering::Relaxed);
+            return;
+        }
+        complete(run, w, nid);
+    }
+}
+
+/// Publish a finished node: decrement each successor's counter with
+/// `Release` (ordering this node's `x` stores before the decrement) and
+/// push any successor that hit zero onto our own deque — newest first, so
+/// the consumer whose operands are hottest runs next.
+fn complete<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize, nid: u32) {
+    let node = &run.plan.nodes[nid as usize];
+    for &s in &node.succs {
+        if run.counters[s as usize].fetch_sub(1, Ordering::Release) == 1 {
+            // Last dependency: acquire the release sequence on the counter
+            // so every predecessor's stores are visible to whoever runs
+            // `s` (the deque mutex extends the edge to a stealing worker).
+            std::sync::atomic::fence(Ordering::Acquire);
+            let mut q = run.deques[w].lock().unwrap();
+            q.push_front(s);
+            run.lens[w].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    run.remaining.fetch_sub(1, Ordering::Release);
+}
+
+fn pop_own<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) -> Option<u32> {
+    if run.lens[w].load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let mut q = run.deques[w].lock().unwrap();
+    let v = q.pop_front();
+    if v.is_some() {
+        run.lens[w].fetch_sub(1, Ordering::Relaxed);
+    }
+    v
+}
+
+fn steal<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) -> Option<u32> {
+    let nw = run.deques.len();
+    for off in 1..nw {
+        let t = (w + off) % nw;
+        if run.lens[t].load(Ordering::Relaxed) == 0 {
+            continue;
+        }
+        let mut q = run.deques[t].lock().unwrap();
+        if let Some(v) = q.pop_back() {
+            run.lens[t].fetch_sub(1, Ordering::Relaxed);
+            run.steals.fetch_add(1, Ordering::Relaxed);
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Solve one node's rows for every RHS. Intra-node operands come from the
+/// `local` psum buffer, external ones from the ICR-ordered `scratch`
+/// gather; each row reduces in CSR order (bitwise-serial numerics).
+fn run_node<B: AsRef<[f32]>>(
+    n: usize,
+    node: &MgdNode,
+    bs: &[B],
+    x: &[AtomicU32],
+    scratch: &mut Vec<f32>,
+    local: &mut Vec<f32>,
+) {
+    let first = node.first_row as usize;
+    let rows = node.rows as usize;
+    for (k, b) in bs.iter().enumerate() {
+        let b = b.as_ref();
+        let xk = &x[k * n..(k + 1) * n];
+        scratch.clear();
+        scratch.extend(
+            node.ext
+                .iter()
+                .map(|&c| f32::from_bits(xk[c as usize].load(Ordering::Relaxed))),
+        );
+        local.clear();
+        for r in 0..rows {
+            let lo = node.edge_ptr[r] as usize;
+            let hi = node.edge_ptr[r + 1] as usize;
+            let mut acc = 0f32;
+            for e in lo..hi {
+                let slot = node.edge_slot[e];
+                let v = if slot & LOCAL_BIT != 0 {
+                    local[(slot & !LOCAL_BIT) as usize]
+                } else {
+                    scratch[slot as usize]
+                };
+                acc += node.edge_val[e] * v;
+            }
+            let xi = (b[first + r] - acc) / node.diag[r];
+            local.push(xi);
+            xk[first + r].store(xi.to_bits(), Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::solve_serial;
+    use crate::runtime::mgd_plan::MgdPlanConfig;
+
+    fn rhs_batch(n: usize, count: usize) -> Vec<Vec<f32>> {
+        (0..count)
+            .map(|k| (0..n).map(|i| ((i + 3 * k) % 9) as f32 - 4.0).collect())
+            .collect()
+    }
+
+    /// Property test (tentpole acceptance): for all 8 generator families ×
+    /// thread counts {1, 2, 8} × RHS batches {1, 3, 11}, the MGD executor
+    /// is **bitwise identical** to the serial reference — the reduction
+    /// order is fixed by the plan, never by thread or steal timing.
+    #[test]
+    fn mgd_is_bitwise_serial_across_generators_threads_batches() {
+        for (name, m) in &gen::test_suite() {
+            let plan = MgdPlan::build(m, MgdPlanConfig::default());
+            for threads in [1usize, 2, 8] {
+                for count in [1usize, 3, 11] {
+                    let bs = rhs_batch(m.n, count);
+                    let (xs, stats) = execute(&plan, &bs, threads).unwrap();
+                    assert_eq!(xs.len(), count);
+                    assert_eq!(stats.nodes_executed, plan.num_nodes() as u64);
+                    for (b, x) in bs.iter().zip(&xs) {
+                        let want = solve_serial(m, b);
+                        for i in 0..m.n {
+                            assert_eq!(
+                                x[i].to_bits(),
+                                want[i].to_bits(),
+                                "{name}: threads={threads} batch={count} row {i}: \
+                                 {} != {}",
+                                x[i],
+                                want[i],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Determinism: repeated contended runs produce identical bits. Tiny
+    /// single-row nodes maximize counter traffic and steal interleavings,
+    /// so this doubles as the stress test of the Release/Acquire counter
+    /// protocol (runtime/atomics.md): any missing happens-before edge
+    /// shows up as a row solved from a stale (zero) operand.
+    #[test]
+    fn mgd_determinism_and_ordering_stress() {
+        let m = gen::circuit(800, 5, 0.8, GenSeed(21));
+        let plan = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 1,
+                max_node_edges: 1,
+            },
+        );
+        assert_eq!(plan.num_nodes(), m.n); // node-per-row: max scheduling churn
+        let bs = rhs_batch(m.n, 2);
+        let (first, _) = execute(&plan, &bs, 8).unwrap();
+        for round in 0..20 {
+            let (xs, stats) = execute(&plan, &bs, 8).unwrap();
+            assert_eq!(stats.nodes_executed, m.n as u64);
+            for (a, b) in first.iter().zip(&xs) {
+                for i in 0..m.n {
+                    assert_eq!(
+                        a[i].to_bits(),
+                        b[i].to_bits(),
+                        "round {round}, row {i}: nondeterministic bits"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steals_happen_on_wide_dags() {
+        // A wide shallow DAG seeds hundreds of independent roots across
+        // the deques; idle workers must actually steal. Any single run
+        // could in principle finish without a steal (scheduling is
+        // timing-dependent), so retry a few times — a dead steal path
+        // (e.g. broken `lens` bookkeeping) fails every attempt.
+        let m = gen::shallow(4000, 0.4, GenSeed(22));
+        let plan = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 8,
+                max_node_edges: 4096,
+            },
+        );
+        assert!(plan.num_nodes() > 64);
+        let bs = rhs_batch(m.n, 1);
+        let want = solve_serial(&m, &bs[0]);
+        let mut stolen = 0u64;
+        for _ in 0..20 {
+            let (xs, stats) = execute(&plan, &bs, 4).unwrap();
+            for i in 0..m.n {
+                assert_eq!(xs[0][i].to_bits(), want[i].to_bits());
+            }
+            stolen += stats.steals;
+            if stolen > 0 {
+                break;
+            }
+        }
+        assert!(stolen > 0, "no steal in 20 contended wide-DAG runs");
+    }
+
+    #[test]
+    fn empty_batch_and_bad_lengths() {
+        let m = gen::chain(50, GenSeed(23));
+        let plan = MgdPlan::build(&m, MgdPlanConfig::default());
+        let (xs, stats) = execute::<Vec<f32>>(&plan, &[], 4).unwrap();
+        assert!(xs.is_empty());
+        assert_eq!(stats, MgdExecStats::default());
+        assert!(execute(&plan, &[vec![0f32; 49]], 4).is_err());
+        assert!(execute(&plan, &[vec![0f32; 50], vec![0f32; 51]], 4).is_err());
+    }
+
+    #[test]
+    fn more_workers_than_nodes_is_clamped() {
+        let m = gen::chain(10, GenSeed(24));
+        let plan = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 128,
+                max_node_edges: usize::MAX,
+            },
+        );
+        assert_eq!(plan.num_nodes(), 1);
+        let bs = rhs_batch(m.n, 3);
+        let (xs, stats) = execute(&plan, &bs, 16).unwrap();
+        assert_eq!(stats.steals, 0); // single node → serial path
+        let want = solve_serial(&m, &bs[2]);
+        for i in 0..m.n {
+            assert_eq!(xs[2][i].to_bits(), want[i].to_bits());
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Medium-granularity dataflow plan for the runtime (paper §IV, brought to
+//! the serve path).
+//!
+//! [`MgdPlan`] is the preprocessing stage of the barrier-free native
+//! scheduler: it clusters rows into *medium-granularity nodes* — the same
+//! aggregation trade-off the compiler makes between fine (edge) and coarse
+//! (level) granularity — and precomputes everything the executor needs so
+//! the hot path touches only flat arrays:
+//!
+//! - **Clustering.** Rows are grouped into contiguous id ranges capped by a
+//!   row and an edge budget (mirroring [`crate::compiler::split`]'s
+//!   edge-budget heuristic). Contiguity keeps every intra-node dependency
+//!   pointing at an *earlier row of the same node* (lower-triangular ids
+//!   are topological), so a node executes its rows in ascending order with
+//!   no internal scheduling. Deep chains collapse into few large
+//!   sequential nodes; wide levels fall into many mutually independent
+//!   nodes. The auto sizing derives the caps from the DAG's level-width
+//!   statistics and the worker count (see [`MgdPlanConfig::auto`]).
+//! - **Dependency counters.** Each node stores its distinct-predecessor
+//!   count (the executor's atomic readiness counter seed) and the distinct
+//!   successor list it must decrement on completion. Level barriers are
+//!   gone: a node runs the moment its own counter hits zero.
+//! - **Structure-of-arrays gather layout.** Per node, every off-diagonal
+//!   `(col, val)` is packed contiguously (`edge_slot`/`edge_val`, row-major
+//!   in CSR order) together with the per-row diagonals, so execution
+//!   streams one dense slab instead of chasing `rowptr` indirections.
+//! - **ICR-ordered external gather.** All *external* operand sources of a
+//!   node (rows owned by other nodes) are deduplicated into one ascending
+//!   [`MgdNode::ext`] list — the runtime analog of the compiler's
+//!   intra-node computation reordering (§IV.C): edges that consume the
+//!   same source share a single readout of the shared `x` array
+//!   (broadcast), and the gather walks memory in ascending address order.
+//!   Intra-node sources are not gathered at all; they resolve against the
+//!   node-local partial-result buffer (the forwarding/psum path, §IV.B).
+//!
+//! The packed edge order inside each row is exactly the CSR (ascending
+//! column) order, and the executor keeps one `f32` accumulator per row, so
+//! solutions are **bitwise identical** to
+//! [`crate::matrix::triangular::solve_serial`] regardless of node sizing,
+//! thread count, or steal order. Reordering here affects *loads*, never
+//! the floating-point reduction order.
+
+use crate::matrix::CsrMatrix;
+
+/// Tag bit marking an edge operand as node-local (resolved from the
+/// node's own solved-rows buffer instead of the external gather scratch).
+pub const LOCAL_BIT: u32 = 1 << 31;
+
+/// Node sizing knobs for [`MgdPlan::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MgdPlanConfig {
+    /// Max rows per medium node.
+    pub max_node_rows: usize,
+    /// Max packed off-diagonal edges per medium node (a single row may
+    /// exceed this on its own; hub rows become single-row nodes).
+    pub max_node_edges: usize,
+}
+
+impl MgdPlanConfig {
+    /// Derive node sizing from the DAG shape and the worker count.
+    ///
+    /// The row cap balances two pressures: enough nodes to keep `threads`
+    /// workers busy (`n / (4·threads)` nodes minimum when the DAG allows
+    /// it) against per-node scheduling overhead (counter updates, deque
+    /// traffic), which favors larger nodes on deep/narrow DAGs where
+    /// parallelism is capped by the dependency structure anyway.
+    pub fn auto(n: usize, num_levels: usize, threads: usize) -> Self {
+        let avg_width = (n / num_levels.max(1)).max(1);
+        let par_rows = n / (4 * threads.max(1)).max(1);
+        // Narrow DAGs (avg level width ≈ 1-2) have no row parallelism to
+        // preserve — take the large amortization cap directly.
+        let max_node_rows = if avg_width <= 2 {
+            128
+        } else {
+            par_rows.clamp(8, 128)
+        };
+        Self {
+            max_node_rows,
+            max_node_edges: max_node_rows * 16,
+        }
+    }
+}
+
+impl Default for MgdPlanConfig {
+    fn default() -> Self {
+        Self {
+            max_node_rows: 64,
+            max_node_edges: 1024,
+        }
+    }
+}
+
+/// One medium-granularity node: a contiguous row range with its packed
+/// gather layout and dependency links.
+#[derive(Debug, Clone)]
+pub struct MgdNode {
+    /// First row id of the contiguous range.
+    pub first_row: u32,
+    /// Row count of the range.
+    pub rows: u32,
+    /// Per-row offsets into `edge_slot`/`edge_val`, length `rows + 1`.
+    pub edge_ptr: Vec<u32>,
+    /// Operand slot per edge, in CSR (ascending column) order within each
+    /// row: `LOCAL_BIT | (col - first_row)` for intra-node sources, else an
+    /// index into [`MgdNode::ext`].
+    pub edge_slot: Vec<u32>,
+    /// `L_ij` values parallel to `edge_slot`.
+    pub edge_val: Vec<f32>,
+    /// Distinct external source rows (global ids), ascending — the
+    /// ICR-ordered gather list; duplicates across edges share one entry.
+    pub ext: Vec<u32>,
+    /// Per-row diagonal values.
+    pub diag: Vec<f32>,
+    /// Distinct successor node ids (ascending) whose counters this node
+    /// decrements on completion.
+    pub succs: Vec<u32>,
+    /// Distinct predecessor node count (readiness counter seed).
+    pub init_deps: u32,
+}
+
+impl MgdNode {
+    /// Total packed off-diagonal edges of this node.
+    pub fn num_edges(&self) -> usize {
+        self.edge_slot.len()
+    }
+}
+
+/// The preprocessed medium-granularity dataflow plan of one matrix.
+#[derive(Debug, Clone)]
+pub struct MgdPlan {
+    /// Matrix order.
+    pub n: usize,
+    /// Nodes in ascending row order (node ids are topological: every
+    /// dependency points at a lower node id).
+    pub nodes: Vec<MgdNode>,
+    /// Owning node of each row.
+    pub node_of: Vec<u32>,
+    /// Nodes with no predecessors (ready at time zero).
+    pub roots: Vec<u32>,
+    /// Maximum width of the node DAG's level decomposition — a cheap
+    /// upper-bound-flavored estimate of useful worker parallelism (the
+    /// true maximum antichain can be somewhat larger; the executor uses
+    /// this only to avoid spawning workers for serial plans).
+    pub par_width: usize,
+    /// The sizing the plan was built with.
+    pub config: MgdPlanConfig,
+}
+
+impl MgdPlan {
+    /// Cluster `m`'s rows and precompute the per-node layouts.
+    pub fn build(m: &CsrMatrix, cfg: MgdPlanConfig) -> Self {
+        let n = m.n;
+        let max_rows = cfg.max_node_rows.max(1);
+        let max_edges = cfg.max_node_edges.max(1);
+        // Pass 1: contiguous clustering under the row/edge budgets.
+        let mut bounds: Vec<(usize, usize)> = Vec::new(); // [lo, hi)
+        let mut lo = 0usize;
+        let mut edges = 0usize;
+        for i in 0..n {
+            let deg = m.in_degree(i);
+            if i > lo && (i - lo >= max_rows || edges + deg > max_edges) {
+                bounds.push((lo, i));
+                lo = i;
+                edges = 0;
+            }
+            edges += deg;
+        }
+        if n > 0 {
+            bounds.push((lo, n));
+        }
+        let mut node_of = vec![0u32; n];
+        for (k, &(blo, bhi)) in bounds.iter().enumerate() {
+            for r in blo..bhi {
+                node_of[r] = k as u32;
+            }
+        }
+        // Pass 2: per-node packed layout + ICR-ordered external gather.
+        let mut nodes: Vec<MgdNode> = Vec::with_capacity(bounds.len());
+        for &(blo, bhi) in &bounds {
+            let rows = bhi - blo;
+            let mut edge_ptr = Vec::with_capacity(rows + 1);
+            let mut edge_slot = Vec::new();
+            let mut edge_val = Vec::new();
+            let mut diag = Vec::with_capacity(rows);
+            let mut ext: Vec<u32> = Vec::new();
+            for i in blo..bhi {
+                let (cols, _) = m.row_off_diag(i);
+                ext.extend(cols.iter().copied().filter(|&c| (c as usize) < blo));
+            }
+            ext.sort_unstable();
+            ext.dedup();
+            edge_ptr.push(0u32);
+            for i in blo..bhi {
+                let (cols, vals) = m.row_off_diag(i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let slot = if (c as usize) >= blo {
+                        LOCAL_BIT | (c - blo as u32)
+                    } else {
+                        ext.binary_search(&c).expect("external source collected") as u32
+                    };
+                    edge_slot.push(slot);
+                    edge_val.push(v);
+                }
+                edge_ptr.push(edge_slot.len() as u32);
+                diag.push(m.diag(i));
+            }
+            nodes.push(MgdNode {
+                first_row: blo as u32,
+                rows: rows as u32,
+                edge_ptr,
+                edge_slot,
+                edge_val,
+                ext,
+                diag,
+                succs: Vec::new(),
+                init_deps: 0,
+            });
+        }
+        // Pass 3: dependency links plus the node-DAG level decomposition
+        // (longest path), whose max width estimates worker parallelism.
+        // `ext` is ascending and nodes own contiguous ranges, so the
+        // mapped node ids are non-decreasing and dedup by skipping repeats.
+        let mut node_level = vec![0u32; nodes.len()];
+        for k in 0..nodes.len() {
+            let mut prev = u32::MAX;
+            let mut deps = 0u32;
+            let mut level = 0u32;
+            // Split borrow: preds strictly precede k.
+            let (before, after) = nodes.split_at_mut(k);
+            let node = &mut after[0];
+            for &src in &node.ext {
+                let p = node_of[src as usize];
+                debug_assert!((p as usize) < k, "external source must precede");
+                level = level.max(node_level[p as usize] + 1);
+                if p != prev {
+                    prev = p;
+                    deps += 1;
+                    before[p as usize].succs.push(k as u32);
+                }
+            }
+            node_level[k] = level;
+            node.init_deps = deps;
+        }
+        let mut width_of = vec![0usize; nodes.len() + 1];
+        for &l in &node_level {
+            width_of[l as usize] += 1;
+        }
+        let par_width = width_of.into_iter().max().unwrap_or(0);
+        let roots = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, nd)| nd.init_deps == 0)
+            .map(|(k, _)| k as u32)
+            .collect();
+        Self {
+            n,
+            nodes,
+            node_of,
+            roots,
+            par_width,
+            config: cfg,
+        }
+    }
+
+    /// Number of medium nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total cross-node dependency edges (counter decrements per solve).
+    pub fn num_dep_edges(&self) -> usize {
+        self.nodes.iter().map(|nd| nd.succs.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    fn check_invariants(m: &CsrMatrix, p: &MgdPlan) {
+        assert_eq!(p.n, m.n);
+        // Nodes partition 0..n into contiguous ascending ranges.
+        let mut next = 0u32;
+        for (k, nd) in p.nodes.iter().enumerate() {
+            assert_eq!(nd.first_row, next, "node {k} not contiguous");
+            assert!(nd.rows >= 1);
+            assert_eq!(nd.edge_ptr.len() as u32, nd.rows + 1);
+            assert_eq!(*nd.edge_ptr.last().unwrap() as usize, nd.num_edges());
+            assert_eq!(nd.diag.len() as u32, nd.rows);
+            for r in nd.first_row..nd.first_row + nd.rows {
+                assert_eq!(p.node_of[r as usize], k as u32);
+            }
+            // ext ascending, deduped, strictly external.
+            for w in nd.ext.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &e in &nd.ext {
+                assert!(e < nd.first_row);
+            }
+            // succs ascending, deduped, strictly later.
+            for w in nd.succs.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &s in &nd.succs {
+                assert!(s as usize > k);
+            }
+            next += nd.rows;
+        }
+        assert_eq!(next as usize, m.n);
+        // Packed edges reproduce each row's CSR order and operands.
+        for nd in &p.nodes {
+            for r in 0..nd.rows as usize {
+                let i = nd.first_row as usize + r;
+                let (cols, vals) = m.row_off_diag(i);
+                let lo = nd.edge_ptr[r] as usize;
+                let hi = nd.edge_ptr[r + 1] as usize;
+                assert_eq!(hi - lo, cols.len(), "row {i} edge count");
+                for (e, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                    let slot = nd.edge_slot[lo + e];
+                    assert_eq!(nd.edge_val[lo + e], v);
+                    if slot & LOCAL_BIT != 0 {
+                        assert_eq!(nd.first_row + (slot & !LOCAL_BIT), c);
+                    } else {
+                        assert_eq!(nd.ext[slot as usize], c);
+                    }
+                }
+                assert_eq!(nd.diag[r], m.diag(i));
+            }
+        }
+        // init_deps counts distinct predecessor nodes; succs mirror them.
+        let mut succ_of: Vec<Vec<u32>> = vec![Vec::new(); p.num_nodes()];
+        for (k, nd) in p.nodes.iter().enumerate() {
+            let mut preds: Vec<u32> = nd.ext.iter().map(|&s| p.node_of[s as usize]).collect();
+            preds.dedup();
+            assert_eq!(nd.init_deps as usize, preds.len(), "node {k}");
+            for pd in preds {
+                succ_of[pd as usize].push(k as u32);
+            }
+        }
+        for (k, nd) in p.nodes.iter().enumerate() {
+            assert_eq!(nd.succs, succ_of[k], "succs of node {k}");
+        }
+        // Roots are exactly the zero-dep nodes.
+        let want: Vec<u32> = p
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, nd)| nd.init_deps == 0)
+            .map(|(k, _)| k as u32)
+            .collect();
+        assert_eq!(p.roots, want);
+        // par_width is the max width of the node-DAG level decomposition.
+        let mut level = vec![0u32; p.num_nodes()];
+        for (k, nd) in p.nodes.iter().enumerate() {
+            for &src in &nd.ext {
+                let pd = p.node_of[src as usize] as usize;
+                level[k] = level[k].max(level[pd] + 1);
+            }
+        }
+        let mut width = std::collections::HashMap::new();
+        for &l in &level {
+            *width.entry(l).or_insert(0usize) += 1;
+        }
+        let want_width = width.values().copied().max().unwrap_or(0);
+        assert_eq!(p.par_width, want_width);
+        assert!(p.num_nodes() == 0 || (1..=p.num_nodes()).contains(&p.par_width));
+    }
+
+    #[test]
+    fn plan_invariants_across_generators() {
+        let cases: Vec<CsrMatrix> = gen::test_suite().into_iter().map(|(_, m)| m).collect();
+        for m in &cases {
+            for cfg in [
+                MgdPlanConfig::default(),
+                MgdPlanConfig {
+                    max_node_rows: 1,
+                    max_node_edges: 1,
+                },
+                MgdPlanConfig {
+                    max_node_rows: 7,
+                    max_node_edges: 40,
+                },
+            ] {
+                let p = MgdPlan::build(m, cfg);
+                check_invariants(m, &p);
+            }
+        }
+    }
+
+    #[test]
+    fn row_budget_caps_node_sizes() {
+        let m = gen::banded(400, 8, 0.7, GenSeed(9));
+        let p = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 16,
+                max_node_edges: usize::MAX,
+            },
+        );
+        for nd in &p.nodes {
+            assert!(nd.rows <= 16);
+        }
+        assert!(p.num_nodes() >= 400 / 16);
+    }
+
+    #[test]
+    fn edge_budget_isolates_hub_rows() {
+        // Same generator case whose >32-degree hubs the native backend
+        // tests already assert on.
+        let m = gen::power_law(400, 1.1, 120, GenSeed(7));
+        let p = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 64,
+                max_node_edges: 32,
+            },
+        );
+        check_invariants(&m, &p);
+        // A hub row wider than the budget still gets a (single-row) node.
+        let hub_nodes = p.nodes.iter().filter(|nd| nd.num_edges() > 32).count();
+        assert!(hub_nodes > 0, "generator should produce >32-edge hubs");
+        for nd in &p.nodes {
+            if nd.num_edges() > 32 {
+                assert_eq!(nd.rows, 1, "oversized node must be a lone hub row");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_collapses_into_few_sequential_nodes() {
+        let m = gen::chain(1000, GenSeed(11));
+        let p = MgdPlan::build(&m, MgdPlanConfig::auto(m.n, 1000, 8));
+        // 1000-deep chain at 128 rows/node → ~8 nodes in a single chain.
+        assert!(p.num_nodes() <= 1000 / 64, "{}", p.num_nodes());
+        assert_eq!(p.roots, vec![0]);
+        // A chain of nodes has zero exploitable parallelism: the executor
+        // must not spawn any worker for it.
+        assert_eq!(p.par_width, 1);
+        for (k, nd) in p.nodes.iter().enumerate() {
+            if k + 1 < p.num_nodes() {
+                assert_eq!(nd.succs, vec![k as u32 + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn ext_deduplicates_shared_sources() {
+        // Rows {0,1} form node 0; rows {2,3} form node 1. Rows 2 and 3
+        // both read row 0 (one shared ext entry) and row 3 reads row 2
+        // (node-local, not gathered at all).
+        let m = CsrMatrix::from_triplets(
+            4,
+            &[
+                (0, 0, 2.0),
+                (1, 1, 3.0),
+                (2, 0, 1.0),
+                (2, 2, 1.0),
+                (3, 0, 1.0),
+                (3, 2, 1.0),
+                (3, 3, 1.0),
+            ],
+        )
+        .unwrap();
+        let p = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 2,
+                max_node_edges: usize::MAX,
+            },
+        );
+        assert_eq!(p.num_nodes(), 2);
+        assert_eq!(p.nodes[0].first_row, 0);
+        assert_eq!(p.nodes[1].first_row, 2);
+        let nd = &p.nodes[1];
+        assert_eq!(nd.ext, vec![0]); // row 0 read twice, gathered once
+        assert_eq!(nd.num_edges(), 3);
+        let locals = nd.edge_slot.iter().filter(|&&s| s & LOCAL_BIT != 0).count();
+        assert_eq!(locals, 1); // row 3's read of row 2
+        assert_eq!(nd.init_deps, 1);
+        assert_eq!(p.nodes[0].succs, vec![1]);
+    }
+
+    #[test]
+    fn auto_sizing_tracks_shape() {
+        // Narrow: large amortization nodes.
+        let narrow = MgdPlanConfig::auto(10_000, 9_000, 8);
+        assert_eq!(narrow.max_node_rows, 128);
+        // Wide: enough nodes for the workers.
+        let wide = MgdPlanConfig::auto(10_000, 10, 8);
+        assert!(wide.max_node_rows <= 10_000 / 32 + 1);
+        assert!(wide.max_node_rows >= 8);
+    }
+}

@@ -2,12 +2,22 @@
 //! shared level plan.
 //!
 //! [`LevelSolver`] preprocesses a matrix once (level sets, per-level
-//! max-degree, gather layout); a [`SolverBackend`] then executes the plan
-//! for each right-hand side:
+//! max-degree, gather layout, plus a lazily-built medium-granularity
+//! [`MgdPlan`]); a [`SolverBackend`] then executes the plan for each
+//! right-hand side:
 //!
-//! - [`NativeBackend`] — the default: a pure-Rust `std::thread` worker
-//!   pool that chunks the rows of each level across threads. No FFI, no
-//!   build artifacts; this is what a clean `cargo build` serves with.
+//! - [`NativeBackend`] — the default: pure Rust, no FFI, no build
+//!   artifacts. It owns two schedulers selected by
+//!   [`SchedulerKind`] (`--scheduler level|mgd|auto`):
+//!   - `level` — the simple/reference path: a `std::thread` worker pool
+//!     with one barrier per level set and adaptive chunk sizing;
+//!   - `mgd` — the paper's medium-granularity dataflow on the serve
+//!     path: barrier-free node scheduling over [`MgdPlan`] with
+//!     work-stealing deques, counter-driven readiness, node-local
+//!     partial sums and ICR-ordered gathers ([`mgd_exec`]); bitwise
+//!     identical to the serial reference for any thread count;
+//!   - `auto` — picks per plan from level-width statistics (deep/narrow
+//!     DAGs go barrier-free).
 //! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled
 //!   JAX/Pallas level kernels from `artifacts/*.hlo.txt` and executes
 //!   them through PJRT. Python runs only at build time (`make
@@ -15,19 +25,29 @@
 //!   is on *and* the artifacts load.
 //!
 //! Construct backends through [`create_backend`]; the coordinator, CLI
-//! (`--backend native|pjrt|auto`) and bench harness all route through it.
+//! (`--backend native|pjrt|auto --scheduler level|mgd|auto`) and bench
+//! harness all route through it.
+//!
+//! The cross-thread memory-ordering contract shared by both native
+//! schedulers is documented below (from `runtime/atomics.md`):
+//!
+#![doc = include_str!("atomics.md")]
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
 pub mod level_exec;
+pub mod mgd_exec;
+pub mod mgd_plan;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub(crate) mod xla_shim;
 
 pub use backend::{create_backend, BackendConfig, BackendKind, SolverBackend};
 pub use level_exec::{LevelPlan, LevelSolver};
-pub use native::{NativeBackend, NativeConfig, NativeStats};
+pub use mgd_exec::MgdExecStats;
+pub use mgd_plan::{MgdPlan, MgdPlanConfig};
+pub use native::{MgdStats, NativeBackend, NativeConfig, NativeStats, SchedulerKind};
 
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;

@@ -1,13 +1,19 @@
-//! Native pure-Rust solver backend: a `std::thread` worker pool executing
-//! the precomputed level plans on the host CPU.
+//! Native pure-Rust solver backend with two schedulers over the shared
+//! plans: the **level** scheduler (the simple/reference path — a
+//! `std::thread` worker pool with one barrier per level set) and the
+//! **mgd** scheduler (barrier-free medium-granularity node scheduling,
+//! [`mgd_exec`](super::mgd_exec)). [`SchedulerKind::Auto`] picks per plan
+//! from its level-width statistics: deep/narrow DAGs — where barriers
+//! serialize everything — go to `mgd`, wide/shallow ones to `level`.
 //!
-//! Execution mirrors the structure of the PJRT level kernels so both
-//! backends share the plan layout and the numeric contract:
+//! The level scheduler mirrors the structure of the PJRT level kernels so
+//! both backends share the plan layout and the numeric contract:
 //!
-//! - rows within a level are independent, so a level whose row count
-//!   exceeds [`NativeConfig::chunk_rows`] is chunked across the pool
-//!   (chunks are assigned round-robin, making thread engagement
-//!   deterministic); smaller levels run inline on the calling thread;
+//! - rows within a level are independent; a level is cut into chunks
+//!   sized adaptively from its width and the worker count (never below
+//!   [`NativeConfig::chunk_rows`], never more than `2 × threads` chunks),
+//!   assigned round-robin so thread engagement stays deterministic;
+//!   levels that fit one chunk run inline on the calling thread;
 //! - each row gathers its `(cols, vals)` slices once and reuses the gather
 //!   across every RHS of a multi-RHS batch;
 //! - the first [`NativeConfig::edge_budget`] edges of a row take the
@@ -17,28 +23,74 @@
 //!   the same carry code path on both backends.
 //!
 //! `x` is shared across threads as `f32` bits in `AtomicU32` slots with
-//! relaxed ordering; the per-level completion channel provides the
-//! happens-before edge between levels, so dependent reads always observe
-//! the writes of earlier levels.
+//! relaxed ordering; the happens-before edges come from the scheduler
+//! (the level barrier here, the dependency counters in `mgd_exec`) — see
+//! `runtime/atomics.md` for the full protocol.
 
 use super::backend::SolverBackend;
 use super::level_exec::{LevelPlan, LevelSolver};
+use super::mgd_exec;
+use super::mgd_plan::MgdPlanConfig;
 use crate::matrix::CsrMatrix;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::str::FromStr;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+/// Which native scheduler executes the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Pick per plan by level-width statistics (deep/narrow → `Mgd`,
+    /// wide/shallow → `Level`).
+    Auto,
+    /// One barrier per level set (the simple/reference scheduler).
+    Level,
+    /// Barrier-free medium-granularity node scheduling with work stealing.
+    Mgd,
+}
+
+impl FromStr for SchedulerKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "level" => Ok(Self::Level),
+            "mgd" => Ok(Self::Mgd),
+            other => bail!("unknown scheduler {other:?} (expected level|mgd|auto)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::Level => "level",
+            Self::Mgd => "mgd",
+        })
+    }
+}
+
 /// Tuning knobs for the native executor.
 #[derive(Debug, Clone, Copy)]
 pub struct NativeConfig {
-    /// Worker threads; `0` = one per available CPU (capped at 8).
+    /// Worker threads; `0` = one per available CPU (the full
+    /// `available_parallelism`, overridable via the `MGD_NATIVE_THREADS`
+    /// environment variable). An explicit non-zero value always wins.
     pub threads: usize,
-    /// Rows per parallel work item; levels at or below this size run inline.
+    /// Minimum rows per parallel work item of the level scheduler; the
+    /// effective chunk grows with level width so one level never
+    /// dispatches more than `2 × threads` chunks. Levels that fit one
+    /// chunk run inline.
     pub chunk_rows: usize,
-    /// Edges per row on the budgeted MAC path; overflow edges take the
-    /// serial carry (mirrors the compiled kernels' edge budget).
+    /// Edges per row on the budgeted MAC path of the level scheduler;
+    /// overflow edges take the serial carry (mirrors the compiled
+    /// kernels' edge budget).
     pub edge_budget: usize,
+    /// Scheduler choice (`auto` resolves per plan).
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for NativeConfig {
@@ -47,8 +99,48 @@ impl Default for NativeConfig {
             threads: 0,
             chunk_rows: 128,
             edge_budget: 32,
+            scheduler: SchedulerKind::Auto,
         }
     }
+}
+
+/// Resolve the worker-thread count: explicit config wins, then the
+/// `MGD_NATIVE_THREADS` environment override, then the machine's full
+/// `available_parallelism` (the former hard cap of 8 is gone).
+fn resolve_threads(configured: usize) -> usize {
+    resolve_threads_from(
+        configured,
+        std::env::var("MGD_NATIVE_THREADS").ok().as_deref(),
+    )
+}
+
+/// [`resolve_threads`] with the environment override injected (testable
+/// without mutating process-global env, which races with concurrent
+/// `env::var` readers).
+fn resolve_threads_from(configured: usize, env_override: Option<&str>) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    if let Some(s) = env_override {
+        if let Ok(v) = s.trim().parse::<usize>() {
+            if v > 0 {
+                return v;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+}
+
+/// Effective rows-per-chunk for one level: at least the configured
+/// minimum, and large enough that the level yields at most `2 × threads`
+/// chunks — enough slack for load balance, no pathological 1-row chunks
+/// on narrow levels.
+fn adaptive_chunk(level_width: usize, min_chunk: usize, threads: usize) -> usize {
+    min_chunk
+        .max(level_width.div_ceil(2 * threads.max(1)))
+        .max(1)
 }
 
 /// Execution counters recorded by the native backend.
@@ -129,37 +221,57 @@ impl Drop for WorkerPool {
     }
 }
 
-/// The native parallel level executor.
+/// Counters of the barrier-free `mgd` scheduler since construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MgdStats {
+    /// Solves executed through the MGD scheduler.
+    pub solves: u64,
+    /// Medium nodes executed in total.
+    pub nodes_executed: u64,
+    /// Nodes obtained by work stealing.
+    pub steals: u64,
+}
+
+/// The native solver backend (level or mgd scheduler).
 pub struct NativeBackend {
     threads: usize,
     chunk_rows: usize,
     edge_budget: usize,
-    pool: Option<WorkerPool>,
+    scheduler: SchedulerKind,
+    /// Level-scheduler worker pool, spawned lazily on the first level
+    /// whose width actually needs it — a backend whose solves all resolve
+    /// to `mgd` (which brings its own scoped workers) never parks a pool.
+    pool: std::sync::OnceLock<WorkerPool>,
     parallel_levels: AtomicU64,
     chunks_dispatched: AtomicU64,
+    mgd_solves: AtomicU64,
+    mgd_nodes: AtomicU64,
+    mgd_steals: AtomicU64,
 }
 
 impl NativeBackend {
-    /// Build the backend and spawn its worker pool.
+    /// Build the backend (cheap: worker pools are spawned on demand).
     pub fn new(cfg: NativeConfig) -> Self {
-        let threads = if cfg.threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(2)
-                .min(8)
-        } else {
-            cfg.threads
-        };
+        let threads = resolve_threads(cfg.threads);
         let chunk_rows = cfg.chunk_rows.max(1);
-        let pool = (threads > 1).then(|| WorkerPool::new(threads));
         Self {
             threads,
             chunk_rows,
             edge_budget: cfg.edge_budget.max(1),
-            pool,
+            scheduler: cfg.scheduler,
+            pool: std::sync::OnceLock::new(),
             parallel_levels: AtomicU64::new(0),
             chunks_dispatched: AtomicU64::new(0),
+            mgd_solves: AtomicU64::new(0),
+            mgd_nodes: AtomicU64::new(0),
+            mgd_steals: AtomicU64::new(0),
         }
+    }
+
+    /// The level scheduler's pool: `None` in single-thread configs, else
+    /// spawned on first use and reused for the backend's lifetime.
+    fn level_pool(&self) -> Option<&WorkerPool> {
+        (self.threads > 1).then(|| self.pool.get_or_init(|| WorkerPool::new(self.threads)))
     }
 
     /// Worker threads backing this instance.
@@ -167,19 +279,68 @@ impl NativeBackend {
         self.threads
     }
 
-    /// Execution counters since construction.
+    /// The configured scheduler (possibly `Auto`).
+    pub fn scheduler(&self) -> SchedulerKind {
+        self.scheduler
+    }
+
+    /// The scheduler `Auto` resolves to for `plan`: barrier-free `mgd`
+    /// when the average level is too narrow to keep the workers busy
+    /// between barriers, the `level` path otherwise.
+    pub fn resolve_scheduler(&self, plan: &LevelSolver) -> SchedulerKind {
+        match self.scheduler {
+            SchedulerKind::Auto => {
+                let avg_width = plan.n().max(1) / plan.num_levels().max(1);
+                if avg_width < 4 * self.threads.max(1) {
+                    SchedulerKind::Mgd
+                } else {
+                    SchedulerKind::Level
+                }
+            }
+            pinned => pinned,
+        }
+    }
+
+    /// Level-scheduler execution counters since construction.
     pub fn stats(&self) -> NativeStats {
         NativeStats {
             parallel_levels: self.parallel_levels.load(Ordering::Relaxed),
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
-            workers_engaged: self.pool.as_ref().map_or(0, WorkerPool::workers_engaged),
+            workers_engaged: self.pool.get().map_or(0, WorkerPool::workers_engaged),
         }
     }
 
-    /// Shared scalar/batched execution: solve every RHS in `bs` level by
-    /// level. `r = 1` is the scalar path. Takes the batch by value so each
-    /// solve pays exactly one staging copy (into the shared `Arc`), never
-    /// two.
+    /// MGD-scheduler execution counters since construction.
+    pub fn mgd_stats(&self) -> MgdStats {
+        MgdStats {
+            solves: self.mgd_solves.load(Ordering::Relaxed),
+            nodes_executed: self.mgd_nodes.load(Ordering::Relaxed),
+            steals: self.mgd_steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Barrier-free path: execute the plan's cached
+    /// [`MgdPlan`](super::mgd_plan::MgdPlan) (built on first use, sized by
+    /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute`]. Borrows the
+    /// RHS views — no staging copy on this path.
+    fn execute_mgd<B: AsRef<[f32]> + Sync>(
+        &self,
+        plan: &LevelSolver,
+        bs: &[B],
+    ) -> Result<Vec<Vec<f32>>> {
+        let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
+        let mgd = plan.mgd_plan(cfg);
+        let (xs, stats) = mgd_exec::execute(&mgd, bs, self.threads)?;
+        self.mgd_solves.fetch_add(1, Ordering::Relaxed);
+        self.mgd_nodes.fetch_add(stats.nodes_executed, Ordering::Relaxed);
+        self.mgd_steals.fetch_add(stats.steals, Ordering::Relaxed);
+        Ok(xs)
+    }
+
+    /// Level-scheduler execution, scalar (`r = 1`) or batched. Takes the
+    /// batch by value so each solve pays exactly one staging copy (into
+    /// the shared `Arc`), never two; the mgd path never comes through
+    /// here — `solve`/`solve_multi` dispatch before staging.
     fn execute(&self, plan: &LevelSolver, bs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let matrix = plan.matrix_arc();
         let plans = plan.plans_arc();
@@ -201,10 +362,13 @@ impl NativeBackend {
         let (done_tx, done_rx) = mpsc::channel::<bool>();
         for li in 0..plans.len() {
             let rows_len = plans[li].rows.len();
-            let nchunks = rows_len.div_ceil(self.chunk_rows);
-            let pool = match &self.pool {
-                Some(pool) if nchunks >= 2 => pool,
-                _ => {
+            let chunk = adaptive_chunk(rows_len, self.chunk_rows, self.threads);
+            let nchunks = rows_len.div_ceil(chunk);
+            // Only levels that actually split reach for the pool, so the
+            // lazy spawn happens on the first genuinely parallel level.
+            let pool = match (nchunks >= 2).then(|| self.level_pool()).flatten() {
+                Some(pool) => pool,
+                None => {
                     run_chunk(
                         &matrix,
                         &plans[li],
@@ -218,8 +382,8 @@ impl NativeBackend {
                 }
             };
             for c in 0..nchunks {
-                let lo = c * self.chunk_rows;
-                let hi = (lo + self.chunk_rows).min(rows_len);
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(rows_len);
                 let matrix = Arc::clone(&matrix);
                 let plans = Arc::clone(&plans);
                 let bs_shared = Arc::clone(&bs_shared);
@@ -303,11 +467,21 @@ impl SolverBackend for NativeBackend {
     }
 
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
-        let mut out = self.execute(plan, vec![b.to_vec()])?;
+        // Dispatch before staging: the barrier-free path borrows the RHS
+        // (and validates it itself), skipping the copy the level path
+        // needs for its shared-ownership staging.
+        let mut out = if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
+            self.execute_mgd(plan, &[b])?
+        } else {
+            self.execute(plan, vec![b.to_vec()])?
+        };
         Ok(out.pop().expect("one RHS in, one solution out"))
     }
 
     fn solve_multi(&self, plan: &LevelSolver, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
+            return self.execute_mgd(plan, bs);
+        }
         self.execute(plan, bs.to_vec())
     }
 }
@@ -318,10 +492,13 @@ mod tests {
     use crate::matrix::gen::{self, GenSeed};
     use crate::matrix::triangular::assert_close_to_reference;
 
+    /// Level-scheduler backend (pinned, so these tests keep exercising
+    /// the chunked barrier path regardless of what `Auto` would pick).
     fn backend(threads: usize, chunk_rows: usize) -> NativeBackend {
         NativeBackend::new(NativeConfig {
             threads,
             chunk_rows,
+            scheduler: SchedulerKind::Level,
             ..NativeConfig::default()
         })
     }
@@ -332,16 +509,7 @@ mod tests {
     /// backend matches the serial reference to 1e-3.
     #[test]
     fn native_backend_matches_reference() {
-        let cases: Vec<(&str, crate::matrix::CsrMatrix)> = vec![
-            ("banded", gen::banded(500, 6, 0.5, GenSeed(1))),
-            ("chain", gen::chain(120, GenSeed(2))),
-            ("circuit", gen::circuit(600, 5, 0.8, GenSeed(3))),
-            ("grid2d", gen::grid2d(20, 20, true, GenSeed(4))),
-            ("shallow", gen::shallow(900, 0.4, GenSeed(5))),
-            ("random_lower", gen::random_lower(400, 2000, GenSeed(6))),
-            ("power_law", gen::power_law(400, 1.1, 120, GenSeed(7))),
-            ("factor_like", gen::factor_like(500, 8, 4, GenSeed(8))),
-        ];
+        let cases = gen::test_suite();
         // Small chunks so even modest levels split across the pool.
         let nb = backend(4, 16);
         for (name, m) in &cases {
@@ -414,6 +582,100 @@ mod tests {
         let m = gen::chain(10, GenSeed(14));
         let plan = LevelSolver::new(&m);
         assert!(nb.solve_multi(&plan, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn scheduler_kind_parses_and_displays() {
+        assert_eq!("level".parse::<SchedulerKind>().unwrap(), SchedulerKind::Level);
+        assert_eq!("mgd".parse::<SchedulerKind>().unwrap(), SchedulerKind::Mgd);
+        assert_eq!("auto".parse::<SchedulerKind>().unwrap(), SchedulerKind::Auto);
+        assert!("coarse".parse::<SchedulerKind>().is_err());
+        for k in [SchedulerKind::Auto, SchedulerKind::Level, SchedulerKind::Mgd] {
+            assert_eq!(k.to_string().parse::<SchedulerKind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn auto_picks_mgd_on_narrow_and_level_on_wide() {
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            ..NativeConfig::default()
+        });
+        assert_eq!(nb.scheduler(), SchedulerKind::Auto);
+        // A chain has average level width 1 — barrier-dominated.
+        let chain = LevelSolver::new(&gen::chain(200, GenSeed(31)));
+        assert_eq!(nb.resolve_scheduler(&chain), SchedulerKind::Mgd);
+        // A shallow DAG has a few very wide levels — barriers are cheap.
+        let shallow = LevelSolver::new(&gen::shallow(2000, 0.4, GenSeed(32)));
+        assert_eq!(nb.resolve_scheduler(&shallow), SchedulerKind::Level);
+        // Pinned schedulers resolve to themselves.
+        for pin in [SchedulerKind::Level, SchedulerKind::Mgd] {
+            let nb = NativeBackend::new(NativeConfig {
+                threads: 4,
+                scheduler: pin,
+                ..NativeConfig::default()
+            });
+            assert_eq!(nb.resolve_scheduler(&chain), pin);
+            assert_eq!(nb.resolve_scheduler(&shallow), pin);
+        }
+    }
+
+    #[test]
+    fn mgd_scheduler_is_bitwise_serial_through_the_backend() {
+        use crate::matrix::triangular::solve_serial;
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Mgd,
+            ..NativeConfig::default()
+        });
+        let m = gen::circuit(700, 5, 0.8, GenSeed(33));
+        let plan = LevelSolver::new(&m);
+        let bs: Vec<Vec<f32>> = (0..3)
+            .map(|k| (0..m.n).map(|i| ((i + k) % 7) as f32 - 3.0).collect())
+            .collect();
+        let xs = nb.solve_multi(&plan, &bs).unwrap();
+        for (b, x) in bs.iter().zip(&xs) {
+            let want = solve_serial(&m, b);
+            for i in 0..m.n {
+                assert_eq!(x[i].to_bits(), want[i].to_bits(), "row {i}");
+            }
+        }
+        let x0 = nb.solve(&plan, &bs[0]).unwrap();
+        let want = solve_serial(&m, &bs[0]);
+        for i in 0..m.n {
+            assert_eq!(x0[i].to_bits(), want[i].to_bits(), "scalar row {i}");
+        }
+        let stats = nb.mgd_stats();
+        assert_eq!(stats.solves, 2);
+        assert!(stats.nodes_executed > 0, "{stats:?}");
+        // The level-path counters stay untouched on the mgd path.
+        assert_eq!(nb.stats(), NativeStats::default());
+    }
+
+    #[test]
+    fn adaptive_chunk_bounds() {
+        // Never below the configured minimum.
+        assert_eq!(adaptive_chunk(10, 16, 4), 16);
+        // Wide levels grow the chunk so at most 2×threads chunks exist.
+        assert_eq!(adaptive_chunk(1000, 16, 4), 125);
+        assert!(1000usize.div_ceil(adaptive_chunk(1000, 16, 4)) <= 8);
+        // Degenerate inputs stay sane.
+        assert_eq!(adaptive_chunk(0, 1, 0), 1);
+        // A min_chunk of 1 no longer yields 1-row chunks on wide levels.
+        assert!(adaptive_chunk(1000, 1, 8) >= 1000 / 16);
+    }
+
+    #[test]
+    fn thread_resolution_prefers_explicit_then_env_then_cpus() {
+        assert_eq!(resolve_threads_from(5, None), 5);
+        // threads = 0 resolves to at least one worker with no 8-cap logic
+        // left in the path (the exact count is machine-dependent).
+        assert!(resolve_threads_from(0, None) >= 1);
+        assert_eq!(resolve_threads_from(0, Some("3")), 3);
+        assert_eq!(resolve_threads_from(2, Some("3")), 2); // explicit wins
+        // Garbage and zero fall through to the CPU count.
+        assert!(resolve_threads_from(0, Some("not-a-number")) >= 1);
+        assert!(resolve_threads_from(0, Some("0")) >= 1);
     }
 
     #[test]
