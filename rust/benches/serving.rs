@@ -1,0 +1,20 @@
+//! `cargo bench --bench serving` — persistent-pool vs per-solve-spawn
+//! serving latency on the barrier-free MGD path (emits
+//! BENCH_serving.json). Scale via MGD_BENCH_SCALE=small|full (default
+//! small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("serving", &scale) {
+        Ok(out) => {
+            println!("==== serving (scale={scale}) ====");
+            println!("{out}");
+            println!("[serving completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //! Two algorithm classes are measured natively on this host:
 //!
 //! - [`serial_gops`] — Algorithm 1, one thread (MKL's small-matrix path);
-//! - [`level_scheduled_gops`] — level scheduling with per-level barriers
+//! - [`level_scheduled`] — level scheduling with per-level barriers
 //!   (Anderson/Saad), the classic multicore SpTRSV.
 //!
 //! Absolute numbers differ from the paper's Xeon E5-2698v4 (different

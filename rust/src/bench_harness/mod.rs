@@ -12,6 +12,7 @@ pub mod fig11;
 pub mod fig9;
 pub mod report;
 pub mod schedulers;
+pub mod serving;
 pub mod tables;
 pub mod workloads;
 

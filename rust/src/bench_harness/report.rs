@@ -1,7 +1,7 @@
 //! Experiment runner used by the CLI and the `cargo bench` targets: maps an
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
-use super::{backends, fig10, fig11, fig9, schedulers, tables, workloads};
+use super::{backends, fig10, fig11, fig9, schedulers, serving, tables, workloads};
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
 
@@ -43,6 +43,19 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
                 json_path.display(),
             )
         }
+        "serving" => {
+            let serve_suite = serving::serving_suite(scale);
+            let (t, rows) = serving::serving_compare(&serve_suite)?;
+            let json_path = std::path::Path::new("BENCH_serving.json");
+            serving::write_json(json_path, &rows)?;
+            format!(
+                "{}\nparallel-workload geomean speedup (persistent pool over per-solve spawn): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                serving::parallel_geomean_speedup(&rows),
+                json_path.display(),
+            )
+        }
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -78,6 +91,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "table4",
     "backends",
     "schedulers",
+    "serving",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,307 @@
+//! Pool-reuse vs per-solve-spawn serving latency (`mgd bench serving`):
+//! per-solve latency of the barrier-free MGD path when the worker pool is
+//! a **persistent** backend pool (spawned once, parked between solves)
+//! versus when every solve constructs a fresh backend and therefore pays
+//! the thread-spawn cost — the regime PR 2 lived in with its per-solve
+//! `thread::scope`. Emits the machine-readable `BENCH_serving.json`
+//! artifact consumed by CI.
+//!
+//! The suite is deliberately **small**: spawn cost is a fixed tax of
+//! O(threads) × ~100 µs, so it dominates exactly on small
+//! latency-critical solves — the paper's repeated-solve serving regime.
+//! Wide workloads (node-level parallelism engages the pool) are the
+//! measurement; a serial chain control documents the clamping contract
+//! (no workers engaged → no spawns in either mode → speedup ≈ 1).
+//!
+//! Every timed configuration is verified **bitwise** against
+//! [`solve_serial`] first (the MGD contract), so the table cannot quietly
+//! report a fast-but-wrong runtime.
+
+use super::workloads::Workload;
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::triangular::solve_serial;
+use crate::runtime::{
+    LevelSolver, MgdPlanConfig, NativeBackend, NativeConfig, SchedulerKind, SolverBackend,
+};
+use crate::util::timing::bench_best;
+use crate::util::Table;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// Worker-thread count both modes run with (fixed so the artifact is
+/// comparable across machines with different core counts).
+pub const SERVING_THREADS: usize = 4;
+
+/// One workload's measurements (milliseconds per solve).
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Workload name (`serial_*` rows are the clamping control).
+    pub name: &'static str,
+    /// Matrix order.
+    pub n: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Medium nodes of the cached MGD plan.
+    pub nodes: usize,
+    /// Node-DAG width (worker parallelism the plan exposes).
+    pub par_width: usize,
+    /// Per-solve latency with a fresh backend (thread spawn) per solve.
+    pub spawn_ms: f64,
+    /// Per-solve latency on one persistent backend (parked pool).
+    pub pool_ms: f64,
+}
+
+impl ServeRow {
+    /// Speedup of the persistent pool over per-solve spawning
+    /// (> 1 = pool-reuse wins).
+    pub fn speedup(&self) -> f64 {
+        self.spawn_ms / self.pool_ms.max(1e-12)
+    }
+
+    /// Rows whose plan exposes worker parallelism — the rows the pool
+    /// can help; serial controls are excluded from the geomean.
+    pub fn is_parallel(&self) -> bool {
+        self.par_width > 1
+    }
+}
+
+/// Serving-latency workloads: wide shallow DAGs (small solves with real
+/// node parallelism) plus a serial chain control. `scale` ∈
+/// {"small", "full"} sizes the matrices.
+pub fn serving_suite(scale: &str) -> Vec<Workload> {
+    let f = if scale == "small" { 1 } else { 4 };
+    let mk = |name, matrix| Workload { name, matrix };
+    vec![
+        // Wide, tiny: the strongest spawn-dominated case.
+        mk("wide_small", gen::shallow(1000 * f, 0.3, GenSeed(301))),
+        // Wide, still small; more edges per node.
+        mk("wide_medium", gen::shallow(2500 * f, 0.4, GenSeed(302))),
+        // Denser scattered deps: heavier nodes, same shallow shape.
+        mk("scatter", gen::shallow(1600 * f, 0.7, GenSeed(303))),
+        // Serial control: a chain clamps to one worker, so neither mode
+        // spawns anything and the ratio documents the no-op overhead.
+        mk("serial_chain", gen::chain(1500 * f, GenSeed(304))),
+    ]
+}
+
+fn native_cfg() -> NativeConfig {
+    NativeConfig {
+        threads: SERVING_THREADS,
+        scheduler: SchedulerKind::Mgd,
+        ..NativeConfig::default()
+    }
+}
+
+/// Assert the backend's solve is bitwise equal to the serial reference.
+fn verify_bitwise(backend: &NativeBackend, plan: &LevelSolver, w: &Workload) -> Result<()> {
+    let b: Vec<f32> = (0..w.matrix.n).map(|i| (i % 7) as f32 - 3.0).collect();
+    let x = backend.solve(plan, &b)?;
+    let want = solve_serial(&w.matrix, &b);
+    for i in 0..w.matrix.n {
+        ensure!(
+            x[i].to_bits() == want[i].to_bits(),
+            "serving path not bitwise-serial on {} row {i}: {} vs {}",
+            w.name,
+            x[i],
+            want[i],
+        );
+    }
+    Ok(())
+}
+
+/// Measure one suite: per-solve latency with a persistent backend (pool
+/// parked between solves) vs a fresh backend per solve (spawn per solve).
+pub fn serving_compare(suite: &[Workload]) -> Result<(Table, Vec<ServeRow>)> {
+    let mut t = Table::new(vec![
+        "workload", "n", "nnz", "nodes", "width", "spawn ms", "pool ms", "speedup",
+    ]);
+    let mut rows = Vec::with_capacity(suite.len());
+    for w in suite {
+        let plan = LevelSolver::new(&w.matrix);
+        let b: Vec<f32> = (0..w.matrix.n).map(|i| ((i + 1) % 9) as f32 - 4.0).collect();
+        // Persistent mode: one backend for the whole loop; the warm solve
+        // spawns the pool and builds the cached MGD plan, so the timed
+        // region sees only park/wake costs.
+        let pooled = NativeBackend::new(native_cfg());
+        verify_bitwise(&pooled, &plan, w)?;
+        let mut err: Option<anyhow::Error> = None;
+        let pool_best = bench_best(
+            || match pooled.solve(&plan, &b) {
+                Ok(x) => x,
+                Err(e) => {
+                    err.get_or_insert(e);
+                    Vec::new()
+                }
+            },
+            2,
+            Duration::from_millis(20),
+        );
+        if let Some(e) = err {
+            return Err(e.context(format!("pooled timing loop failed on {}", w.name)));
+        }
+        // Spawn mode: every iteration constructs (and drops) a backend,
+        // paying lazy pool spawn during the solve and the join on drop —
+        // the per-solve-spawn lifecycle the persistent pool replaces.
+        let mut err: Option<anyhow::Error> = None;
+        let spawn_best = bench_best(
+            || {
+                let fresh = NativeBackend::new(native_cfg());
+                match fresh.solve(&plan, &b) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        err.get_or_insert(e);
+                        Vec::new()
+                    }
+                }
+            },
+            2,
+            Duration::from_millis(20),
+        );
+        if let Some(e) = err {
+            return Err(e.context(format!("spawn timing loop failed on {}", w.name)));
+        }
+        // The plan was cached by the verify solve; read its shape for the
+        // report (same auto sizing both modes used).
+        let mgd = plan.mgd_plan(MgdPlanConfig::auto(
+            plan.n(),
+            plan.num_levels(),
+            SERVING_THREADS,
+        ));
+        let row = ServeRow {
+            name: w.name,
+            n: w.matrix.n,
+            nnz: w.matrix.nnz(),
+            nodes: mgd.num_nodes(),
+            par_width: mgd.par_width,
+            spawn_ms: spawn_best.as_secs_f64() * 1e3,
+            pool_ms: pool_best.as_secs_f64() * 1e3,
+        };
+        t.row(vec![
+            row.name.to_string(),
+            row.n.to_string(),
+            row.nnz.to_string(),
+            row.nodes.to_string(),
+            row.par_width.to_string(),
+            format!("{:.4}", row.spawn_ms),
+            format!("{:.4}", row.pool_ms),
+            format!("{:.2}x", row.speedup()),
+        ]);
+        rows.push(row);
+    }
+    Ok((t, rows))
+}
+
+/// Geometric-mean pool-reuse speedup over the parallel rows (serial
+/// controls excluded — neither mode spawns there).
+pub fn parallel_geomean_speedup(rows: &[ServeRow]) -> f64 {
+    let par: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.is_parallel())
+        .map(|r| r.speedup())
+        .collect();
+    if par.is_empty() {
+        return 1.0;
+    }
+    (par.iter().map(|s| s.ln()).sum::<f64>() / par.len() as f64).exp()
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[ServeRow]) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"serving\",\n");
+    out.push_str(&format!("  \"threads\": {SERVING_THREADS},\n"));
+    out.push_str(&format!(
+        "  \"parallel_geomean_speedup\": {:.4},\n  \"rows\": [\n",
+        parallel_geomean_speedup(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"n\": {}, \"nnz\": {}, \"nodes\": {}, \
+             \"par_width\": {}, \"parallel\": {}, \"spawn_ms\": {:.6}, \
+             \"pool_ms\": {:.6}, \"speedup\": {:.4}}}{}\n",
+            r.name,
+            r.n,
+            r.nnz,
+            r.nodes,
+            r.par_width,
+            r.is_parallel(),
+            r.spawn_ms,
+            r.pool_ms,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_serving.json`).
+pub fn write_json(path: &Path, rows: &[ServeRow]) -> Result<()> {
+    std::fs::write(path, render_json(rows)).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_suite() -> Vec<Workload> {
+        vec![
+            Workload {
+                name: "wide_tiny",
+                matrix: gen::shallow(600, 0.4, GenSeed(311)),
+            },
+            Workload {
+                name: "serial_tiny",
+                matrix: gen::chain(300, GenSeed(312)),
+            },
+        ]
+    }
+
+    #[test]
+    fn compare_runs_verifies_and_classifies() {
+        let (t, rows) = serving_compare(&tiny_suite()).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("spawn ms"));
+        assert!(s.contains("pool ms"));
+        assert!(rows[0].is_parallel(), "{rows:?}");
+        assert!(!rows[1].is_parallel(), "chain must clamp serial: {rows:?}");
+        for r in &rows {
+            assert!(r.spawn_ms > 0.0 && r.pool_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let (_, rows) = serving_compare(&tiny_suite()).unwrap();
+        let j = render_json(&rows);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"serving\""));
+        assert!(j.contains("\"parallel_geomean_speedup\""));
+        assert!(j.contains("\"workload\": \"wide_tiny\""));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn serving_suite_shapes_are_as_labeled() {
+        let suite = serving_suite("small");
+        assert_eq!(suite.len(), 4);
+        for w in &suite {
+            w.matrix.validate().unwrap();
+            let plan = LevelSolver::new(&w.matrix);
+            let mgd = plan.mgd_plan(MgdPlanConfig::auto(
+                plan.n(),
+                plan.num_levels(),
+                SERVING_THREADS,
+            ));
+            if w.name.starts_with("serial_") {
+                assert_eq!(mgd.par_width, 1, "{}", w.name);
+            } else {
+                assert!(mgd.par_width > 1, "{}: no parallelism to measure", w.name);
+            }
+        }
+    }
+}

@@ -5,7 +5,9 @@
 //! mgd sim      <matrix>                                 — compile + simulate + verify
 //! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto]
 //!                        [--scheduler level|mgd|auto] [--artifacts DIR]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|all>
+//! mgd serve    --matrices <spec,spec,...> [--shards N] [--workers N]
+//!                        [--requests N] [--backend ...] [--scheduler ...]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|all>
 //!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
@@ -13,12 +15,13 @@
 use crate::arch::ArchConfig;
 use crate::bench_harness::report;
 use crate::compiler::{compile, CompilerConfig};
-use crate::coordinator::{ServiceConfig, SolveService};
+use crate::coordinator::{ServiceConfig, ShardedServiceConfig, ShardedSolveService, SolveService};
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
 use crate::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
 use crate::sim::Accelerator;
+use crate::util::Table;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 
@@ -51,6 +54,30 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter()
         .position(|a| a == flag)
         .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Backend selection shared by `solve` and `serve`: `--backend`,
+/// `--scheduler` and `--artifacts` with the same defaults.
+fn backend_config(args: &[String]) -> Result<BackendConfig> {
+    let artifacts = flag_value(args, "--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let kind: BackendKind = flag_value(args, "--backend")
+        .as_deref()
+        .unwrap_or("auto")
+        .parse()?;
+    let scheduler: SchedulerKind = flag_value(args, "--scheduler")
+        .as_deref()
+        .unwrap_or("auto")
+        .parse()?;
+    Ok(BackendConfig {
+        kind,
+        artifacts,
+        native: NativeConfig {
+            scheduler,
+            ..NativeConfig::default()
+        },
+    })
 }
 
 /// Entry point used by `main`.
@@ -109,26 +136,8 @@ fn run_inner() -> Result<()> {
         }
         "solve" => {
             let m = load_matrix(args.get(1).context("matrix argument")?)?;
-            let artifacts = flag_value(&args, "--artifacts")
-                .map(PathBuf::from)
-                .unwrap_or_else(|| PathBuf::from("artifacts"));
-            let kind: BackendKind = flag_value(&args, "--backend")
-                .as_deref()
-                .unwrap_or("auto")
-                .parse()?;
-            let scheduler: SchedulerKind = flag_value(&args, "--scheduler")
-                .as_deref()
-                .unwrap_or("auto")
-                .parse()?;
             let cfg = ServiceConfig {
-                backend: BackendConfig {
-                    kind,
-                    artifacts,
-                    native: NativeConfig {
-                        scheduler,
-                        ..NativeConfig::default()
-                    },
-                },
+                backend: backend_config(&args)?,
                 ..ServiceConfig::default()
             };
             let svc = SolveService::start(&m, cfg)?;
@@ -146,6 +155,80 @@ fn run_inner() -> Result<()> {
                 resp.metrics.cycles,
                 resp.metrics.gops,
                 resp.metrics.gops_per_w,
+            );
+            svc.shutdown();
+        }
+        "serve" => {
+            let specs = flag_value(&args, "--matrices")
+                .context("serve needs --matrices <spec,spec,...> (each a path or gen:...)")?;
+            let shards: usize = flag_value(&args, "--shards")
+                .as_deref()
+                .unwrap_or("2")
+                .parse()
+                .context("--shards")?;
+            let workers: usize = flag_value(&args, "--workers")
+                .as_deref()
+                .unwrap_or("2")
+                .parse()
+                .context("--workers")?;
+            let requests: usize = flag_value(&args, "--requests")
+                .as_deref()
+                .unwrap_or("32")
+                .parse()
+                .context("--requests")?;
+            let cfg = ShardedServiceConfig {
+                shards,
+                workers_per_shard: workers,
+                backend: backend_config(&args)?,
+                ..ShardedServiceConfig::default()
+            };
+            let svc = ShardedSolveService::start(cfg)?;
+            let mut keys: Vec<(String, usize)> = Vec::new();
+            for spec in specs.split(',').filter(|s| !s.is_empty()) {
+                let m = load_matrix(spec)?;
+                let entry = svc.register(spec, &m)?;
+                println!(
+                    "registered {spec:?} (n={}, nnz={}) on shard {}",
+                    m.n,
+                    m.nnz(),
+                    entry.shard()
+                );
+                keys.push((spec.to_string(), m.n));
+            }
+            if keys.is_empty() {
+                bail!("--matrices listed no matrix specs");
+            }
+            // Synthetic request stream, round-robin across the registered
+            // matrices; every reply is awaited (and its error surfaced).
+            let mut rxs = Vec::with_capacity(requests);
+            for i in 0..requests {
+                let (key, n) = &keys[i % keys.len()];
+                rxs.push(svc.submit(key, vec![1.0f32; *n])?);
+            }
+            for rx in rxs {
+                rx.recv().context("worker dropped")??;
+            }
+            let mut t = Table::new(vec!["shard", "served", "errors", "rounds", "solve ms"]);
+            for s in svc.shard_stats() {
+                t.row(vec![
+                    s.shard.to_string(),
+                    s.served.to_string(),
+                    s.errors.to_string(),
+                    s.batched_rounds.to_string(),
+                    format!("{:.3}", s.solve_seconds * 1e3),
+                ]);
+            }
+            println!("{}", t.render());
+            let agg = svc.stats();
+            println!(
+                "backend {}; {} matrices on {} shards; {} served, {} errors, {} rounds, {:.3} ms in backend",
+                svc.backend_name(),
+                svc.registry().len(),
+                svc.num_shards(),
+                agg.served,
+                agg.errors,
+                agg.batched_rounds,
+                agg.solve_seconds * 1e3,
             );
             svc.shutdown();
         }
@@ -185,6 +268,9 @@ fn print_usage() {
          \x20 mgd sim     <matrix>             compile + cycle-accurate sim + verify\n\
          \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
+         \x20 mgd serve   --matrices <spec,spec,...> [--shards N] [--workers N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--backend ...] [--scheduler ...]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
@@ -193,7 +279,7 @@ fn print_usage() {
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
          \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
-         \x20 backends schedulers"
+         \x20 backends schedulers serving"
     );
 }
 
@@ -244,6 +330,40 @@ mod tests {
             .unwrap();
         assert_eq!(scheduler, SchedulerKind::Auto);
         assert!("coarse".parse::<SchedulerKind>().is_err());
+    }
+
+    #[test]
+    fn serve_flags_parse_with_defaults() {
+        let args: Vec<String> = [
+            "serve",
+            "--matrices",
+            "gen:chain:50:1,gen:banded:100:2",
+            "--shards",
+            "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(
+            flag_value(&args, "--matrices").unwrap(),
+            "gen:chain:50:1,gen:banded:100:2"
+        );
+        let shards: usize = flag_value(&args, "--shards")
+            .as_deref()
+            .unwrap_or("2")
+            .parse()
+            .unwrap();
+        assert_eq!(shards, 3);
+        // Unset flags fall back to the documented defaults.
+        let workers: usize = flag_value(&args, "--workers")
+            .as_deref()
+            .unwrap_or("2")
+            .parse()
+            .unwrap();
+        assert_eq!(workers, 2);
+        let cfg = backend_config(&args).unwrap();
+        assert_eq!(cfg.kind, BackendKind::Auto);
+        assert_eq!(cfg.native.scheduler, SchedulerKind::Auto);
     }
 
     #[test]

@@ -1,7 +1,11 @@
-//! Per-matrix accelerator metrics attached to every solve response.
+//! Metrics of the coordinator layer: per-matrix accelerator metrics
+//! attached to every solve response, plus the live per-shard serving
+//! counters of the sharded service and their aggregate view.
 
 use crate::arch::ArchConfig;
 use crate::sim::{EnergyModel, RunStats};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Metrics derived from one cycle-accurate simulation of the compiled
 /// program (shared across all RHS requests for the same matrix).
@@ -41,9 +45,117 @@ impl SolveMetrics {
     }
 }
 
+/// Live counters of one shard, shared (behind an `Arc`) between the
+/// shard's worker threads and the service handle. All fields are atomics
+/// updated with `Relaxed` ordering: they are monotonic telemetry, never a
+/// synchronization edge.
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    served: AtomicU64,
+    errors: AtomicU64,
+    batched_rounds: AtomicU64,
+    solve_nanos: AtomicU64,
+}
+
+impl ShardCounters {
+    /// Record one dispatch round: `served` successful replies, `errors`
+    /// error replies, and the wall-clock time the round spent in the
+    /// numeric backend.
+    pub fn record_round(&self, served: u64, errors: u64, solve_time: Duration) {
+        self.served.fetch_add(served, Ordering::Relaxed);
+        self.errors.fetch_add(errors, Ordering::Relaxed);
+        self.batched_rounds.fetch_add(1, Ordering::Relaxed);
+        self.solve_nanos
+            .fetch_add(solve_time.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Successful replies so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time snapshot, tagged with the shard's index.
+    pub fn snapshot(&self, shard: usize) -> ShardStats {
+        ShardStats {
+            shard,
+            served: self.served.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batched_rounds: self.batched_rounds.load(Ordering::Relaxed),
+            solve_seconds: self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Point-in-time serving statistics of one shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardStats {
+    /// Shard index within the service.
+    pub shard: usize,
+    /// Requests answered successfully.
+    pub served: u64,
+    /// Requests answered with an error reply.
+    pub errors: u64,
+    /// Backend dispatches executed: a multi-request same-matrix group
+    /// riding the backend's multi-RHS path counts once; scalar solves
+    /// count one each.
+    pub batched_rounds: u64,
+    /// Cumulative wall-clock seconds the shard spent in the numeric
+    /// backend.
+    pub solve_seconds: f64,
+}
+
+/// Aggregate serving statistics across every shard of a service.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingStats {
+    /// Number of shards aggregated.
+    pub shards: usize,
+    /// Total successful replies.
+    pub served: u64,
+    /// Total error replies.
+    pub errors: u64,
+    /// Total dispatch rounds.
+    pub batched_rounds: u64,
+    /// Total backend wall-clock seconds, summed over shards (shards solve
+    /// concurrently, so this can exceed elapsed wall time).
+    pub solve_seconds: f64,
+}
+
+impl ServingStats {
+    /// Sum per-shard snapshots into the service-wide view.
+    pub fn aggregate(per_shard: &[ShardStats]) -> Self {
+        Self {
+            shards: per_shard.len(),
+            served: per_shard.iter().map(|s| s.served).sum(),
+            errors: per_shard.iter().map(|s| s.errors).sum(),
+            batched_rounds: per_shard.iter().map(|s| s.batched_rounds).sum(),
+            solve_seconds: per_shard.iter().map(|s| s.solve_seconds).sum(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_counters_accumulate_and_aggregate() {
+        let a = ShardCounters::default();
+        a.record_round(3, 0, Duration::from_millis(2));
+        a.record_round(1, 1, Duration::from_millis(1));
+        let b = ShardCounters::default();
+        b.record_round(5, 0, Duration::from_millis(4));
+        let snaps = [a.snapshot(0), b.snapshot(1)];
+        assert_eq!(snaps[0].served, 4);
+        assert_eq!(snaps[0].errors, 1);
+        assert_eq!(snaps[0].batched_rounds, 2);
+        assert_eq!(snaps[1].shard, 1);
+        let agg = ServingStats::aggregate(&snaps);
+        assert_eq!(agg.shards, 2);
+        assert_eq!(agg.served, 9);
+        assert_eq!(agg.errors, 1);
+        assert_eq!(agg.batched_rounds, 3);
+        assert!((agg.solve_seconds - 0.007).abs() < 1e-6);
+    }
 
     #[test]
     fn derives_consistent_metrics() {

@@ -1,24 +1,43 @@
-//! L3 coordinator: the multi-RHS solve service.
+//! L3 coordinator: the sharded multi-matrix solve service.
 //!
 //! In the paper's motivating applications (transient circuit simulation,
 //! preconditioned iterative solvers) the same triangular factor is solved
-//! against a *stream* of right-hand sides. The service compiles the matrix
-//! once (accelerator program + shared level plan), then serves RHS requests
-//! from worker threads with batched dispatch:
+//! against a *stream* of right-hand sides — and a serving deployment
+//! hosts many such factors at once. The coordinator amortizes all
+//! per-matrix work at **registration** and keeps the request path
+//! setup-free:
 //!
-//! - numerics run on the configured [`crate::runtime::SolverBackend`] —
-//!   the native parallel level executor by default, the PJRT kernels when
-//!   the `pjrt` feature is enabled and its artifacts load;
-//! - per-request accelerator metrics (cycles, energy) come from the
-//!   cycle-accurate simulator, run once per matrix — the schedule is
-//!   RHS-independent, so the cost model is shared across requests.
+//! - [`MatrixRegistry`] compiles each registered matrix once (accelerator
+//!   program + cycle-accurate simulation for the shared cost model +
+//!   [`crate::runtime::LevelSolver`] plan with its cached MGD plan) and
+//!   pins it to a shard round-robin;
+//! - [`ShardedSolveService`] routes each [`SolveRequest`] by `matrix_key`
+//!   to the owning shard, whose workers batch same-matrix requests
+//!   through the configured [`crate::runtime::SolverBackend`] — shared
+//!   across shards by default, so the native backend's **persistent MGD
+//!   worker pool** is spawned once and reused across every solve and
+//!   matrix;
+//! - per-shard [`ShardCounters`] roll up into service-wide
+//!   [`ServingStats`]; per-request accelerator metrics
+//!   ([`SolveMetrics`]) come from the one-time simulation.
+//!
+//! [`SolveService`] is the single-matrix facade over the same machinery
+//! (one shard, one registered matrix) used by `mgd solve` and the
+//! benches.
 //!
 //! Failures are loud: backend construction errors fail
-//! [`SolveService::start`], and per-request solver errors are replied to
-//! the requester instead of being dropped.
+//! [`ShardedSolveService::start`], registration errors fail
+//! [`ShardedSolveService::register`], unknown keys get an immediate error
+//! reply, and per-request solver errors are replied to the requester
+//! instead of being dropped.
 
 pub mod metrics;
+pub mod registry;
 pub mod service;
 
-pub use metrics::SolveMetrics;
-pub use service::{ServiceConfig, SolveRequest, SolveResponse, SolveService};
+pub use metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
+pub use registry::{MatrixRegistry, RegisteredMatrix};
+pub use service::{
+    ServiceConfig, ShardedServiceConfig, ShardedSolveService, SolveRequest, SolveResponse,
+    SolveService,
+};

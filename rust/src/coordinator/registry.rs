@@ -1,0 +1,254 @@
+//! Multi-matrix registry of the sharded serving runtime.
+//!
+//! The paper's accelerator amortizes all per-matrix preprocessing —
+//! clustering, ICR reordering, scheduling — across a stream of solves of
+//! the same structure. [`MatrixRegistry`] is that amortization boundary
+//! for the serving runtime: registering a matrix under a key compiles the
+//! accelerator program, runs the cycle-accurate simulation once (the
+//! shared cost model and double-entry check), builds the [`LevelSolver`]
+//! plan, and assigns the matrix to a shard. Every later request for that
+//! key only routes, gathers and executes — no per-request setup of any
+//! kind.
+//!
+//! Shard assignment is round-robin in registration order, which spreads
+//! matrices evenly across the service's shards without any knowledge of
+//! the request mix; the entry records its shard so routing is a single
+//! map lookup.
+
+use super::metrics::SolveMetrics;
+use crate::compiler::{compile, CompilerConfig, Program};
+use crate::matrix::CsrMatrix;
+use crate::runtime::LevelSolver;
+use crate::sim::Accelerator;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One registered matrix: everything the serve path needs, prepared once.
+pub struct RegisteredMatrix {
+    key: String,
+    shard: usize,
+    solver: Arc<LevelSolver>,
+    program: Arc<Program>,
+    metrics: SolveMetrics,
+    served: AtomicU64,
+}
+
+impl RegisteredMatrix {
+    /// The registration key requests route by.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Index of the shard that owns this matrix's requests.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The shared solve plan (level sets + cached medium-granularity
+    /// plan), built once at registration.
+    pub fn solver(&self) -> &Arc<LevelSolver> {
+        &self.solver
+    }
+
+    /// The compiled accelerator program (inspection, benches).
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// Per-solve accelerator metrics from the one-time simulation,
+    /// attached to every response for this matrix.
+    pub fn metrics(&self) -> &SolveMetrics {
+        &self.metrics
+    }
+
+    /// Requests served against this matrix so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` served requests (called by shard workers).
+    pub(crate) fn note_served(&self, n: u64) {
+        self.served.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for RegisteredMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RegisteredMatrix")
+            .field("key", &self.key)
+            .field("shard", &self.shard)
+            .field("n", &self.solver.n())
+            .field("served", &self.served())
+            .finish_non_exhaustive()
+    }
+}
+
+/// Key → prepared-matrix map with round-robin shard assignment.
+///
+/// Lookups are lock-cheap (`RwLock` read); registration takes the write
+/// lock only to insert — the compile/simulate work happens outside it.
+pub struct MatrixRegistry {
+    shards: usize,
+    compiler: CompilerConfig,
+    inner: RwLock<HashMap<String, Arc<RegisteredMatrix>>>,
+}
+
+impl MatrixRegistry {
+    /// An empty registry assigning matrices across `shards` shards
+    /// (clamped to ≥ 1) and compiling with `compiler`.
+    pub fn new(shards: usize, compiler: CompilerConfig) -> Self {
+        Self {
+            shards: shards.max(1),
+            compiler,
+            inner: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Shards this registry assigns across.
+    pub fn num_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Register `m` under `key`: compile, simulate once (double-entry
+    /// verification + shared cost model), build the solve plan, and
+    /// assign a shard. Errors if the key is already registered — a key is
+    /// an identity, not a slot to overwrite.
+    pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
+        if self.inner.read().unwrap().contains_key(key) {
+            bail!("matrix key {key:?} is already registered");
+        }
+        let program = Arc::new(
+            compile(m, &self.compiler).with_context(|| format!("compile matrix {key:?}"))?,
+        );
+        let mut acc = Accelerator::new(self.compiler.arch);
+        let probe_b = vec![1.0f32; m.n];
+        let run = acc
+            .run(&program, &probe_b)
+            .with_context(|| format!("simulate matrix {key:?}"))?;
+        run.stats
+            .verify_against(&program.predicted)
+            .with_context(|| format!("double-entry check for matrix {key:?}"))?;
+        let metrics = SolveMetrics::from_run(&run.stats, &self.compiler.arch, program.flops());
+        let solver = Arc::new(LevelSolver::new(m));
+        let mut map = self.inner.write().unwrap();
+        // Re-check under the write lock: a concurrent register of the
+        // same key must not be silently clobbered.
+        if map.contains_key(key) {
+            bail!("matrix key {key:?} is already registered");
+        }
+        let entry = Arc::new(RegisteredMatrix {
+            key: key.to_string(),
+            shard: map.len() % self.shards,
+            solver,
+            program,
+            metrics,
+            served: AtomicU64::new(0),
+        });
+        map.insert(key.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Look up a registered matrix by key.
+    pub fn get(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
+        self.inner.read().unwrap().get(key).cloned()
+    }
+
+    /// Remove a registered matrix, returning its entry (registration
+    /// rollback, eviction). Requests already routed hold their own `Arc`
+    /// and complete normally; later submits for the key get the
+    /// unknown-key error reply, and the key may be registered again.
+    /// Future shard assignment derives from the current map size, so
+    /// removal can skew balance slightly — acceptable for these cases.
+    pub fn remove(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
+        self.inner.write().unwrap().remove(key)
+    }
+
+    /// Registered matrix count.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    /// True when nothing is registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered keys, sorted (stable output for tables and logs).
+    pub fn keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self.inner.read().unwrap().keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    fn registry(shards: usize) -> MatrixRegistry {
+        MatrixRegistry::new(shards, CompilerConfig::default())
+    }
+
+    #[test]
+    fn registers_and_looks_up() {
+        let reg = registry(2);
+        assert!(reg.is_empty());
+        let m = gen::banded(150, 4, 0.6, GenSeed(61));
+        let entry = reg.register("band", &m).unwrap();
+        assert_eq!(entry.key(), "band");
+        assert_eq!(entry.metrics().cycles, entry.program().predicted.cycles);
+        assert_eq!(entry.solver().n(), m.n);
+        assert_eq!(reg.len(), 1);
+        let again = reg.get("band").unwrap();
+        assert!(Arc::ptr_eq(&entry, &again));
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn shard_assignment_is_round_robin() {
+        let reg = registry(3);
+        let mut shards = Vec::new();
+        for k in 0..5 {
+            let m = gen::chain(40 + k, GenSeed(62 + k as u64));
+            shards.push(reg.register(&format!("m{k}"), &m).unwrap().shard());
+        }
+        assert_eq!(shards, vec![0, 1, 2, 0, 1]);
+        assert_eq!(reg.keys(), vec!["m0", "m1", "m2", "m3", "m4"]);
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected() {
+        let reg = registry(2);
+        let m = gen::chain(60, GenSeed(63));
+        reg.register("dup", &m).unwrap();
+        let err = reg.register("dup", &m).unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn remove_frees_the_key_for_reregistration() {
+        let reg = registry(2);
+        let m = gen::chain(70, GenSeed(65));
+        let entry = reg.register("evict", &m).unwrap();
+        let removed = reg.remove("evict").unwrap();
+        assert!(Arc::ptr_eq(&entry, &removed));
+        assert!(reg.get("evict").is_none());
+        assert!(reg.is_empty());
+        assert!(reg.remove("evict").is_none());
+        // The key is free again.
+        reg.register("evict", &m).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let reg = registry(0);
+        assert_eq!(reg.num_shards(), 1);
+        let m = gen::chain(30, GenSeed(64));
+        assert_eq!(reg.register("only", &m).unwrap().shard(), 0);
+    }
+}

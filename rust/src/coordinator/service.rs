@@ -1,28 +1,82 @@
-//! The solve service: compile once, serve a stream of RHS requests.
+//! The solve services: register matrices once, serve streams of RHS
+//! requests.
 //!
-//! Requests flow through an mpsc queue into worker threads; each worker
-//! batches up to `batch_size` requests per dequeue round to amortize
-//! dispatch overhead (the solver backend and level plans are shared,
-//! read-only). Responses return through per-request channels.
+//! The serving runtime is **sharded and multi-matrix**
+//! ([`ShardedSolveService`]): N matrices are registered by key into a
+//! [`MatrixRegistry`] (each compiled, simulated and planned exactly once,
+//! then pinned to a shard round-robin), and every
+//! [`SolveRequest`]` { matrix_key, b, reply }` is routed to the shard
+//! that owns its matrix. Each shard drains its own mpsc queue with a
+//! small worker pool, batching same-matrix requests through the
+//! backend's multi-RHS path; responses return through per-request
+//! channels. Per-shard [`ShardCounters`] aggregate into service-wide
+//! [`ServingStats`].
 //!
 //! The numeric path is a pluggable [`SolverBackend`] chosen at startup by
-//! [`create_backend`]: native by default, PJRT when the `pjrt` feature is
-//! enabled and its artifacts load. A backend that cannot initialize fails
-//! [`SolveService::start`] immediately, and per-request solver errors are
-//! replied to the requester — workers never exit silently with requests
-//! pending.
+//! [`create_backend`] and — by default — **shared across every shard and
+//! matrix**, so the native backend's persistent MGD worker pool is
+//! spawned once per service (or once per backend lifetime, when an
+//! embedder reuses a backend across service restarts) rather than per
+//! solve or per matrix. Registration calls
+//! [`SolverBackend::prepare`], so plan construction and pool spawn happen
+//! at register time, not on the first request.
+//!
+//! Failures are loud, never hangs: backend construction errors fail
+//! `start`, registration (compile/verify) errors fail `register`, an
+//! unknown `matrix_key` gets an immediate error *reply*, and per-request
+//! solver errors are replied to the requester — workers never exit
+//! silently with requests pending.
+//!
+//! [`SolveService`] remains as the single-matrix facade (CLI `mgd solve`,
+//! benches): a 1-shard service with one matrix registered under an
+//! internal key.
 
-use super::metrics::SolveMetrics;
-use crate::compiler::{compile, CompilerConfig, Program};
+use super::metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
+use super::registry::{MatrixRegistry, RegisteredMatrix};
+use crate::compiler::{CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
-use crate::runtime::{create_backend, BackendConfig, LevelSolver, SolverBackend};
-use crate::sim::Accelerator;
-use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::runtime::{create_backend, BackendConfig, SolverBackend};
+use anyhow::{anyhow, Context, Result};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-/// Service configuration.
+/// Configuration of the sharded multi-matrix service.
+#[derive(Debug, Clone)]
+pub struct ShardedServiceConfig {
+    /// Compiler/architecture options used at registration.
+    pub compiler: CompilerConfig,
+    /// Number of shards (request queues); matrices are assigned to shards
+    /// round-robin at registration. Clamped to ≥ 1.
+    pub shards: usize,
+    /// Worker threads draining each shard's queue.
+    pub workers_per_shard: usize,
+    /// Max requests drained per dispatch round of one shard worker.
+    pub batch_size: usize,
+    /// Numeric backend selection (native by default).
+    pub backend: BackendConfig,
+    /// When true, every shard constructs its own backend instance (own
+    /// worker pools — more threads, shard-parallel numerics). The default
+    /// `false` shares one backend, and therefore one persistent MGD pool,
+    /// across all shards: a solve already fans out across the pool's
+    /// workers, so shards contend on cores either way and sharing keeps
+    /// the thread count bounded.
+    pub backend_per_shard: bool,
+}
+
+impl Default for ShardedServiceConfig {
+    fn default() -> Self {
+        Self {
+            compiler: CompilerConfig::default(),
+            shards: 2,
+            workers_per_shard: 2,
+            batch_size: 8,
+            backend: BackendConfig::default(),
+            backend_per_shard: false,
+        }
+    }
+}
+
+/// Single-matrix service configuration (the [`SolveService`] facade).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Compiler/architecture options.
@@ -46,9 +100,12 @@ impl Default for ServiceConfig {
     }
 }
 
-/// One solve request.
+/// One solve request of the sharded service: which matrix, which RHS,
+/// and where to send the reply.
 pub struct SolveRequest {
-    /// Right-hand side (length n).
+    /// Registration key of the matrix to solve against.
+    pub matrix_key: String,
+    /// Right-hand side (length = the matrix's order).
     pub b: Vec<f32>,
     /// Response channel.
     pub reply: mpsc::Sender<Result<SolveResponse>>,
@@ -59,30 +116,352 @@ pub struct SolveRequest {
 pub struct SolveResponse {
     /// Solution vector.
     pub x: Vec<f32>,
-    /// Host wall-clock latency of the numeric path (seconds). May be 0.0
-    /// for tiny solves at coarse timer resolution.
+    /// Host wall-clock latency of the numeric path (seconds, averaged
+    /// over the dispatch batch the request rode in). May be 0.0 for tiny
+    /// solves at coarse timer resolution.
     pub host_seconds: f64,
     /// Shared accelerator metrics for this matrix.
     pub metrics: SolveMetrics,
 }
 
-/// The running service.
-pub struct SolveService {
-    tx: Option<mpsc::Sender<SolveRequest>>,
+/// A routed job on a shard queue: the registry entry is resolved at
+/// submit time so shard workers never touch the key map.
+struct ShardJob {
+    entry: Arc<RegisteredMatrix>,
+    b: Vec<f32>,
+    reply: mpsc::Sender<Result<SolveResponse>>,
+}
+
+/// One shard: its queue, its workers, its counters, its backend handle.
+struct Shard {
+    tx: Option<mpsc::Sender<ShardJob>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    counters: Arc<ShardCounters>,
+    backend: Arc<dyn SolverBackend>,
+}
+
+/// The running sharded multi-matrix service.
+pub struct ShardedSolveService {
+    registry: Arc<MatrixRegistry>,
+    shards: Vec<Shard>,
+    backend_name: &'static str,
+}
+
+impl ShardedSolveService {
+    /// Construct the configured backend(s) ([`create_backend`] — failures
+    /// are startup errors) and spawn the shard queues and worker pools.
+    /// The service starts with an empty registry; add matrices with
+    /// [`ShardedSolveService::register`].
+    pub fn start(cfg: ShardedServiceConfig) -> Result<Self> {
+        let nshards = cfg.shards.max(1);
+        let shared = (!cfg.backend_per_shard)
+            .then(|| create_backend(&cfg.backend))
+            .transpose()
+            .context("construct solver backend")?;
+        let mut backends = Vec::with_capacity(nshards);
+        for shard in 0..nshards {
+            backends.push(match &shared {
+                Some(b) => Arc::clone(b),
+                None => create_backend(&cfg.backend)
+                    .with_context(|| format!("construct solver backend for shard {shard}"))?,
+            });
+        }
+        Ok(Self::start_shards(backends, &cfg))
+    }
+
+    /// Like [`ShardedSolveService::start`] but with one caller-provided
+    /// backend shared by every shard (dependency injection for tests,
+    /// benches and embedders — e.g. reusing one backend, and thereby one
+    /// persistent worker pool, across repeated service start/shutdown
+    /// cycles). `cfg.backend` and `cfg.backend_per_shard` are ignored.
+    pub fn start_with_backend(backend: Arc<dyn SolverBackend>, cfg: ShardedServiceConfig) -> Self {
+        let backends = (0..cfg.shards.max(1)).map(|_| Arc::clone(&backend)).collect();
+        Self::start_shards(backends, &cfg)
+    }
+
+    fn start_shards(backends: Vec<Arc<dyn SolverBackend>>, cfg: &ShardedServiceConfig) -> Self {
+        let backend_name = backends[0].name();
+        let registry = Arc::new(MatrixRegistry::new(backends.len(), cfg.compiler.clone()));
+        let batch = cfg.batch_size.max(1);
+        let shards = backends
+            .into_iter()
+            .map(|backend| {
+                let (tx, rx) = mpsc::channel::<ShardJob>();
+                let rx = Arc::new(Mutex::new(rx));
+                let counters = Arc::new(ShardCounters::default());
+                let workers = (0..cfg.workers_per_shard.max(1))
+                    .map(|_| {
+                        let rx = Arc::clone(&rx);
+                        let backend = Arc::clone(&backend);
+                        let counters = Arc::clone(&counters);
+                        std::thread::spawn(move || shard_worker(&rx, &*backend, &counters, batch))
+                    })
+                    .collect();
+                Shard {
+                    tx: Some(tx),
+                    workers,
+                    counters,
+                    backend,
+                }
+            })
+            .collect();
+        Self {
+            registry,
+            shards,
+            backend_name,
+        }
+    }
+
+    /// Register `m` under `key`: compile + simulate + plan once (see
+    /// [`MatrixRegistry::register`]), then warm the owning shard's
+    /// backend ([`SolverBackend::prepare`] — for the native backend this
+    /// builds the cached MGD plan and spawns the persistent pool). After
+    /// this returns, requests for `key` pay zero setup.
+    pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
+        let entry = self.registry.register(key, m)?;
+        if let Err(e) = self.shards[entry.shard()].backend.prepare(entry.solver()) {
+            // Roll the registration back: a key must not stay routed to
+            // a backend that failed to prepare (retries would otherwise
+            // hit "already registered" forever).
+            let _ = self.registry.remove(key);
+            return Err(e.context(format!("prepare backend for matrix {key:?}")));
+        }
+        Ok(entry)
+    }
+
+    /// Route one request to the shard owning its matrix. An unknown
+    /// `matrix_key` is answered with an immediate error **reply** on the
+    /// request's channel (never a hang, never a dropped request); the
+    /// call itself errors only if the service is shutting down.
+    pub fn route(&self, req: SolveRequest) -> Result<()> {
+        let Some(entry) = self.registry.get(&req.matrix_key) else {
+            let _ = req.reply.send(Err(anyhow!(
+                "unknown matrix key {:?} (registered: [{}])",
+                req.matrix_key,
+                self.registry.keys().join(", ")
+            )));
+            return Ok(());
+        };
+        let shard = &self.shards[entry.shard()];
+        shard
+            .tx
+            .as_ref()
+            .context("service stopped")?
+            .send(ShardJob {
+                entry,
+                b: req.b,
+                reply: req.reply,
+            })
+            .ok()
+            .context("shard queue closed")?;
+        Ok(())
+    }
+
+    /// Submit a request for `key`; returns the receiver for the response.
+    pub fn submit(&self, key: &str, b: Vec<f32>) -> Result<mpsc::Receiver<Result<SolveResponse>>> {
+        let (reply, rx) = mpsc::channel();
+        self.route(SolveRequest {
+            matrix_key: key.to_string(),
+            b,
+            reply,
+        })?;
+        Ok(rx)
+    }
+
+    /// Solve synchronously against the matrix registered under `key`.
+    pub fn solve(&self, key: &str, b: Vec<f32>) -> Result<SolveResponse> {
+        self.submit(key, b)?.recv().context("worker dropped")?
+    }
+
+    /// The matrix registry (lookups, keys, per-matrix served counts).
+    pub fn registry(&self) -> &Arc<MatrixRegistry> {
+        &self.registry
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Point-in-time per-shard serving statistics.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.counters.snapshot(i))
+            .collect()
+    }
+
+    /// Aggregate serving statistics across all shards.
+    pub fn stats(&self) -> ServingStats {
+        ServingStats::aggregate(&self.shard_stats())
+    }
+
+    /// Replies delivered so far (successful and error replies; unknown-key
+    /// replies short-circuit at routing and are not counted here).
+    pub fn served(&self) -> u64 {
+        let agg = self.stats();
+        agg.served + agg.errors
+    }
+
+    /// Name of the numeric backend serving requests.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Stop all shard workers (each drains its queue first). Dropping the
+    /// service does the same; this form merely makes the join explicit.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        for shard in &mut self.shards {
+            shard.tx.take();
+        }
+        for shard in &mut self.shards {
+            for w in shard.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for ShardedSolveService {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One shard worker: drain up to `batch` jobs per round, group
+/// same-matrix jobs, and dispatch each group through the backend
+/// (multi-RHS when the group and backend allow it).
+fn shard_worker(
+    rx: &Mutex<mpsc::Receiver<ShardJob>>,
+    backend: &dyn SolverBackend,
+    counters: &ShardCounters,
+    batch: usize,
+) {
+    loop {
+        let mut jobs = Vec::with_capacity(batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => return, // channel closed: clean shutdown
+            }
+            while jobs.len() < batch {
+                match guard.try_recv() {
+                    Ok(j) => jobs.push(j),
+                    Err(_) => break,
+                }
+            }
+        }
+        for (entry, group) in group_by_matrix(jobs) {
+            solve_group(backend, &entry, group, counters);
+        }
+    }
+}
+
+type Reply = mpsc::Sender<Result<SolveResponse>>;
+
+/// One same-matrix slice of a drained batch: the registry entry and the
+/// `(rhs, reply)` pairs that target it.
+type MatrixGroup = (Arc<RegisteredMatrix>, Vec<(Vec<f32>, Reply)>);
+
+/// Partition a drained batch into per-matrix groups (order-preserving;
+/// identity is the registry entry, compared by `Arc` pointer).
+fn group_by_matrix(jobs: Vec<ShardJob>) -> Vec<MatrixGroup> {
+    let mut groups: Vec<MatrixGroup> = Vec::new();
+    for job in jobs {
+        match groups.iter_mut().find(|(e, _)| Arc::ptr_eq(e, &job.entry)) {
+            Some((_, g)) => g.push((job.b, job.reply)),
+            None => groups.push((job.entry, vec![(job.b, job.reply)])),
+        }
+    }
+    groups
+}
+
+/// Solve one same-matrix group and reply to every requester. Errors are
+/// propagated to each caller in the group — a worker must never drop
+/// requests on the floor.
+fn solve_group(
+    backend: &dyn SolverBackend,
+    entry: &RegisteredMatrix,
+    group: Vec<(Vec<f32>, Reply)>,
+    counters: &ShardCounters,
+) {
+    let count = group.len();
+    let t0 = Instant::now();
+    if count > 1 && backend.supports_multi_rhs() {
+        // Batched rounds go through the backend's multi-RHS path,
+        // amortizing dispatch and gather staging. The RHS vectors move
+        // out of the jobs (no clone); replies only need the channels.
+        let (bs, replies): (Vec<Vec<f32>>, Vec<Reply>) = group.into_iter().unzip();
+        match backend.solve_multi(entry.solver(), &bs) {
+            Ok(xs) => {
+                let elapsed = t0.elapsed();
+                let per = elapsed.as_secs_f64() / count as f64;
+                entry.note_served(count as u64);
+                counters.record_round(count as u64, 0, elapsed);
+                for (reply, x) in replies.into_iter().zip(xs) {
+                    let _ = reply.send(Ok(SolveResponse {
+                        x,
+                        host_seconds: per,
+                        metrics: entry.metrics().clone(),
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                counters.record_round(0, count as u64, t0.elapsed());
+                for reply in replies {
+                    let _ = reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    } else {
+        // Scalar path: reply immediately after each solve (no head-of-
+        // group latency), recording counters just before each send so a
+        // caller holding its response never reads stale stats.
+        for (b, reply) in group {
+            let t1 = Instant::now();
+            let out = backend.solve(entry.solver(), &b).map(|x| SolveResponse {
+                x,
+                host_seconds: t1.elapsed().as_secs_f64(),
+                metrics: entry.metrics().clone(),
+            });
+            match &out {
+                Ok(_) => {
+                    entry.note_served(1);
+                    counters.record_round(1, 0, t1.elapsed());
+                }
+                Err(_) => counters.record_round(0, 1, t1.elapsed()),
+            }
+            let _ = reply.send(out);
+        }
+    }
+}
+
+/// Key the [`SolveService`] facade registers its single matrix under.
+const SINGLE_KEY: &str = "default";
+
+/// The single-matrix solve service: a 1-shard [`ShardedSolveService`]
+/// with one matrix registered at startup. This is the compile-once,
+/// serve-many facade used by `mgd solve`, tests and benches.
+pub struct SolveService {
+    inner: ShardedSolveService,
     /// The compiled accelerator program (public for inspection/benches).
     pub program: Arc<Program>,
     /// Shared per-matrix metrics.
     pub metrics: SolveMetrics,
-    served: Arc<AtomicU64>,
-    backend_name: &'static str,
 }
 
 impl SolveService {
-    /// Compile `m`, simulate once for metrics, construct the configured
-    /// backend ([`create_backend`]), and spawn the worker pool. Backend
-    /// construction failures — e.g. an explicit `pjrt` request without the
-    /// toolchain — are startup errors, not hung requests.
+    /// Construct the configured backend ([`create_backend`]), start a
+    /// 1-shard service, and register `m`. Backend construction failures —
+    /// e.g. an explicit `pjrt` request without the toolchain — are
+    /// startup errors, not hung requests; so are compile/verify failures.
     pub fn start(m: &CsrMatrix, cfg: ServiceConfig) -> Result<Self> {
         let backend = create_backend(&cfg.backend).context("construct solver backend")?;
         Self::start_with_backend(m, backend, cfg)
@@ -95,145 +474,50 @@ impl SolveService {
         backend: Arc<dyn SolverBackend>,
         cfg: ServiceConfig,
     ) -> Result<Self> {
-        let program = Arc::new(compile(m, &cfg.compiler).context("compile")?);
-        // One cycle-accurate run (RHS-independent schedule): double-entry
-        // verification + the cost model shared by all requests.
-        let mut acc = Accelerator::new(cfg.compiler.arch);
-        let probe_b = vec![1.0f32; m.n];
-        let run = acc.run(&program, &probe_b).context("simulate")?;
-        run.stats
-            .verify_against(&program.predicted)
-            .context("double-entry check")?;
-        let metrics = SolveMetrics::from_run(&run.stats, &cfg.compiler.arch, program.flops());
-        let solver = Arc::new(LevelSolver::new(m));
-        let backend_name = backend.name();
-        let (tx, rx) = mpsc::channel::<SolveRequest>();
-        let rx = Arc::new(Mutex::new(rx));
-        let served = Arc::new(AtomicU64::new(0));
-        let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let solver = Arc::clone(&solver);
-            let backend = Arc::clone(&backend);
-            let metrics = metrics.clone();
-            let served = Arc::clone(&served);
-            let batch = cfg.batch_size.max(1);
-            workers.push(std::thread::spawn(move || {
-                loop {
-                    // Drain up to `batch` requests in one round.
-                    let mut reqs = Vec::with_capacity(batch);
-                    {
-                        let guard = rx.lock().unwrap();
-                        match guard.recv() {
-                            Ok(r) => reqs.push(r),
-                            Err(_) => return, // channel closed
-                        }
-                        while reqs.len() < batch {
-                            match guard.try_recv() {
-                                Ok(r) => reqs.push(r),
-                                Err(_) => break,
-                            }
-                        }
-                    }
-                    // Batched rounds go through the backend's multi-RHS
-                    // path, amortizing dispatch and gather staging.
-                    let t0 = Instant::now();
-                    if reqs.len() > 1 && backend.supports_multi_rhs() {
-                        let count = reqs.len();
-                        // Move the RHS vectors out of the requests instead
-                        // of cloning them; replies only need the channels.
-                        let (bs, replies): (Vec<Vec<f32>>, Vec<_>) =
-                            reqs.into_iter().map(|r| (r.b, r.reply)).unzip();
-                        match backend.solve_multi(&solver, &bs) {
-                            Ok(xs) => {
-                                let per = t0.elapsed().as_secs_f64() / count as f64;
-                                for (reply, x) in replies.into_iter().zip(xs) {
-                                    served.fetch_add(1, Ordering::Relaxed);
-                                    let _ = reply.send(Ok(SolveResponse {
-                                        x,
-                                        host_seconds: per,
-                                        metrics: metrics.clone(),
-                                    }));
-                                }
-                            }
-                            Err(e) => {
-                                // Propagate the failure to every caller in
-                                // the round; a worker must never drop
-                                // requests on the floor.
-                                let msg = format!("{e:#}");
-                                for reply in replies {
-                                    served.fetch_add(1, Ordering::Relaxed);
-                                    let _ = reply.send(Err(anyhow::anyhow!(msg.clone())));
-                                }
-                            }
-                        }
-                    } else {
-                        for req in reqs {
-                            let t0 = Instant::now();
-                            let out = backend.solve(&solver, &req.b).map(|x| SolveResponse {
-                                x,
-                                host_seconds: t0.elapsed().as_secs_f64(),
-                                metrics: metrics.clone(),
-                            });
-                            served.fetch_add(1, Ordering::Relaxed);
-                            let _ = req.reply.send(out);
-                        }
-                    }
-                }
-            }));
-        }
+        let inner = ShardedSolveService::start_with_backend(
+            backend,
+            ShardedServiceConfig {
+                compiler: cfg.compiler,
+                shards: 1,
+                workers_per_shard: cfg.workers,
+                batch_size: cfg.batch_size,
+                backend: cfg.backend,
+                backend_per_shard: false,
+            },
+        );
+        let entry = inner.register(SINGLE_KEY, m)?;
+        let program = Arc::clone(entry.program());
+        let metrics = entry.metrics().clone();
         Ok(Self {
-            tx: Some(tx),
-            workers,
+            inner,
             program,
             metrics,
-            served,
-            backend_name,
         })
     }
 
     /// Submit a request; returns the receiver for the response.
     pub fn submit(&self, b: Vec<f32>) -> Result<mpsc::Receiver<Result<SolveResponse>>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .context("service stopped")?
-            .send(SolveRequest { b, reply })
-            .ok()
-            .context("service queue closed")?;
-        Ok(rx)
+        self.inner.submit(SINGLE_KEY, b)
     }
 
     /// Solve synchronously (submit + wait).
     pub fn solve(&self, b: Vec<f32>) -> Result<SolveResponse> {
-        self.submit(b)?.recv().context("worker dropped")?
+        self.inner.solve(SINGLE_KEY, b)
     }
 
-    /// Requests served so far.
+    /// Replies delivered so far (successful and error replies).
     pub fn served(&self) -> u64 {
-        self.served.load(Ordering::Relaxed)
+        self.inner.served()
     }
 
     /// Name of the numeric backend serving requests.
     pub fn backend_name(&self) -> &'static str {
-        self.backend_name
+        self.inner.backend_name()
     }
 
     /// Stop the workers (drains the queue first).
-    pub fn shutdown(mut self) {
-        self.tx.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-    }
-}
-
-impl Drop for SolveService {
-    fn drop(&mut self) {
-        self.tx.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
 }
 
@@ -257,6 +541,23 @@ mod tests {
             workers: 2,
             batch_size: 4,
             backend: BackendConfig::default(),
+        }
+    }
+
+    fn small_sharded_cfg(shards: usize) -> ShardedServiceConfig {
+        ShardedServiceConfig {
+            compiler: CompilerConfig {
+                arch: ArchConfig {
+                    log2_cus: 4,
+                    ..ArchConfig::default()
+                },
+                ..CompilerConfig::default()
+            },
+            shards,
+            workers_per_shard: 2,
+            batch_size: 4,
+            backend: BackendConfig::default(),
+            backend_per_shard: false,
         }
     }
 
@@ -372,6 +673,91 @@ mod tests {
         let m = gen::banded(300, 5, 0.6, GenSeed(2));
         let svc = SolveService::start(&m, small_cfg()).unwrap();
         assert_eq!(svc.metrics.cycles, svc.program.predicted.cycles);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_routes_multiple_matrices() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(2)).unwrap();
+        let ma = gen::circuit(300, 4, 0.8, GenSeed(71));
+        let mb = gen::banded(220, 4, 0.6, GenSeed(72));
+        let ea = svc.register("alpha", &ma).unwrap();
+        let eb = svc.register("beta", &mb).unwrap();
+        // Two matrices on two shards: round-robin assignment.
+        assert_eq!((ea.shard(), eb.shard()), (0, 1));
+        let mut expect = Vec::new();
+        let mut rxs = Vec::new();
+        for k in 0..10 {
+            let (key, m) = if k % 2 == 0 { ("alpha", &ma) } else { ("beta", &mb) };
+            let b: Vec<f32> = (0..m.n).map(|i| ((i + k) % 7) as f32 - 3.0).collect();
+            rxs.push(svc.submit(key, b.clone()).unwrap());
+            expect.push((m, b));
+        }
+        for (rx, (m, b)) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_close_to_reference(m, &b, &resp.x, 1e-3);
+        }
+        // Both shards served, and the aggregate adds up.
+        let stats = svc.shard_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].served, 5, "{stats:?}");
+        assert_eq!(stats[1].served, 5, "{stats:?}");
+        let agg = svc.stats();
+        assert_eq!(agg.served, 10);
+        assert_eq!(agg.errors, 0);
+        assert!(agg.batched_rounds >= 2);
+        assert_eq!(ea.served() + eb.served(), 10);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_key_is_an_error_reply_not_a_hang() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(2)).unwrap();
+        let m = gen::chain(80, GenSeed(73));
+        svc.register("only", &m).unwrap();
+        // Reply arrives immediately with a diagnostic, listing what is
+        // actually registered.
+        let err = svc.solve("missing", vec![0.0; m.n]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown matrix key"), "{msg}");
+        assert!(msg.contains("only"), "{msg}");
+        // The error does not count against any shard's request stream.
+        assert_eq!(svc.stats().errors, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn failed_prepare_rolls_back_the_registration() {
+        use crate::runtime::LevelSolver;
+        struct FailingPrepare;
+        impl SolverBackend for FailingPrepare {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn prepare(&self, _plan: &LevelSolver) -> Result<()> {
+                anyhow::bail!("artifacts unavailable")
+            }
+            fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
+                Ok(crate::matrix::triangular::solve_serial(plan.matrix(), b))
+            }
+        }
+        let svc =
+            ShardedSolveService::start_with_backend(Arc::new(FailingPrepare), small_sharded_cfg(1));
+        let m = gen::chain(50, GenSeed(75));
+        let err = svc.register("m", &m).unwrap_err();
+        assert!(format!("{err:#}").contains("prepare backend"));
+        // The key is not poisoned: it is unknown again and can be
+        // registered against a working backend later.
+        assert!(svc.registry().get("m").is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn duplicate_registration_errors() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(1)).unwrap();
+        let m = gen::chain(60, GenSeed(74));
+        svc.register("m", &m).unwrap();
+        assert!(svc.register("m", &m).is_err());
         svc.shutdown();
     }
 }

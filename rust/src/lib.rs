@@ -28,17 +28,28 @@
 //!   (Release/Acquire protocol in `runtime/atomics.md`), node-local
 //!   partial sums and ICR-ordered gathers — bitwise-identical to the
 //!   serial reference at any thread count; `auto` picks per matrix from
-//!   level-width statistics. An optional PJRT loader/executor for the
-//!   AOT-compiled JAX/Pallas level kernels in `artifacts/` sits behind
-//!   the `pjrt` cargo feature.
-//! - [`coordinator`] — the L3 solve service: multi-RHS batching over the
-//!   selected backend plus per-solve accelerator metrics; backend
-//!   construction failures fail startup, solver errors are replied to the
-//!   requester.
+//!   level-width statistics. MGD workers live in a **persistent pool**
+//!   (`runtime/pool.rs`): spawned once per backend, parked on a condvar
+//!   between solves, shared across every solve and matrix the backend
+//!   serves — no per-solve thread spawns on the serve path. An optional
+//!   PJRT loader/executor for the AOT-compiled JAX/Pallas level kernels
+//!   in `artifacts/` sits behind the `pjrt` cargo feature.
+//! - [`coordinator`] — the L3 serving runtime: a sharded, multi-matrix
+//!   `ShardedSolveService` over a `MatrixRegistry`. Each matrix is
+//!   registered by key and compiled/simulated/planned exactly once;
+//!   requests (`SolveRequest { matrix_key, b, reply }`) route to the
+//!   shard owning their matrix, where workers batch same-matrix requests
+//!   through the backend's multi-RHS path. Per-shard counters aggregate
+//!   into service-wide `ServingStats`. Backend construction failures
+//!   fail startup, unknown keys get an immediate error reply, and solver
+//!   errors are replied to the requester. `SolveService` is the
+//!   single-matrix facade over the same machinery.
 //! - [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md §3), plus a native-vs-PJRT backend
-//!   comparison table (`mgd bench backends`) and a level-vs-mgd scheduler
-//!   comparison (`mgd bench schedulers`, emits `BENCH_schedulers.json`).
+//!   comparison table (`mgd bench backends`), a level-vs-mgd scheduler
+//!   comparison (`mgd bench schedulers`, emits `BENCH_schedulers.json`),
+//!   and a persistent-pool vs per-solve-spawn serving comparison
+//!   (`mgd bench serving`, emits `BENCH_serving.json`).
 //!
 //! ## Cargo features
 //!
@@ -67,6 +78,12 @@
 //!     assert!((a - r).abs() <= 1e-3 * r.abs().max(1.0));
 //! }
 //! ```
+
+// Public API must be documented: combined with the CI rustdoc job
+// (`RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`) and clippy's
+// `-D warnings`, an undocumented public item or a broken intra-doc link
+// fails the build.
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod baselines;

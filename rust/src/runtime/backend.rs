@@ -41,6 +41,18 @@ pub trait SolverBackend: Send + Sync {
         false
     }
 
+    /// Warm per-matrix state ahead of the first request (idempotent).
+    ///
+    /// The sharded service calls this at registration time so that
+    /// *registration*, not the first solve, pays the amortizable costs:
+    /// the native backend builds (and caches) the matrix's
+    /// [`MgdPlan`](super::MgdPlan) and spawns its persistent
+    /// [`MgdPool`](super::MgdPool) here. The default does nothing.
+    fn prepare(&self, plan: &LevelSolver) -> Result<()> {
+        let _ = plan;
+        Ok(())
+    }
+
     /// Solve `L x = b` through the prepared plan.
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>>;
 

@@ -26,14 +26,52 @@
 //! with a single `f32` accumulator and divides by the diagonal, and every
 //! operand is read after a happens-before edge from its producer (see
 //! `runtime/atomics.md` for the full protocol).
+//!
+//! Workers come from an [`MgdPool`]: [`execute_on`] runs one solve as a
+//! pool *session* (the caller is worker 0; parked pool threads claim the
+//! remaining slots), so a long-lived serving pool pays thread spawns once
+//! instead of per solve. [`execute`] is the one-shot convenience wrapper
+//! that builds a transient pool per call — it is also the
+//! per-solve-spawn baseline that `mgd bench serving` compares the
+//! persistent pool against.
+//!
+//! # Example
+//!
+//! One-shot and pooled execution of the same plan; both are bitwise equal
+//! to the serial reference:
+//!
+//! ```
+//! use mgd_sptrsv::matrix::gen::{self, GenSeed};
+//! use mgd_sptrsv::matrix::triangular::solve_serial;
+//! use mgd_sptrsv::runtime::{mgd_exec, MgdPlan, MgdPlanConfig, MgdPool};
+//!
+//! let m = gen::circuit(300, 4, 0.8, GenSeed(7));
+//! let plan = MgdPlan::build(&m, MgdPlanConfig::default());
+//! let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32 - 2.0).collect();
+//!
+//! // One-shot: spawns and joins a transient pool inside the call.
+//! let (xs, _) = mgd_exec::execute(&plan, &[b.clone()], 4).unwrap();
+//!
+//! // Serving: one persistent pool amortized across many solves.
+//! let pool = MgdPool::new(3); // 3 parked workers + the caller = 4
+//! let (ys, stats) = mgd_exec::execute_on(&plan, &[b.clone()], &pool, 4).unwrap();
+//! assert_eq!(stats.nodes_executed, plan.num_nodes() as u64);
+//!
+//! let want = solve_serial(&m, &b);
+//! for i in 0..m.n {
+//!     assert_eq!(xs[0][i].to_bits(), want[i].to_bits());
+//!     assert_eq!(ys[0][i].to_bits(), want[i].to_bits());
+//! }
+//! ```
 
 use super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
+use super::pool::MgdPool;
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Counters recorded by one [`execute`] call.
+/// Counters recorded by one [`execute`] / [`execute_on`] call.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct MgdExecStats {
     /// Medium nodes executed (== plan nodes on success).
@@ -64,11 +102,49 @@ struct Run<'a, B: AsRef<[f32]> + Sync> {
     steals: AtomicU64,
 }
 
-/// Execute `plan` for every RHS in `bs` on `threads` workers (including
-/// the calling thread). Returns the solutions and the run counters.
+/// Workers one solve of `plan` can usefully engage: never more than the
+/// requested `threads`, the node count, or the node DAG's level width —
+/// a pure chain (width 1) runs entirely on the calling thread.
+fn effective_workers(plan: &MgdPlan, threads: usize) -> usize {
+    threads
+        .max(1)
+        .min(plan.nodes.len().max(1))
+        .min(plan.par_width.max(1))
+}
+
+/// Execute `plan` for every RHS in `bs` on up to `threads` workers
+/// (including the calling thread), spawning a **transient** [`MgdPool`]
+/// for this one call. Returns the solutions and the run counters.
+///
+/// This is the one-shot path (tests, ad-hoc solves) and the
+/// per-solve-spawn baseline of `mgd bench serving`; servers should hold a
+/// persistent pool and call [`execute_on`] so repeated solves skip the
+/// spawn cost entirely.
 pub fn execute<B: AsRef<[f32]> + Sync>(
     plan: &MgdPlan,
     bs: &[B],
+    threads: usize,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    let extra = effective_workers(plan, threads).saturating_sub(1);
+    // A zero-worker pool spawns no threads, so serial plans stay
+    // spawn-free through this wrapper too.
+    let pool = MgdPool::new(extra);
+    execute_on(plan, bs, &pool, threads)
+}
+
+/// Execute `plan` for every RHS in `bs` as one session of a caller-owned
+/// (typically persistent) [`MgdPool`]: the calling thread is worker 0 and
+/// up to `min(threads, pool.workers() + 1) - 1` parked pool threads claim
+/// the remaining worker slots. Returns the solutions and the run
+/// counters.
+///
+/// The worker count is additionally clamped to what the plan can keep
+/// busy (node count and DAG width), so serial plans never touch the pool
+/// at all.
+pub fn execute_on<B: AsRef<[f32]> + Sync>(
+    plan: &MgdPlan,
+    bs: &[B],
+    pool: &MgdPool,
     threads: usize,
 ) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
     let n = plan.n;
@@ -84,13 +160,10 @@ pub fn execute<B: AsRef<[f32]> + Sync>(
         .take(r * n)
         .collect();
     let num_nodes = plan.nodes.len();
-    // Never spawn more workers than the plan can keep busy: `par_width`
-    // bounds useful parallelism, so a pure chain (width 1) runs entirely
-    // on the calling thread with zero spawn cost.
-    let nworkers = threads
-        .max(1)
-        .min(num_nodes.max(1))
-        .min(plan.par_width.max(1));
+    // Never engage more workers than the plan can keep busy or the pool
+    // can supply: a chain (width 1) runs on the calling thread with zero
+    // pool traffic.
+    let nworkers = effective_workers(plan, threads).min(pool.workers() + 1);
     if nworkers <= 1 {
         // Serial path: node ids are topological, no scheduling needed.
         let mut scratch = Vec::new();
@@ -119,23 +192,19 @@ pub fn execute<B: AsRef<[f32]> + Sync>(
         poisoned: AtomicBool::new(false),
         steals: AtomicU64::new(0),
     };
-    // Seed the roots round-robin so the fan-out starts distributed.
+    // Seed the roots round-robin so the fan-out starts distributed. A
+    // pool worker that never wakes for this session leaves its deque to
+    // the thieves — the steal scan covers every deque, so distribution is
+    // a locality hint, never a liveness requirement.
     for (i, &root) in plan.roots.iter().enumerate() {
         let w = i % nworkers;
         run.deques[w].lock().unwrap().push_back(root);
         run.lens[w].fetch_add(1, Ordering::Relaxed);
     }
-    std::thread::scope(|s| {
-        for w in 1..nworkers {
-            let run = &run;
-            std::thread::Builder::new()
-                .name(format!("mgd-exec-{w}"))
-                .spawn_scoped(s, move || worker_loop(run, w))
-                .expect("spawn mgd worker thread");
-        }
-        // The calling thread is worker 0 — no idle coordinator.
-        worker_loop(&run, 0);
-    });
+    // One pool session: the caller runs slot 0; parked workers claim
+    // slots 1..nworkers. `run` lives on this stack — the session-close
+    // handshake inside `pool.run` keeps the borrow sound.
+    pool.run(nworkers - 1, &|slot| worker_loop(&run, slot))?;
     ensure!(
         !run.poisoned.load(Ordering::Relaxed),
         "mgd node job panicked"
@@ -409,6 +478,34 @@ mod tests {
             }
         }
         assert!(stolen > 0, "no steal in 20 contended wide-DAG runs");
+    }
+
+    /// Serving contract: a persistent pool reused across many solves (and
+    /// across different plans) stays bitwise-serial and never grows its
+    /// thread count — the leak/regression guard for the pooled path.
+    #[test]
+    fn pooled_execution_reuses_workers_across_solves_and_plans() {
+        let pool = MgdPool::new(3);
+        for (name, m) in &gen::test_suite() {
+            let plan = MgdPlan::build(m, MgdPlanConfig::default());
+            let bs = rhs_batch(m.n, 2);
+            for round in 0..3 {
+                let (xs, stats) = execute_on(&plan, &bs, &pool, 4).unwrap();
+                assert_eq!(stats.nodes_executed, plan.num_nodes() as u64);
+                for (b, x) in bs.iter().zip(&xs) {
+                    let want = solve_serial(m, b);
+                    for i in 0..m.n {
+                        assert_eq!(
+                            x[i].to_bits(),
+                            want[i].to_bits(),
+                            "{name}: pooled round {round} row {i}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(pool.live_workers(), 3, "{name}: pool grew or leaked");
+        }
+        assert!(pool.stats().sessions > 0);
     }
 
     #[test]

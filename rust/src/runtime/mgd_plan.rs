@@ -39,6 +39,47 @@
 //! [`crate::matrix::triangular::solve_serial`] regardless of node sizing,
 //! thread count, or steal order. Reordering here affects *loads*, never
 //! the floating-point reduction order.
+//!
+//! # Example
+//!
+//! A 4-row factor clustered into two 2-row medium nodes. Rows 2 and 3
+//! both read row 0 — an *external* source, deduplicated into a single
+//! ICR gather entry — while row 3's read of row 2 is *intra-node* and
+//! resolves from the node-local psum buffer instead (tagged with
+//! [`LOCAL_BIT`], never gathered):
+//!
+//! ```
+//! use mgd_sptrsv::matrix::CsrMatrix;
+//! use mgd_sptrsv::runtime::{MgdPlan, MgdPlanConfig};
+//! use mgd_sptrsv::runtime::mgd_plan::LOCAL_BIT;
+//!
+//! // Lower-triangular (row, col, value) triplets; diagonal last per row.
+//! let m = CsrMatrix::from_triplets(
+//!     4,
+//!     &[
+//!         (0, 0, 2.0),
+//!         (1, 1, 3.0),
+//!         (2, 0, 1.0), (2, 2, 1.0),
+//!         (3, 0, 1.0), (3, 2, 1.0), (3, 3, 1.0),
+//!     ],
+//! )
+//! .unwrap();
+//! let plan = MgdPlan::build(
+//!     &m,
+//!     MgdPlanConfig { max_node_rows: 2, max_node_edges: usize::MAX },
+//! );
+//! assert_eq!(plan.num_nodes(), 2); // rows {0,1} and rows {2,3}
+//!
+//! let node = &plan.nodes[1];
+//! // Row 0 is read twice but gathered once (the ICR dedup)...
+//! assert_eq!(node.ext, vec![0]);
+//! // ...and row 3 → row 2 stays node-local (one LOCAL_BIT-tagged slot).
+//! let locals = node.edge_slot.iter().filter(|&&s| s & LOCAL_BIT != 0).count();
+//! assert_eq!(locals, 1);
+//! // One distinct predecessor node seeds the readiness counter.
+//! assert_eq!(node.init_deps, 1);
+//! assert_eq!(plan.nodes[0].succs, vec![1]);
+//! ```
 
 use crate::matrix::CsrMatrix;
 

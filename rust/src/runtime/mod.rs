@@ -14,8 +14,10 @@
 //!   - `mgd` — the paper's medium-granularity dataflow on the serve
 //!     path: barrier-free node scheduling over [`MgdPlan`] with
 //!     work-stealing deques, counter-driven readiness, node-local
-//!     partial sums and ICR-ordered gathers ([`mgd_exec`]); bitwise
-//!     identical to the serial reference for any thread count;
+//!     partial sums and ICR-ordered gathers ([`mgd_exec`]), executed on
+//!     the backend's persistent [`MgdPool`] (workers spawn once and park
+//!     between solves — no per-solve thread spawns on the serve path);
+//!     bitwise identical to the serial reference for any thread count;
 //!   - `auto` — picks per plan from level-width statistics (deep/narrow
 //!     DAGs go barrier-free).
 //! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled
@@ -40,6 +42,7 @@ pub mod level_exec;
 pub mod mgd_exec;
 pub mod mgd_plan;
 pub mod native;
+pub mod pool;
 #[cfg(feature = "pjrt")]
 pub(crate) mod xla_shim;
 
@@ -48,6 +51,7 @@ pub use level_exec::{LevelPlan, LevelSolver};
 pub use mgd_exec::MgdExecStats;
 pub use mgd_plan::{MgdPlan, MgdPlanConfig};
 pub use native::{MgdStats, NativeBackend, NativeConfig, NativeStats, SchedulerKind};
+pub use pool::{MgdPool, MgdPoolStats};
 
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;

@@ -2,9 +2,12 @@
 //! plans: the **level** scheduler (the simple/reference path — a
 //! `std::thread` worker pool with one barrier per level set) and the
 //! **mgd** scheduler (barrier-free medium-granularity node scheduling,
-//! [`mgd_exec`](super::mgd_exec)). [`SchedulerKind::Auto`] picks per plan
-//! from its level-width statistics: deep/narrow DAGs — where barriers
-//! serialize everything — go to `mgd`, wide/shallow ones to `level`.
+//! [`mgd_exec`](super::mgd_exec), running on the backend's persistent
+//! [`MgdPool`] — workers spawn once, park between solves, and are shared
+//! across every solve and matrix this backend serves).
+//! [`SchedulerKind::Auto`] picks per plan from its level-width
+//! statistics: deep/narrow DAGs — where barriers serialize everything —
+//! go to `mgd`, wide/shallow ones to `level`.
 //!
 //! The level scheduler mirrors the structure of the PJRT level kernels so
 //! both backends share the plan layout and the numeric contract:
@@ -31,6 +34,7 @@ use super::backend::SolverBackend;
 use super::level_exec::{LevelPlan, LevelSolver};
 use super::mgd_exec;
 use super::mgd_plan::MgdPlanConfig;
+use super::pool::{MgdPool, MgdPoolStats};
 use crate::matrix::CsrMatrix;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::str::FromStr;
@@ -240,8 +244,14 @@ pub struct NativeBackend {
     scheduler: SchedulerKind,
     /// Level-scheduler worker pool, spawned lazily on the first level
     /// whose width actually needs it — a backend whose solves all resolve
-    /// to `mgd` (which brings its own scoped workers) never parks a pool.
+    /// to `mgd` never parks a level pool.
     pool: std::sync::OnceLock<WorkerPool>,
+    /// Persistent barrier-free worker pool ([`MgdPool`]), spawned lazily
+    /// on the first mgd solve that can use more than one worker and
+    /// reused for the backend's lifetime — across solves, and (under the
+    /// sharded service) across matrices. The former per-solve
+    /// `thread::scope` spawn is gone from the serve path.
+    mgd_pool: std::sync::OnceLock<MgdPool>,
     parallel_levels: AtomicU64,
     chunks_dispatched: AtomicU64,
     mgd_solves: AtomicU64,
@@ -260,6 +270,7 @@ impl NativeBackend {
             edge_budget: cfg.edge_budget.max(1),
             scheduler: cfg.scheduler,
             pool: std::sync::OnceLock::new(),
+            mgd_pool: std::sync::OnceLock::new(),
             parallel_levels: AtomicU64::new(0),
             chunks_dispatched: AtomicU64::new(0),
             mgd_solves: AtomicU64::new(0),
@@ -272,6 +283,23 @@ impl NativeBackend {
     /// spawned on first use and reused for the backend's lifetime.
     fn level_pool(&self) -> Option<&WorkerPool> {
         (self.threads > 1).then(|| self.pool.get_or_init(|| WorkerPool::new(self.threads)))
+    }
+
+    /// The persistent mgd pool: `None` in single-thread configs, else
+    /// spawned on first use (with `threads - 1` parked workers — the
+    /// solving thread itself is always worker 0) and reused for the
+    /// backend's lifetime.
+    fn mgd_worker_pool(&self) -> Option<&MgdPool> {
+        (self.threads > 1).then(|| self.mgd_pool.get_or_init(|| MgdPool::new(self.threads - 1)))
+    }
+
+    /// Introspection of the persistent mgd pool: worker/live-thread
+    /// counts and sessions served. All-zero until the first multi-worker
+    /// mgd solve spawns the pool (and always in single-thread configs).
+    /// Service lifecycle tests use this to assert that repeated
+    /// start/shutdown cycles reuse the pool instead of leaking threads.
+    pub fn mgd_pool_stats(&self) -> MgdPoolStats {
+        self.mgd_pool.get().map_or(MgdPoolStats::default(), MgdPool::stats)
     }
 
     /// Worker threads backing this instance.
@@ -321,8 +349,10 @@ impl NativeBackend {
 
     /// Barrier-free path: execute the plan's cached
     /// [`MgdPlan`](super::mgd_plan::MgdPlan) (built on first use, sized by
-    /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute`]. Borrows the
-    /// RHS views — no staging copy on this path.
+    /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute_on`] on the
+    /// backend's persistent [`MgdPool`] — workers are parked between
+    /// solves, never respawned. Borrows the RHS views — no staging copy
+    /// on this path.
     fn execute_mgd<B: AsRef<[f32]> + Sync>(
         &self,
         plan: &LevelSolver,
@@ -330,7 +360,13 @@ impl NativeBackend {
     ) -> Result<Vec<Vec<f32>>> {
         let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
         let mgd = plan.mgd_plan(cfg);
-        let (xs, stats) = mgd_exec::execute(&mgd, bs, self.threads)?;
+        // Serial plans (par_width 1, e.g. pure chains) never touch — and
+        // never lazily spawn — the pool; they run inline on this thread.
+        let pool = (mgd.par_width > 1).then(|| self.mgd_worker_pool()).flatten();
+        let (xs, stats) = match pool {
+            Some(pool) => mgd_exec::execute_on(&mgd, bs, pool, self.threads)?,
+            None => mgd_exec::execute(&mgd, bs, 1)?,
+        };
         self.mgd_solves.fetch_add(1, Ordering::Relaxed);
         self.mgd_nodes.fetch_add(stats.nodes_executed, Ordering::Relaxed);
         self.mgd_steals.fetch_add(stats.steals, Ordering::Relaxed);
@@ -464,6 +500,22 @@ impl SolverBackend for NativeBackend {
 
     fn supports_multi_rhs(&self) -> bool {
         true
+    }
+
+    fn prepare(&self, plan: &LevelSolver) -> Result<()> {
+        // Registration-time warmup: build (and cache) the mgd plan and
+        // spawn the persistent pool now, so the first request pays
+        // neither the preprocessing nor the thread-spawn cost. Serial
+        // plans (par_width 1) skip the pool spawn — solves of such a
+        // matrix never engage it (see `execute_mgd`).
+        if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
+            let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
+            let mgd = plan.mgd_plan(cfg);
+            if mgd.par_width > 1 {
+                let _ = self.mgd_worker_pool();
+            }
+        }
+        Ok(())
     }
 
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
@@ -650,6 +702,58 @@ mod tests {
         assert!(stats.nodes_executed > 0, "{stats:?}");
         // The level-path counters stay untouched on the mgd path.
         assert_eq!(nb.stats(), NativeStats::default());
+    }
+
+    #[test]
+    fn mgd_pool_is_persistent_across_solves() {
+        use crate::matrix::triangular::solve_serial;
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Mgd,
+            ..NativeConfig::default()
+        });
+        // No pool before the first solve (lazy spawn).
+        assert_eq!(nb.mgd_pool_stats(), MgdPoolStats::default());
+        // A wide shallow DAG with real node-level parallelism engages the
+        // pool (contiguous clustering keeps chains/bands serial).
+        let m = gen::shallow(1200, 0.4, GenSeed(44));
+        let plan = LevelSolver::new(&m);
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let want = solve_serial(&m, &b);
+        for round in 0..10 {
+            let x = nb.solve(&plan, &b).unwrap();
+            for i in 0..m.n {
+                assert_eq!(x[i].to_bits(), want[i].to_bits(), "round {round} row {i}");
+            }
+            let stats = nb.mgd_pool_stats();
+            // The pool spawns exactly once and never grows per solve —
+            // the whole point of replacing the per-solve thread::scope.
+            assert_eq!(stats.workers, 3, "round {round}: {stats:?}");
+            assert_eq!(stats.live, 3, "round {round}: {stats:?}");
+        }
+        assert!(nb.mgd_pool_stats().sessions >= 10);
+    }
+
+    #[test]
+    fn prepare_warms_plan_and_pool_for_mgd_matrices() {
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 2,
+            scheduler: SchedulerKind::Mgd,
+            ..NativeConfig::default()
+        });
+        // Serial plan: the cached MgdPlan is built, but no pool spawns —
+        // a chain's solves can never engage it.
+        let chain = LevelSolver::new(&gen::chain(200, GenSeed(45)));
+        nb.prepare(&chain).unwrap();
+        assert_eq!(nb.mgd_pool_stats(), MgdPoolStats::default());
+        // Parallel plan: the pool exists before any request is served.
+        let wide = LevelSolver::new(&gen::shallow(800, 0.4, GenSeed(46)));
+        nb.prepare(&wide).unwrap();
+        assert_eq!(nb.mgd_pool_stats().live, 1);
+        // Level-pinned backends skip the warmup entirely.
+        let level = backend(2, 64);
+        level.prepare(&wide).unwrap();
+        assert_eq!(level.mgd_pool_stats(), MgdPoolStats::default());
     }
 
     #[test]

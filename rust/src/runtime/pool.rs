@@ -1,0 +1,459 @@
+//! Persistent worker pool of the barrier-free MGD scheduler.
+//!
+//! [`mgd_exec`](super::mgd_exec) used to spawn scoped workers per solve
+//! (`std::thread::scope`), which is fine at bench sizes but measurable on
+//! tiny latency-critical solves — exactly the repeated-solve regime the
+//! serving runtime targets, where the paper amortizes *all* per-matrix
+//! setup across a stream of right-hand sides. [`MgdPool`] keeps the
+//! workers alive instead: threads are spawned once, park on a condvar
+//! between solves, and join only when the pool is dropped (graceful
+//! shutdown — no detached threads, no leaks under repeated service
+//! start/stop).
+//!
+//! # Session protocol
+//!
+//! One solve is one *session*: [`MgdPool::run`] installs a closure, wakes
+//! the parked workers, runs slot `0` of the closure on the calling thread,
+//! and returns only after every worker that joined the session has left
+//! it. Workers *claim* participant slots (`1..=extra`) under the state
+//! mutex; a session is closed by marking it non-claimable and waiting for
+//! the active count to reach zero. Sessions serialize: the pool executes
+//! one solve at a time, each using every claimed worker (concurrent
+//! callers queue on the install step). That is the intended shape for a
+//! shared serving pool — a solve already fans out across all cores, so
+//! running two at once would just interleave their cache footprints.
+//!
+//! A worker that never wakes in time simply misses the session: the MGD
+//! executor tolerates absent workers (their seeded deques are stolen
+//! empty), so the pool never blocks on a straggler to *start* work, only
+//! to *finish* it.
+//!
+//! # Safety
+//!
+//! The installed closure is stored as a lifetime-erased raw pointer so a
+//! borrowing closure (the executor's, which borrows the per-solve run
+//! state on the caller's stack) can cross into long-lived threads without
+//! a staging copy. Soundness rests on one
+//! invariant, enforced in [`MgdPool::run`] even under unwinding (a drop
+//! guard closes the session if the caller's slot panics): **the call does
+//! not return until no worker can observe the pointer** — the session is
+//! marked closing (no new claims) and `active == 0` (no live borrows)
+//! before the pointer goes out of scope.
+//!
+//! Memory ordering: all session state crosses threads under the state
+//! `Mutex`/`Condvar` pair, which provides the happens-before edges for the
+//! closure pointer and the slot claims. The `x`-slab ordering *inside* a
+//! solve is the executor's counter protocol, documented in
+//! `runtime/atomics.md`.
+
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Point-in-time introspection of one [`MgdPool`] (leak checks, serving
+/// metrics, bench reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MgdPoolStats {
+    /// Worker threads this pool was built with (excludes callers, which
+    /// participate in sessions on their own thread).
+    pub workers: usize,
+    /// Worker threads currently alive. Equal to `workers` from
+    /// construction until drop; a persistent pool must never grow or
+    /// shrink this across solves or service restarts.
+    pub live: usize,
+    /// Sessions executed through [`MgdPool::run`] since construction
+    /// (including caller-only sessions that engaged no worker).
+    pub sessions: u64,
+}
+
+/// Lifetime-erased session closure (`&dyn Fn(usize)` of the caller's
+/// stack frame). Only ever dereferenced between a slot claim and the
+/// matching `active` decrement, both of which the session-close handshake
+/// orders before [`MgdPool::run`] returns.
+#[derive(Clone, Copy)]
+struct SessionFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointer crosses threads only under the state mutex, and the
+// session protocol guarantees the pointee outlives every dereference (see
+// the module-level Safety section).
+unsafe impl Send for SessionFn {}
+
+/// One installed session.
+struct Job {
+    f: SessionFn,
+    /// Next participant slot a worker may claim (slot 0 is the caller's).
+    next_slot: usize,
+    /// Highest claimable slot; `limit` workers may join at most.
+    limit: usize,
+    /// Workers currently executing the closure.
+    active: usize,
+    /// Closing sessions accept no new claims (set by the session closer).
+    closing: bool,
+    /// A worker's closure invocation panicked (reported by `run`).
+    panicked: bool,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for a session (or shutdown).
+    work: Condvar,
+    /// Session closers (and queued installers) park here waiting for
+    /// `active` to drain (or the slot to free up).
+    done: Condvar,
+}
+
+/// A persistent pool of parked MGD workers, shared across solves (and, in
+/// the sharded service, across matrices). Construction spawns the
+/// threads; drop shuts them down gracefully (wake + join).
+pub struct MgdPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    live: Arc<AtomicUsize>,
+    sessions: AtomicU64,
+}
+
+impl MgdPool {
+    /// Spawn a pool of exactly `workers` parked threads. `0` is valid and
+    /// spawns nothing: every [`MgdPool::run`] then executes on the caller
+    /// alone (the serial path keeps working through the same API).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let live = Arc::new(AtomicUsize::new(workers));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = Arc::clone(&shared);
+            let live = Arc::clone(&live);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mgd-pool-{w}"))
+                    .spawn(move || {
+                        worker_loop(&shared);
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    })
+                    .expect("spawn mgd pool worker thread"),
+            );
+        }
+        Self {
+            shared,
+            handles,
+            live,
+            sessions: AtomicU64::new(0),
+        }
+    }
+
+    /// Worker threads this pool was built with.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Worker threads currently alive (see [`MgdPoolStats::live`]).
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot the pool counters.
+    pub fn stats(&self) -> MgdPoolStats {
+        MgdPoolStats {
+            workers: self.workers(),
+            live: self.live_workers(),
+            sessions: self.sessions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute one session: run `f(0)` on the calling thread while up to
+    /// `extra` pool workers (clamped to the pool size) claim slots
+    /// `1..=extra` and run `f(slot)` concurrently. Returns once **every**
+    /// participant has finished — `f` may therefore borrow from the
+    /// caller's stack. Errors if a worker's invocation of `f` panicked;
+    /// a panic on the caller's own slot propagates (after the session is
+    /// closed safely).
+    ///
+    /// Sessions serialize: if another session is in flight, this call
+    /// parks until it fully drains.
+    pub fn run<F: Fn(usize) + Sync>(&self, extra: usize, f: &F) -> Result<()> {
+        self.sessions.fetch_add(1, Ordering::Relaxed);
+        let extra = extra.min(self.handles.len());
+        if extra == 0 {
+            f(0);
+            return Ok(());
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.job.is_some() {
+                // Another session is draining; queue behind it.
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = Some(Job {
+                f: erase(f),
+                next_slot: 1,
+                limit: extra,
+                active: 0,
+                closing: false,
+                panicked: false,
+            });
+            drop(st);
+            self.shared.work.notify_all();
+        }
+        // Close the session even if `f(0)` unwinds: without this, a
+        // worker could later claim a slot and call through a dangling
+        // pointer into a dead stack frame.
+        let mut guard = SessionCloser {
+            shared: &self.shared,
+            armed: true,
+        };
+        f(0);
+        guard.armed = false;
+        drop(guard);
+        let panicked = close_session(&self.shared);
+        ensure!(!panicked, "mgd pool worker panicked during a session");
+        Ok(())
+    }
+}
+
+impl Drop for MgdPool {
+    fn drop(&mut self) {
+        // Graceful shutdown: flag, wake every parked worker, join all.
+        // `&mut self` proves no session is in flight (`run` borrows the
+        // pool for its full duration), so workers exit their loop at the
+        // next wakeup.
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Erase the closure's borrow lifetime for storage in the shared state.
+///
+/// SAFETY: the returned pointer must not be dereferenced after the
+/// session that carries it is closed; [`MgdPool::run`] upholds this by
+/// draining the session before returning (or unwinding).
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> SessionFn {
+    let ptr: *const (dyn Fn(usize) + Sync + 'a) = f;
+    SessionFn(unsafe {
+        std::mem::transmute::<
+            *const (dyn Fn(usize) + Sync + 'a),
+            *const (dyn Fn(usize) + Sync + 'static),
+        >(ptr)
+    })
+}
+
+/// Unwind guard of [`MgdPool::run`]: if the caller's slot-0 invocation
+/// panics, the session must still be closed (and drained) before the
+/// closure's stack frame dies, or a late-claiming worker would call
+/// through a dangling pointer. Disarmed on the normal path, where the
+/// explicit [`close_session`] call reports worker panics.
+struct SessionCloser<'a> {
+    shared: &'a Shared,
+    armed: bool,
+}
+
+impl Drop for SessionCloser<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = close_session(self.shared);
+        }
+    }
+}
+
+/// Mark the current session closing, wait for active workers to drain,
+/// and uninstall it. Returns whether any worker panicked.
+fn close_session(shared: &Shared) -> bool {
+    let mut st = shared.state.lock().unwrap();
+    match st.job.as_mut() {
+        Some(job) => job.closing = true,
+        None => return false,
+    }
+    while st.job.as_ref().is_some_and(|j| j.active > 0) {
+        st = shared.done.wait(st).unwrap();
+    }
+    let job = st.job.take().expect("closing session vanished");
+    drop(st);
+    // Wake sessions queued on the install step.
+    shared.done.notify_all();
+    job.panicked
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let claim = match st.job.as_mut() {
+            Some(job) if !job.closing && job.next_slot <= job.limit => {
+                let slot = job.next_slot;
+                job.next_slot += 1;
+                job.active += 1;
+                Some((job.f, slot))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((f, slot)) => {
+                drop(st);
+                // Catch panics so one bad session cannot kill a pool
+                // thread (the pool must survive for the next solve); the
+                // flag turns it into a loud per-session error.
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // SAFETY: `active` was incremented under the lock, so
+                    // the session closer is still waiting on us — the
+                    // closure's stack frame is alive.
+                    unsafe { (&*f.0)(slot) }
+                }))
+                .is_ok();
+                st = shared.state.lock().unwrap();
+                let job = st.job.as_mut().expect("session closed with active worker");
+                job.active -= 1;
+                if !ok {
+                    job.panicked = true;
+                }
+                shared.done.notify_all();
+            }
+            None => st = shared.work.wait(st).unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn caller_and_workers_all_participate() {
+        let pool = MgdPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.live_workers(), 3);
+        let arrived = AtomicUsize::new(0);
+        // Every slot spins until all four participants arrive, so the
+        // session cannot close before each parked worker has woken,
+        // claimed a slot, and entered the closure.
+        pool.run(3, &|_slot| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < 4 {
+                std::thread::yield_now();
+            }
+        })
+        .unwrap();
+        assert_eq!(arrived.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.stats().sessions, 1);
+    }
+
+    #[test]
+    fn sessions_reuse_the_same_threads() {
+        let pool = MgdPool::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(2, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        // Caller always participates; workers join opportunistically.
+        assert!(hits.load(Ordering::Relaxed) >= 50);
+        let stats = pool.stats();
+        assert_eq!(stats.sessions, 50);
+        assert_eq!(stats.live, 2, "pool must not grow or shrink per solve");
+    }
+
+    #[test]
+    fn concurrent_sessions_serialize_safely() {
+        let pool = Arc::new(MgdPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = Arc::clone(&pool);
+            let total = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    pool.run(2, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.stats().sessions, 40);
+        assert!(total.load(Ordering::Relaxed) >= 40);
+    }
+
+    #[test]
+    fn extra_is_clamped_to_pool_size() {
+        let pool = MgdPool::new(1);
+        let slots = Mutex::new(Vec::new());
+        pool.run(16, &|slot| {
+            slots.lock().unwrap().push(slot);
+        })
+        .unwrap();
+        let seen = slots.into_inner().unwrap();
+        assert!(seen.contains(&0), "caller slot always runs");
+        assert!(seen.iter().all(|&s| s <= 1), "only slots 0..=workers");
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = MgdPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|slot| {
+            assert_eq!(slot, 0);
+            hits.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats(), MgdPoolStats { workers: 0, live: 0, sessions: 1 });
+    }
+
+    #[test]
+    fn worker_panic_is_an_error_and_the_pool_survives() {
+        let pool = MgdPool::new(2);
+        let arrived = AtomicUsize::new(0);
+        let res = pool.run(2, &|slot| {
+            if slot == 0 {
+                // Hold the session open until a worker has actually
+                // claimed a slot (otherwise the panic might never fire).
+                while arrived.load(Ordering::SeqCst) == 0 {
+                    std::thread::yield_now();
+                }
+            } else {
+                arrived.fetch_add(1, Ordering::SeqCst);
+                panic!("boom");
+            }
+        });
+        assert!(res.is_err(), "worker panic must surface as an error");
+        // The pool threads survive the panic and serve the next session.
+        assert_eq!(pool.live_workers(), 2);
+        let ok = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert!(ok.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = MgdPool::new(3);
+        let live = Arc::clone(&pool.live);
+        pool.run(3, &|_| {}).unwrap();
+        drop(pool);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "shutdown leaked a thread");
+    }
+}

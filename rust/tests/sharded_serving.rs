@@ -1,0 +1,195 @@
+//! Lifecycle and correctness tests of the sharded multi-matrix serving
+//! runtime, driven through the public API only:
+//!
+//! - repeated service start/shutdown cycles on one shared backend reuse
+//!   the persistent MGD pool (introspected worker counts stay constant —
+//!   no thread leaks, no respawns);
+//! - an unknown `matrix_key` gets an error reply, never a hang;
+//! - concurrent requests across 3 shards × worker-thread counts
+//!   {1, 2, 8} stay bitwise-identical to the serial reference.
+
+use mgd_sptrsv::coordinator::{ShardedServiceConfig, ShardedSolveService};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::matrix::triangular::solve_serial;
+use mgd_sptrsv::matrix::CsrMatrix;
+use mgd_sptrsv::runtime::{
+    BackendConfig, BackendKind, NativeBackend, NativeConfig, SchedulerKind, SolverBackend,
+};
+use std::sync::Arc;
+
+fn mgd_backend(threads: usize) -> Arc<NativeBackend> {
+    Arc::new(NativeBackend::new(NativeConfig {
+        threads,
+        scheduler: SchedulerKind::Mgd,
+        ..NativeConfig::default()
+    }))
+}
+
+fn sharded_cfg(shards: usize) -> ShardedServiceConfig {
+    ShardedServiceConfig {
+        shards,
+        workers_per_shard: 2,
+        batch_size: 4,
+        ..ShardedServiceConfig::default()
+    }
+}
+
+fn rhs(n: usize, k: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i + 3 * k) % 9) as f32 - 4.0).collect()
+}
+
+#[test]
+fn repeated_start_shutdown_cycles_reuse_the_pool_without_thread_leaks() {
+    let nb = mgd_backend(4);
+    // No pool exists before the first registration warms it.
+    assert_eq!(nb.mgd_pool_stats().live, 0);
+    let m = gen::shallow(1200, 0.4, GenSeed(90));
+    let want = solve_serial(&m, &rhs(m.n, 0));
+    let mut last_sessions = 0u64;
+    for cycle in 0..5 {
+        let backend: Arc<dyn SolverBackend> = nb.clone();
+        let svc = ShardedSolveService::start_with_backend(backend, sharded_cfg(2));
+        svc.register("wide", &m).unwrap();
+        for _ in 0..4 {
+            let resp = svc.solve("wide", rhs(m.n, 0)).unwrap();
+            for i in 0..m.n {
+                assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "cycle {cycle} row {i}");
+            }
+        }
+        svc.shutdown();
+        // The pool belongs to the backend, not the service: start/stop
+        // cycles must neither respawn nor leak its threads.
+        let stats = nb.mgd_pool_stats();
+        assert_eq!(stats.workers, 3, "cycle {cycle}: {stats:?}");
+        assert_eq!(stats.live, 3, "cycle {cycle}: {stats:?}");
+        assert!(
+            stats.sessions > last_sessions,
+            "cycle {cycle}: pool unused ({stats:?})"
+        );
+        last_sessions = stats.sessions;
+    }
+}
+
+#[test]
+fn unknown_matrix_key_gets_an_error_reply_not_a_hang() {
+    let svc = ShardedSolveService::start(sharded_cfg(3)).unwrap();
+    let m = gen::banded(300, 4, 0.6, GenSeed(91));
+    svc.register("present", &m).unwrap();
+    // Submit against a key that was never registered: the reply channel
+    // must deliver a diagnostic error immediately.
+    let rx = svc.submit("absent", vec![0.0; m.n]).unwrap();
+    let err = rx
+        .recv_timeout(std::time::Duration::from_secs(30))
+        .expect("reply must arrive, not hang")
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown matrix key"), "{msg}");
+    assert!(msg.contains("present"), "should list registered keys: {msg}");
+    // The service still serves the registered matrix afterwards.
+    assert!(svc.solve("present", vec![1.0; m.n]).is_ok());
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_requests_across_three_shards_stay_bitwise_serial() {
+    // Three matrices with different DAG shapes on three shards; the MGD
+    // scheduler's contract is bitwise equality with solve_serial at any
+    // thread count, so every reply is checked exactly.
+    let mats: Vec<(&str, CsrMatrix)> = vec![
+        ("wide", gen::shallow(900, 0.4, GenSeed(92))),
+        ("band", gen::banded(700, 3, 0.9, GenSeed(93))),
+        ("deep", gen::circuit(800, 4, 0.8, GenSeed(94))),
+    ];
+    for threads in [1usize, 2, 8] {
+        let backend: Arc<dyn SolverBackend> = mgd_backend(threads);
+        let svc = Arc::new(ShardedSolveService::start_with_backend(
+            backend,
+            sharded_cfg(3),
+        ));
+        for (key, m) in &mats {
+            let entry = svc.register(key, m).unwrap();
+            assert!(entry.shard() < 3);
+        }
+        // 4 submitter threads × 9 requests, round-robin over the keys.
+        let mut submitters = Vec::new();
+        for t in 0..4usize {
+            let svc = Arc::clone(&svc);
+            let mats: Vec<(String, usize)> =
+                mats.iter().map(|(k, m)| (k.to_string(), m.n)).collect();
+            submitters.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for r in 0..9usize {
+                    let (key, n) = &mats[(t + r) % mats.len()];
+                    let b = rhs(*n, t * 9 + r);
+                    let rx = svc.submit(key, b.clone()).unwrap();
+                    got.push((key.clone(), b, rx));
+                }
+                got.into_iter()
+                    .map(|(key, b, rx)| (key, b, rx.recv().unwrap().unwrap()))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for s in submitters {
+            for (key, b, resp) in s.join().unwrap() {
+                let m = &mats.iter().find(|(k, _)| *k == key).unwrap().1;
+                let want = solve_serial(m, &b);
+                for i in 0..m.n {
+                    assert_eq!(
+                        resp.x[i].to_bits(),
+                        want[i].to_bits(),
+                        "threads={threads} key={key} row {i}"
+                    );
+                }
+            }
+        }
+        let agg = svc.stats();
+        assert_eq!(agg.served, 36, "threads={threads}: {agg:?}");
+        assert_eq!(agg.errors, 0, "threads={threads}: {agg:?}");
+        // Every shard owns one matrix and saw 12 of the 36 requests.
+        for s in svc.shard_stats() {
+            assert_eq!(s.served, 12, "threads={threads}: {s:?}");
+        }
+        let registry = svc.registry();
+        assert_eq!(registry.len(), 3);
+        let total: u64 = registry
+            .keys()
+            .iter()
+            .map(|k| registry.get(k).unwrap().served())
+            .sum();
+        assert_eq!(total, 36);
+        Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+    }
+}
+
+#[test]
+fn per_shard_backends_serve_correctly() {
+    let cfg = ShardedServiceConfig {
+        backend: BackendConfig {
+            kind: BackendKind::Native,
+            native: NativeConfig {
+                threads: 2,
+                scheduler: SchedulerKind::Mgd,
+                ..NativeConfig::default()
+            },
+            ..BackendConfig::default()
+        },
+        backend_per_shard: true,
+        ..sharded_cfg(2)
+    };
+    let svc = ShardedSolveService::start(cfg).unwrap();
+    let ma = gen::shallow(600, 0.4, GenSeed(95));
+    let mb = gen::chain(400, GenSeed(96));
+    svc.register("a", &ma).unwrap();
+    svc.register("b", &mb).unwrap();
+    for k in 0..6 {
+        let (key, m) = if k % 2 == 0 { ("a", &ma) } else { ("b", &mb) };
+        let b = rhs(m.n, k);
+        let resp = svc.solve(key, b.clone()).unwrap();
+        let want = solve_serial(m, &b);
+        for i in 0..m.n {
+            assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "k={k} row {i}");
+        }
+    }
+    assert_eq!(svc.stats().served, 6);
+    svc.shutdown();
+}
