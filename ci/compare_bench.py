@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a BENCH_*.json artifact against its
+committed baseline.
+
+Usage:
+    python3 ci/compare_bench.py <baseline.json> <bench.json>
+
+The baseline file pins the headline ratio(s) of one experiment:
+
+    {
+      "experiment": "schedulers",
+      "metrics": {
+        "deep_geomean_speedup": {"baseline": 1.6, "tolerance": 0.25}
+      }
+    }
+
+For each metric, the gate reads the same-named top-level key from the
+bench JSON and FAILS (exit 1) when
+
+    value < baseline * (1 - tolerance)
+
+i.e. a >25% regression of the pinned ratio (per-metric tolerance
+overridable). The check is one-sided on purpose: these are
+speedup/throughput ratios measured on shared CI runners, where the
+*upside* is noisy but a collapse (the optimized path losing to its
+baseline) is exactly the regression the gate exists to catch.
+Improvements print a note suggesting the baseline be re-pinned.
+
+Baselines live in ci/bench_baselines/ and should be re-pinned from the
+uploaded workflow artifacts whenever the runner class or the headline
+workloads change.
+
+No third-party dependencies; runs on the stock python3 of the CI image.
+"""
+
+import json
+import sys
+
+DEFAULT_TOLERANCE = 0.25
+
+
+def fail(msg):
+    print(f"bench-regression: ERROR: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail(f"usage: {sys.argv[0]} <baseline.json> <bench.json>")
+    baseline_path, bench_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot read baseline {baseline_path}: {e}")
+    try:
+        with open(bench_path) as f:
+            bench = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot read bench artifact {bench_path}: {e}")
+
+    experiment = baseline.get("experiment")
+    if not experiment:
+        fail(f"{baseline_path} has no 'experiment' field")
+    if bench.get("experiment") != experiment:
+        fail(
+            f"experiment mismatch: baseline is {experiment!r}, "
+            f"artifact is {bench.get('experiment')!r}"
+        )
+    metrics = baseline.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        fail(f"{baseline_path} pins no metrics")
+
+    regressions = []
+    for name, spec in sorted(metrics.items()):
+        if name not in bench:
+            fail(f"artifact {bench_path} is missing pinned metric {name!r}")
+        value = bench[name]
+        if not isinstance(value, (int, float)):
+            fail(f"metric {name!r} is not numeric in {bench_path}: {value!r}")
+        pinned = spec.get("baseline")
+        if not isinstance(pinned, (int, float)) or pinned <= 0:
+            fail(f"baseline for {name!r} must be a positive number, got {pinned!r}")
+        tolerance = spec.get("tolerance", DEFAULT_TOLERANCE)
+        floor = pinned * (1.0 - tolerance)
+        status = "OK"
+        if value < floor:
+            status = "REGRESSION"
+            regressions.append(name)
+        elif value > pinned * (1.0 + tolerance):
+            status = "improved (consider re-pinning the baseline)"
+        print(
+            f"bench-regression[{experiment}] {name}: value={value:.4f} "
+            f"baseline={pinned:.4f} floor={floor:.4f} ({tolerance:.0%} tol) -> {status}"
+        )
+
+    if regressions:
+        fail(
+            f"{experiment}: {len(regressions)} metric(s) regressed >"
+            f" tolerance: {', '.join(regressions)}"
+        )
+    print(f"bench-regression[{experiment}]: all pinned metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()

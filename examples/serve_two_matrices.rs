@@ -1,6 +1,7 @@
 //! Sharded multi-matrix serving end to end: start a 2-shard service,
 //! register two triangular factors by key, stream interleaved requests
-//! against both, and read the per-shard/aggregate serving stats.
+//! against both, hot-swap one factor live, evict the other, and read
+//! the per-shard/aggregate serving stats.
 //!
 //! This is the registry API walkthrough referenced from ARCHITECTURE.md.
 //!
@@ -75,6 +76,37 @@ fn main() -> anyhow::Result<()> {
     let err = svc.solve("no_such_matrix", vec![0.0; 8]).unwrap_err();
     println!("unknown key rejected as expected: {err:#}");
 
+    // Live hot swap: replace the power-grid factor (say, after a
+    // re-factorization) without stopping traffic. The new entry is
+    // compiled, simulated and planned off the hot path, the owning
+    // shard's backend is warmed, and only then is the entry published
+    // atomically — requests mid-swap are served by whichever
+    // fully-formed entry they resolve.
+    let grid2 = gen::shallow(3000, 0.4, GenSeed(3));
+    let swapped = svc.swap("power_grid", &grid2)?;
+    println!(
+        "hot-swapped power_grid (still shard {}, {} lifetime requests on the key)",
+        swapped.shard(),
+        swapped.served(),
+    );
+    let b: Vec<f32> = (0..grid2.n).map(|i| (i % 5) as f32 - 2.0).collect();
+    let resp = svc.solve("power_grid", b.clone())?;
+    let want = solve_serial(&grid2, &b);
+    for i in 0..grid2.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "post-swap row {i}");
+    }
+
+    // Eviction: retire a cold matrix. The call drains any in-flight
+    // requests for the key, then the plan drops with its last reference;
+    // the key is immediately unknown to new submits and free to reuse.
+    let evicted = svc.evict("transient_band")?;
+    println!(
+        "evicted transient_band after {} requests; registry now holds {:?}",
+        evicted.served(),
+        svc.registry().keys(),
+    );
+    assert!(svc.solve("transient_band", vec![0.0; 8]).is_err());
+
     for s in svc.shard_stats() {
         println!(
             "shard {}: {} served, {} errors, {} dispatch rounds, {:.3} ms in backend",
@@ -88,12 +120,14 @@ fn main() -> anyhow::Result<()> {
     let agg = svc.stats();
     println!(
         "aggregate: {} served across {} shards on the {} backend \
-         (per-matrix: power_grid={}, transient_band={})",
+         (power_grid lifetime={}, evicted transient_band={}, \
+         peak pool-session concurrency={})",
         agg.served,
         agg.shards,
         svc.backend_name(),
         svc.registry().get("power_grid").unwrap().served(),
-        svc.registry().get("transient_band").unwrap().served(),
+        evicted.served(),
+        agg.peak_concurrency,
     );
     svc.shutdown();
     Ok(())

@@ -1,0 +1,19 @@
+//! `cargo bench --bench concurrency` — overlapped vs serialized pool
+//! sessions on one shared native backend (emits BENCH_concurrency.json).
+//! Scale via MGD_BENCH_SCALE=small|full (default small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("concurrency", &scale) {
+        Ok(out) => {
+            println!("==== concurrency (scale={scale}) ====");
+            println!("{out}");
+            println!("[concurrency completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("concurrency failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

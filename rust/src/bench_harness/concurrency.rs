@@ -1,0 +1,332 @@
+//! Overlapped vs serialized pool-session throughput
+//! (`mgd bench concurrency`): total wall time for a fixed batch of small
+//! solves on **distinct matrices** when the solves are issued one at a
+//! time (the serialized-session regime PR 3 lived in — every solve owned
+//! the whole pool) versus issued from several submitter threads at once,
+//! overlapping as concurrent slot-leased sessions of one shared
+//! [`MgdPool`](crate::runtime::MgdPool). Emits the machine-readable
+//! `BENCH_concurrency.json` artifact consumed by CI's bench-regression
+//! gate.
+//!
+//! The suite is deliberately **small and mixed**: small solves cannot
+//! keep every worker busy for their whole duration (serial DAG
+//! stretches, session setup, unclaimed slots), which is exactly where
+//! overlapping independent solve fronts — the scheduling insight of the
+//! parallel-SpTRSV literature — recovers throughput. Each scenario also
+//! reports the pool's observed `peak_concurrency`, the proof that the
+//! overlapped mode really ran sessions side by side.
+//!
+//! Every matrix is verified **bitwise** against
+//! [`solve_serial`] before any timing (the MGD contract), so the table
+//! cannot quietly report a fast-but-wrong runtime.
+
+use super::workloads::Workload;
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::triangular::solve_serial;
+use crate::runtime::{LevelSolver, NativeBackend, NativeConfig, SchedulerKind, SolverBackend};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Worker-thread count the shared backend runs with (fixed so the
+/// artifact is comparable across machines with different core counts).
+pub const CONCURRENCY_THREADS: usize = 4;
+
+/// Solves each submitter issues per timed run.
+pub const SOLVES_PER_SUBMITTER: usize = 24;
+
+/// One scenario's measurements.
+#[derive(Debug, Clone)]
+pub struct ConcRow {
+    /// Submitter threads in the overlapped mode.
+    pub submitters: usize,
+    /// Total solves per mode (`submitters × SOLVES_PER_SUBMITTER`).
+    pub solves: u64,
+    /// Wall milliseconds for the whole batch, solves issued one at a
+    /// time from a single thread (sessions never overlap).
+    pub serial_ms: f64,
+    /// Wall milliseconds for the same batch issued from `submitters`
+    /// threads against the same backend (sessions overlap).
+    pub overlapped_ms: f64,
+    /// Pool session-concurrency high-water mark observed during the
+    /// overlapped run (`>= 2` proves sessions really overlapped).
+    pub peak_concurrency: usize,
+}
+
+impl ConcRow {
+    /// Throughput gain of overlapped sessions over serialized issue
+    /// (> 1 = concurrency wins).
+    pub fn speedup(&self) -> f64 {
+        self.serial_ms / self.overlapped_ms.max(1e-12)
+    }
+}
+
+/// Concurrency workloads: distinct small matrices whose node DAGs expose
+/// real parallelism (`par_width > 1`, so every solve actually opens a
+/// multi-worker pool session) without any single solve saturating the
+/// pool for its whole duration — the regime where overlapping sessions
+/// has room to help. Contiguous clustering keeps chains and bands
+/// serial, so the suite sticks to shallow scattered-dependency shapes.
+/// `scale` ∈ {"small", "full"} sizes the matrices.
+pub fn concurrency_suite(scale: &str) -> Vec<Workload> {
+    let f = if scale == "small" { 1 } else { 4 };
+    let mk = |name, matrix| Workload { name, matrix };
+    vec![
+        mk("wide_a", gen::shallow(900 * f, 0.3, GenSeed(401))),
+        mk("wide_b", gen::shallow(1200 * f, 0.4, GenSeed(402))),
+        mk("wide_c", gen::shallow(700 * f, 0.5, GenSeed(403))),
+        mk("wide_d", gen::shallow(1500 * f, 0.35, GenSeed(404))),
+    ]
+}
+
+fn native_cfg() -> NativeConfig {
+    NativeConfig {
+        threads: CONCURRENCY_THREADS,
+        scheduler: SchedulerKind::Mgd,
+        ..NativeConfig::default()
+    }
+}
+
+/// The fixed request mix of one timed run: `(matrix index, rhs)` pairs,
+/// identical for both modes so the comparison is solve-for-solve fair.
+/// Matrix choice is a seeded PRNG draw, not `k % len` — a cyclic pattern
+/// would let the submitters' strided slices each pin one matrix instead
+/// of genuinely mixing traffic.
+fn request_mix(plans: &[Arc<LevelSolver>], total: usize) -> Vec<(usize, Vec<f32>)> {
+    let mut rng = crate::util::XorShift64::new(0x5EED_C0DE);
+    (0..total)
+        .map(|k| {
+            let which = rng.range(0, plans.len());
+            let n = plans[which].n();
+            let b = (0..n).map(|i| ((i + 2 * k) % 9) as f32 - 4.0).collect();
+            (which, b)
+        })
+        .collect()
+}
+
+/// Run the whole mix through `backend`, issued from `submitters` threads
+/// (1 = the serialized baseline). Returns the wall time in milliseconds.
+/// Each submitter takes a strided slice of the mix, so the per-matrix
+/// composition is identical across modes and thread counts.
+fn run_mix(
+    backend: &NativeBackend,
+    plans: &[Arc<LevelSolver>],
+    mix: &[(usize, Vec<f32>)],
+    submitters: usize,
+) -> Result<f64> {
+    let t0 = Instant::now();
+    if submitters <= 1 {
+        for (which, b) in mix {
+            backend.solve(&plans[*which], b)?;
+        }
+    } else {
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(submitters);
+            for s in 0..submitters {
+                handles.push(scope.spawn(move || -> Result<()> {
+                    for (which, b) in mix.iter().skip(s).step_by(submitters) {
+                        backend.solve(&plans[*which], b)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().expect("submitter thread panicked")?;
+            }
+            Ok(())
+        })?;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Measure overlapped vs serialized session throughput over `suite` for
+/// each submitter count, on one shared backend per scenario.
+pub fn concurrency_compare(suite: &[Workload]) -> Result<(crate::util::Table, Vec<ConcRow>)> {
+    ensure!(!suite.is_empty(), "concurrency suite is empty");
+    let mut t = crate::util::Table::new(vec![
+        "submitters",
+        "solves",
+        "serial ms",
+        "overlapped ms",
+        "speedup",
+        "peak concurrency",
+    ]);
+    let mut rows = Vec::new();
+    for &submitters in &[2usize, 4] {
+        // A fresh backend per scenario so `peak_concurrency` reflects
+        // this scenario's overlapped run alone (the serialized phase
+        // only ever holds one session in flight).
+        let backend = NativeBackend::new(native_cfg());
+        let plans: Vec<Arc<LevelSolver>> = suite
+            .iter()
+            .map(|w| Arc::new(LevelSolver::new(&w.matrix)))
+            .collect();
+        // Verify bitwise and warm the cached plans + pool before timing.
+        for (w, plan) in suite.iter().zip(&plans) {
+            let b: Vec<f32> = (0..w.matrix.n).map(|i| (i % 7) as f32 - 3.0).collect();
+            let x = backend.solve(plan, &b)?;
+            let want = solve_serial(&w.matrix, &b);
+            for i in 0..w.matrix.n {
+                ensure!(
+                    x[i].to_bits() == want[i].to_bits(),
+                    "concurrency path not bitwise-serial on {} row {i}: {} vs {}",
+                    w.name,
+                    x[i],
+                    want[i],
+                );
+            }
+        }
+        let mix = request_mix(&plans, submitters * SOLVES_PER_SUBMITTER);
+        // Best-of-2 on each mode to shave scheduler noise; the serialized
+        // baseline runs first so its sessions cannot inflate the
+        // overlapped phase's peak-concurrency reading.
+        let serial_ms = run_mix(&backend, &plans, &mix, 1)?
+            .min(run_mix(&backend, &plans, &mix, 1)?);
+        debug_assert!(backend.mgd_pool_stats().peak_concurrency <= 1);
+        let overlapped_ms = run_mix(&backend, &plans, &mix, submitters)?
+            .min(run_mix(&backend, &plans, &mix, submitters)?);
+        let peak = backend.mgd_pool_stats().peak_concurrency;
+        let row = ConcRow {
+            submitters,
+            solves: mix.len() as u64,
+            serial_ms,
+            overlapped_ms,
+            peak_concurrency: peak,
+        };
+        t.row(vec![
+            row.submitters.to_string(),
+            row.solves.to_string(),
+            format!("{:.4}", row.serial_ms),
+            format!("{:.4}", row.overlapped_ms),
+            format!("{:.2}x", row.speedup()),
+            row.peak_concurrency.to_string(),
+        ]);
+        rows.push(row);
+    }
+    Ok((t, rows))
+}
+
+/// Geometric-mean overlapped-over-serialized speedup across scenarios —
+/// the headline ratio the CI bench-regression gate watches.
+pub fn overlap_geomean_speedup(rows: &[ConcRow]) -> f64 {
+    if rows.is_empty() {
+        return 1.0;
+    }
+    (rows.iter().map(|r| r.speedup().ln()).sum::<f64>() / rows.len() as f64).exp()
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[ConcRow]) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"concurrency\",\n");
+    out.push_str(&format!("  \"threads\": {CONCURRENCY_THREADS},\n"));
+    out.push_str(&format!(
+        "  \"overlap_geomean_speedup\": {:.4},\n  \"rows\": [\n",
+        overlap_geomean_speedup(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"submitters\": {}, \"solves\": {}, \"serial_ms\": {:.6}, \
+             \"overlapped_ms\": {:.6}, \"speedup\": {:.4}, \"peak_concurrency\": {}}}{}\n",
+            r.submitters,
+            r.solves,
+            r.serial_ms,
+            r.overlapped_ms,
+            r.speedup(),
+            r.peak_concurrency,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_concurrency.json`).
+pub fn write_json(path: &Path, rows: &[ConcRow]) -> Result<()> {
+    std::fs::write(path, render_json(rows)).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_suite() -> Vec<Workload> {
+        vec![
+            Workload {
+                name: "wide_tiny_a",
+                matrix: gen::shallow(500, 0.4, GenSeed(411)),
+            },
+            Workload {
+                name: "wide_tiny_b",
+                matrix: gen::shallow(650, 0.3, GenSeed(412)),
+            },
+        ]
+    }
+
+    #[test]
+    fn compare_runs_verifies_and_overlaps() {
+        let (t, rows) = concurrency_compare(&tiny_suite()).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("serial ms"));
+        assert!(s.contains("overlapped ms"));
+        for r in &rows {
+            assert!(r.serial_ms > 0.0 && r.overlapped_ms > 0.0);
+            assert_eq!(r.solves, (r.submitters * SOLVES_PER_SUBMITTER) as u64);
+            // Dozens of simultaneous submissions of multi-node solves:
+            // at least one pair must have been in flight together.
+            assert!(
+                r.peak_concurrency >= 2,
+                "overlapped mode never overlapped: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let rows = vec![
+            ConcRow {
+                submitters: 2,
+                solves: 48,
+                serial_ms: 10.0,
+                overlapped_ms: 6.5,
+                peak_concurrency: 2,
+            },
+            ConcRow {
+                submitters: 4,
+                solves: 96,
+                serial_ms: 20.0,
+                overlapped_ms: 11.0,
+                peak_concurrency: 4,
+            },
+        ];
+        let j = render_json(&rows);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"concurrency\""));
+        assert!(j.contains("\"overlap_geomean_speedup\""));
+        assert!(j.contains("\"peak_concurrency\": 4"));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let g = overlap_geomean_speedup(&rows);
+        assert!(g > 1.0 && g < 2.0, "{g}");
+    }
+
+    #[test]
+    fn concurrency_suite_has_distinct_parallel_matrices() {
+        use crate::runtime::MgdPlanConfig;
+        let suite = concurrency_suite("small");
+        assert!(suite.len() >= 2, "need distinct matrices to overlap");
+        for w in &suite {
+            w.matrix.validate().unwrap();
+            let plan = LevelSolver::new(&w.matrix);
+            let mgd = plan.mgd_plan(MgdPlanConfig::auto(
+                plan.n(),
+                plan.num_levels(),
+                CONCURRENCY_THREADS,
+            ));
+            assert!(mgd.par_width > 1, "{}: no parallelism to schedule", w.name);
+        }
+    }
+}

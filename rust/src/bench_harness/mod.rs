@@ -7,6 +7,7 @@
 //! values from the authors' testbed.
 
 pub mod backends;
+pub mod concurrency;
 pub mod fig10;
 pub mod fig11;
 pub mod fig9;

@@ -1,7 +1,7 @@
 //! Experiment runner used by the CLI and the `cargo bench` targets: maps an
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
-use super::{backends, fig10, fig11, fig9, schedulers, serving, tables, workloads};
+use super::{backends, concurrency, fig10, fig11, fig9, schedulers, serving, tables, workloads};
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
 
@@ -56,6 +56,19 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
                 json_path.display(),
             )
         }
+        "concurrency" => {
+            let conc_suite = concurrency::concurrency_suite(scale);
+            let (t, rows) = concurrency::concurrency_compare(&conc_suite)?;
+            let json_path = std::path::Path::new("BENCH_concurrency.json");
+            concurrency::write_json(json_path, &rows)?;
+            format!(
+                "{}\noverlapped-submitters geomean speedup (concurrent sessions over serialized): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                concurrency::overlap_geomean_speedup(&rows),
+                json_path.display(),
+            )
+        }
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -92,6 +105,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "backends",
     "schedulers",
     "serving",
+    "concurrency",
 ];
 
 #[cfg(test)]

@@ -6,8 +6,9 @@
 //! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto]
 //!                        [--scheduler level|mgd|auto] [--artifacts DIR]
 //! mgd serve    --matrices <spec,spec,...> [--shards N] [--workers N]
-//!                        [--requests N] [--backend ...] [--scheduler ...]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|all>
+//!                        [--requests N] [--swap-every N] [--backend ...]
+//!                        [--scheduler ...]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|all>
 //!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
@@ -176,6 +177,11 @@ fn run_inner() -> Result<()> {
                 .unwrap_or("32")
                 .parse()
                 .context("--requests")?;
+            let swap_every: usize = flag_value(&args, "--swap-every")
+                .as_deref()
+                .unwrap_or("0")
+                .parse()
+                .context("--swap-every")?;
             let cfg = ShardedServiceConfig {
                 shards,
                 workers_per_shard: workers,
@@ -200,8 +206,24 @@ fn run_inner() -> Result<()> {
             }
             // Synthetic request stream, round-robin across the registered
             // matrices; every reply is awaited (and its error surfaced).
+            // With --swap-every N, every Nth request triggers a live hot
+            // swap of the next matrix (reloaded from its spec) while the
+            // stream keeps flowing — the requests straddling the swap are
+            // served by whichever fully-formed entry they resolve.
             let mut rxs = Vec::with_capacity(requests);
+            let mut swaps = 0usize;
             for i in 0..requests {
+                if swap_every > 0 && i > 0 && i % swap_every == 0 {
+                    let (key, _) = &keys[swaps % keys.len()];
+                    let m = load_matrix(key)?;
+                    let entry = svc.swap(key, &m)?;
+                    println!(
+                        "hot-swapped {key:?} mid-stream (shard {}, {} served on this key so far)",
+                        entry.shard(),
+                        entry.served(),
+                    );
+                    swaps += 1;
+                }
                 let (key, n) = &keys[i % keys.len()];
                 rxs.push(svc.submit(key, vec![1.0f32; *n])?);
             }
@@ -221,7 +243,8 @@ fn run_inner() -> Result<()> {
             println!("{}", t.render());
             let agg = svc.stats();
             println!(
-                "backend {}; {} matrices on {} shards; {} served, {} errors, {} rounds, {:.3} ms in backend",
+                "backend {}; {} matrices on {} shards; {} served, {} errors, {} rounds, \
+                 {:.3} ms in backend; peak pool-session concurrency {}",
                 svc.backend_name(),
                 svc.registry().len(),
                 svc.num_shards(),
@@ -229,6 +252,7 @@ fn run_inner() -> Result<()> {
                 agg.errors,
                 agg.batched_rounds,
                 agg.solve_seconds * 1e3,
+                agg.peak_concurrency,
             );
             svc.shutdown();
         }
@@ -269,8 +293,10 @@ fn print_usage() {
          \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
          \x20 mgd serve   --matrices <spec,spec,...> [--shards N] [--workers N]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--backend ...] [--scheduler ...]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--swap-every N] [--backend ...]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats;\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --swap-every N hot-swaps a matrix every N requests\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
@@ -279,7 +305,7 @@ fn print_usage() {
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
          \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
-         \x20 backends schedulers serving"
+         \x20 backends schedulers serving concurrency"
     );
 }
 
@@ -364,6 +390,28 @@ mod tests {
         let cfg = backend_config(&args).unwrap();
         assert_eq!(cfg.kind, BackendKind::Auto);
         assert_eq!(cfg.native.scheduler, SchedulerKind::Auto);
+    }
+
+    #[test]
+    fn swap_every_flag_parses_with_zero_default() {
+        let args: Vec<String> = ["serve", "--matrices", "gen:chain:50:1", "--swap-every", "8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let every: usize = flag_value(&args, "--swap-every")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(every, 8);
+        // Unset means never swap.
+        let none: Vec<String> = vec!["serve".into()];
+        let every: usize = flag_value(&none, "--swap-every")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(every, 0);
     }
 
     #[test]

@@ -118,10 +118,23 @@ pub struct ServingStats {
     /// Total backend wall-clock seconds, summed over shards (shards solve
     /// concurrently, so this can exceed elapsed wall time).
     pub solve_seconds: f64,
+    /// Worker-pool sessions in flight right now, summed over the
+    /// service's distinct backends (zero for pool-less backends). Filled
+    /// in by `ShardedSolveService::stats`; [`ServingStats::aggregate`]
+    /// initializes it to zero.
+    pub concurrent_sessions: u64,
+    /// High-water mark of simultaneously in-flight pool sessions (max
+    /// over the service's distinct backends) — `>= 2` proves two solves
+    /// overlapped in one pool instead of queueing. Filled in by
+    /// `ShardedSolveService::stats`.
+    pub peak_concurrency: u64,
 }
 
 impl ServingStats {
-    /// Sum per-shard snapshots into the service-wide view.
+    /// Sum per-shard snapshots into the service-wide view. Pool
+    /// concurrency is a backend-level (not shard-level) quantity, so the
+    /// concurrency fields start at zero here; the service fills them in
+    /// from its backends' pool stats.
     pub fn aggregate(per_shard: &[ShardStats]) -> Self {
         Self {
             shards: per_shard.len(),
@@ -129,6 +142,8 @@ impl ServingStats {
             errors: per_shard.iter().map(|s| s.errors).sum(),
             batched_rounds: per_shard.iter().map(|s| s.batched_rounds).sum(),
             solve_seconds: per_shard.iter().map(|s| s.solve_seconds).sum(),
+            concurrent_sessions: 0,
+            peak_concurrency: 0,
         }
     }
 }

@@ -16,10 +16,16 @@
 //!   through the configured [`crate::runtime::SolverBackend`] — shared
 //!   across shards by default, so the native backend's **persistent MGD
 //!   worker pool** is spawned once and reused across every solve and
-//!   matrix;
+//!   matrix, with independent solves overlapping as concurrent pool
+//!   sessions;
+//! - matrices are **dynamic**: [`ShardedSolveService::evict`] retires a
+//!   key after draining its in-flight requests, and
+//!   [`ShardedSolveService::swap`] replaces a key's matrix live with an
+//!   atomically published, pre-warmed entry;
 //! - per-shard [`ShardCounters`] roll up into service-wide
-//!   [`ServingStats`]; per-request accelerator metrics
-//!   ([`SolveMetrics`]) come from the one-time simulation.
+//!   [`ServingStats`] (which also surfaces pool-session concurrency);
+//!   per-request accelerator metrics ([`SolveMetrics`]) come from the
+//!   one-time simulation.
 //!
 //! [`SolveService`] is the single-matrix facade over the same machinery
 //! (one shard, one registered matrix) used by `mgd solve` and the

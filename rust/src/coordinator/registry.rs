@@ -1,4 +1,5 @@
-//! Multi-matrix registry of the sharded serving runtime.
+//! Multi-matrix registry of the sharded serving runtime, with live
+//! eviction and hot swap.
 //!
 //! The paper's accelerator amortizes all per-matrix preprocessing —
 //! clustering, ICR reordering, scheduling — across a stream of solves of
@@ -10,10 +11,24 @@
 //! key only routes, gathers and executes — no per-request setup of any
 //! kind.
 //!
+//! The registry is also the matrix **lifecycle** boundary:
+//!
+//! - [`MatrixRegistry::evict`] retires a key: the key becomes unknown
+//!   immediately (new submits get the error reply), the call drains the
+//!   requests already routed against the entry, and the plan drops with
+//!   the last reference. The key is then free for re-registration.
+//! - [`MatrixRegistry::swap`] replaces a key's matrix **live**: the new
+//!   entry is compiled/simulated/planned entirely off the hot path, then
+//!   published under the write lock in one pointer move — a concurrent
+//!   request observes either the old fully-formed entry or the new one,
+//!   never a torn mix. In-flight requests against the old entry finish
+//!   on the plan they resolved (their `Arc` keeps it alive).
+//!
 //! Shard assignment is round-robin in registration order, which spreads
 //! matrices evenly across the service's shards without any knowledge of
 //! the request mix; the entry records its shard so routing is a single
-//! map lookup.
+//! map lookup. A swap keeps the old entry's shard, so a key never
+//! migrates between request queues mid-stream.
 
 use super::metrics::SolveMetrics;
 use crate::compiler::{compile, CompilerConfig, Program};
@@ -26,13 +41,23 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// One registered matrix: everything the serve path needs, prepared once.
+///
+/// The `served` and `inflight` counters are **lineage-shared**: a
+/// [`MatrixRegistry::swap`] clones them into the replacement entry, so a
+/// key's counters stay exact across swaps — a reply delivered against a
+/// pre-swap entry still counts, and an evict drains requests in flight
+/// against *any* entry the key ever resolved to. Evict + re-register
+/// starts a fresh lineage (counters reset).
 pub struct RegisteredMatrix {
     key: String,
     shard: usize,
     solver: Arc<LevelSolver>,
     program: Arc<Program>,
     metrics: SolveMetrics,
-    served: AtomicU64,
+    served: Arc<AtomicU64>,
+    /// Requests routed against this key whose replies have not been
+    /// delivered yet — what [`MatrixRegistry::evict`] drains.
+    inflight: Arc<AtomicU64>,
 }
 
 impl RegisteredMatrix {
@@ -63,14 +88,29 @@ impl RegisteredMatrix {
         &self.metrics
     }
 
-    /// Requests served against this matrix so far.
+    /// Requests served against this key so far — a per-key lifetime
+    /// counter, exact across [`MatrixRegistry::swap`] (the counter is
+    /// shared with the replaced entry, so late replies against it still
+    /// land here); reset by evict + re-register.
     pub fn served(&self) -> u64 {
         self.served.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently routed against this key (any entry in its swap
+    /// lineage) and not yet replied.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
     }
 
     /// Count `n` served requests (called by shard workers).
     pub(crate) fn note_served(&self, n: u64) {
         self.served.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One request finished (replied or dropped); pairs with the
+    /// increment `MatrixRegistry::checkout` performed at route time.
+    pub(crate) fn note_done(&self) {
+        self.inflight.fetch_sub(1, Ordering::Release);
     }
 }
 
@@ -81,14 +121,17 @@ impl std::fmt::Debug for RegisteredMatrix {
             .field("shard", &self.shard)
             .field("n", &self.solver.n())
             .field("served", &self.served())
+            .field("inflight", &self.inflight())
             .finish_non_exhaustive()
     }
 }
 
-/// Key → prepared-matrix map with round-robin shard assignment.
+/// Key → prepared-matrix map with round-robin shard assignment, live
+/// eviction and atomic hot swap.
 ///
-/// Lookups are lock-cheap (`RwLock` read); registration takes the write
-/// lock only to insert — the compile/simulate work happens outside it.
+/// Lookups are lock-cheap (`RwLock` read); registration and swap take the
+/// write lock only to publish — the compile/simulate work happens outside
+/// it.
 pub struct MatrixRegistry {
     shards: usize,
     compiler: CompilerConfig,
@@ -111,14 +154,16 @@ impl MatrixRegistry {
         self.shards
     }
 
-    /// Register `m` under `key`: compile, simulate once (double-entry
-    /// verification + shared cost model), build the solve plan, and
-    /// assign a shard. Errors if the key is already registered — a key is
-    /// an identity, not a slot to overwrite.
-    pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
-        if self.inner.read().unwrap().contains_key(key) {
-            bail!("matrix key {key:?} is already registered");
-        }
+    /// Compile, simulate (double-entry verification + shared cost model)
+    /// and plan one matrix — the expensive part of registration and swap,
+    /// always run with **no registry lock held**. The cheap
+    /// [`RegisteredMatrix`] wrapper is assembled by the caller once the
+    /// shard and lineage counters are known (at publish time).
+    fn prepare_parts(
+        &self,
+        key: &str,
+        m: &CsrMatrix,
+    ) -> Result<(Arc<Program>, SolveMetrics, Arc<LevelSolver>)> {
         let program = Arc::new(
             compile(m, &self.compiler).with_context(|| format!("compile matrix {key:?}"))?,
         );
@@ -132,37 +177,149 @@ impl MatrixRegistry {
             .with_context(|| format!("double-entry check for matrix {key:?}"))?;
         let metrics = SolveMetrics::from_run(&run.stats, &self.compiler.arch, program.flops());
         let solver = Arc::new(LevelSolver::new(m));
+        Ok((program, metrics, solver))
+    }
+
+    /// Register `m` under `key`: compile, simulate once, build the solve
+    /// plan, and assign a shard. Errors if the key is already registered
+    /// — a key is an identity, not a slot to overwrite (use
+    /// [`MatrixRegistry::swap`] to replace a live key).
+    pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
+        if self.inner.read().unwrap().contains_key(key) {
+            bail!("matrix key {key:?} is already registered");
+        }
+        let (program, metrics, solver) = self.prepare_parts(key, m)?;
         let mut map = self.inner.write().unwrap();
         // Re-check under the write lock: a concurrent register of the
         // same key must not be silently clobbered.
         if map.contains_key(key) {
             bail!("matrix key {key:?} is already registered");
         }
+        // Shard assignment and the fresh lineage counters are decided
+        // here, under the write lock — the single derivation point.
         let entry = Arc::new(RegisteredMatrix {
             key: key.to_string(),
             shard: map.len() % self.shards,
             solver,
             program,
             metrics,
-            served: AtomicU64::new(0),
+            served: Arc::new(AtomicU64::new(0)),
+            inflight: Arc::new(AtomicU64::new(0)),
         });
         map.insert(key.to_string(), Arc::clone(&entry));
         Ok(entry)
     }
 
-    /// Look up a registered matrix by key.
+    /// Replace the matrix registered under `key` **live**. The new entry
+    /// is built (compile + simulate + plan) with no lock held, `warm` is
+    /// invoked on it (the service points this at
+    /// [`SolverBackend::prepare`](crate::runtime::SolverBackend::prepare)
+    /// so the owning shard's backend caches the new plan before any
+    /// request can reach it), and only then is the map entry swapped in
+    /// one atomic pointer move — no request ever observes a torn entry.
+    ///
+    /// The new entry keeps the old entry's shard (routing stays stable)
+    /// and **shares** its lineage counters: `served` keeps counting
+    /// exactly (late replies against the old entry still land on the
+    /// key), and a later evict drains requests in flight against either
+    /// entry. Requests in flight against the old entry complete on the
+    /// plan they resolved. Errors if `key` is not registered, or if it
+    /// was evicted — or evicted and re-registered as a fresh lineage —
+    /// while the replacement was being built; if two swaps of the same
+    /// key (and so the same lineage) race, the later publish wins.
+    pub fn swap<F>(&self, key: &str, m: &CsrMatrix, warm: F) -> Result<Arc<RegisteredMatrix>>
+    where
+        F: FnOnce(&Arc<RegisteredMatrix>) -> Result<()>,
+    {
+        let Some(old) = self.get(key) else {
+            bail!("swap: matrix key {key:?} is not registered");
+        };
+        let (program, metrics, solver) = self.prepare_parts(key, m)?;
+        let entry = Arc::new(RegisteredMatrix {
+            key: key.to_string(),
+            shard: old.shard(),
+            solver,
+            program,
+            metrics,
+            served: Arc::clone(&old.served),
+            inflight: Arc::clone(&old.inflight),
+        });
+        warm(&entry)?;
+        let mut map = self.inner.write().unwrap();
+        // Publish only into the lineage the replacement was built from
+        // (same shared counters). `contains_key` would be an ABA hole: an
+        // evict + re-register racing with the off-lock build would let
+        // this swap clobber the fresh registration with an entry wired to
+        // the retired lineage's counters — miscounting served requests
+        // and letting a later evict return before draining. A racing swap
+        // of the same lineage still wins normally.
+        match map.get(key) {
+            Some(current) if Arc::ptr_eq(&current.inflight, &entry.inflight) => {}
+            _ => bail!(
+                "swap: matrix key {key:?} was evicted (or evicted and re-registered) \
+                 while the replacement was being built"
+            ),
+        }
+        map.insert(key.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Look up a registered matrix by key (inspection only — does **not**
+    /// mark a request in flight; the serve path uses the crate-internal
+    /// `checkout`, which does).
     pub fn get(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
         self.inner.read().unwrap().get(key).cloned()
     }
 
-    /// Remove a registered matrix, returning its entry (registration
-    /// rollback, eviction). Requests already routed hold their own `Arc`
-    /// and complete normally; later submits for the key get the
-    /// unknown-key error reply, and the key may be registered again.
-    /// Future shard assignment derives from the current map size, so
-    /// removal can skew balance slightly — acceptable for these cases.
+    /// Resolve `key` for one request and mark it in flight — the
+    /// increment happens under the read lock, so an
+    /// [`evict`](MatrixRegistry::evict) (which holds the write lock to
+    /// unmap the key) either sees the request in its drain or the request
+    /// sees the key already gone; there is no window where both miss each
+    /// other. Callers must pair this with
+    /// `RegisteredMatrix::note_done` once the reply is delivered (the
+    /// service does so via a drop guard, so even dropped jobs check in).
+    pub(crate) fn checkout(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
+        let map = self.inner.read().unwrap();
+        let entry = map.get(key).cloned()?;
+        entry.inflight.fetch_add(1, Ordering::AcqRel);
+        Some(entry)
+    }
+
+    /// Remove a registered matrix immediately, returning its entry
+    /// (registration rollback; [`MatrixRegistry::evict`] is the draining
+    /// form). Requests already routed hold their own `Arc` and complete
+    /// normally; later submits for the key get the unknown-key error
+    /// reply, and the key may be registered again. Future shard
+    /// assignment derives from the current map size, so removal can skew
+    /// balance slightly — acceptable for these cases.
     pub fn remove(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
         self.inner.write().unwrap().remove(key)
+    }
+
+    /// Evict `key`: unmap it (new submits immediately get the
+    /// unknown-key error reply), then **block until every request already
+    /// routed against the entry has been replied to**, and return the
+    /// drained entry — dropping it releases the plan. `None` if the key
+    /// was not registered.
+    ///
+    /// The wait backs off spin → yield → sleep; eviction is a
+    /// control-plane operation, so a few hundred microseconds of latency
+    /// while a shard finishes its batch is fine.
+    pub fn evict(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
+        let entry = self.remove(key)?;
+        let mut spins = 0u32;
+        while entry.inflight() > 0 {
+            spins = spins.saturating_add(1);
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else if spins < 4096 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+        }
+        Some(entry)
     }
 
     /// Registered matrix count.
@@ -201,6 +358,7 @@ mod tests {
         assert_eq!(entry.key(), "band");
         assert_eq!(entry.metrics().cycles, entry.program().predicted.cycles);
         assert_eq!(entry.solver().n(), m.n);
+        assert_eq!(entry.inflight(), 0);
         assert_eq!(reg.len(), 1);
         let again = reg.get("band").unwrap();
         assert!(Arc::ptr_eq(&entry, &again));
@@ -242,6 +400,115 @@ mod tests {
         // The key is free again.
         reg.register("evict", &m).unwrap();
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn evict_returns_the_entry_and_frees_the_key() {
+        let reg = registry(2);
+        let m = gen::chain(80, GenSeed(66));
+        let entry = reg.register("cold", &m).unwrap();
+        // No traffic in flight: evict drains instantly.
+        let evicted = reg.evict("cold").expect("key was registered");
+        assert!(Arc::ptr_eq(&entry, &evicted));
+        assert_eq!(evicted.inflight(), 0);
+        assert!(reg.get("cold").is_none());
+        assert!(reg.evict("cold").is_none(), "second evict finds nothing");
+        reg.register("cold", &m).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn checkout_tracks_inflight_and_evict_waits_for_it() {
+        let reg = Arc::new(registry(1));
+        let m = gen::chain(60, GenSeed(67));
+        reg.register("busy", &m).unwrap();
+        let entry = reg.checkout("busy").expect("known key");
+        assert_eq!(entry.inflight(), 1);
+        // Evict on another thread: it must not return while the request
+        // is outstanding.
+        let reg2 = Arc::clone(&reg);
+        let evictor = std::thread::spawn(move || reg2.evict("busy").unwrap());
+        // The key is unmapped promptly even while the drain waits.
+        let mut spins = 0u64;
+        while reg.get("busy").is_some() {
+            std::thread::yield_now();
+            spins += 1;
+            assert!(spins < 50_000_000, "evict never unmapped the key");
+        }
+        assert!(!evictor.is_finished(), "evict returned with a request in flight");
+        entry.note_done();
+        let drained = evictor.join().unwrap();
+        assert_eq!(drained.inflight(), 0);
+        assert!(Arc::ptr_eq(&entry, &drained));
+    }
+
+    #[test]
+    fn swap_replaces_the_entry_atomically_and_keeps_shard_and_served() {
+        let reg = registry(3);
+        let m0 = gen::chain(40, GenSeed(68));
+        reg.register("pad", &m0).unwrap(); // shifts round-robin off 0
+        let ma = gen::banded(120, 4, 0.6, GenSeed(69));
+        let old = reg.register("hot", &ma).unwrap();
+        old.note_served(7);
+        assert_eq!(old.shard(), 1);
+        let mb = gen::banded(160, 5, 0.7, GenSeed(70));
+        let mut warmed = false;
+        let new = reg
+            .swap("hot", &mb, |e| {
+                assert_eq!(e.solver().n(), mb.n, "warm sees the new plan");
+                warmed = true;
+                Ok(())
+            })
+            .unwrap();
+        assert!(warmed, "warm hook must run before publish");
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert_eq!(new.shard(), old.shard(), "swap must not migrate shards");
+        assert_eq!(new.served(), 7, "served carries across the swap");
+        assert_eq!(new.solver().n(), mb.n);
+        // Lookups now resolve the new entry; the old Arc is still usable
+        // by whoever holds it (in-flight requests).
+        assert!(Arc::ptr_eq(&reg.get("hot").unwrap(), &new));
+        assert_eq!(old.solver().n(), ma.n);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn swap_unknown_or_evicted_key_errors() {
+        let reg = registry(2);
+        let m = gen::chain(50, GenSeed(71));
+        let err = reg.swap("ghost", &m, |_| Ok(())).unwrap_err();
+        assert!(format!("{err:#}").contains("not registered"), "{err:#}");
+        // A warm failure aborts the swap and leaves the old entry live.
+        let old = reg.register("hot", &m).unwrap();
+        let err = reg
+            .swap("hot", &m, |_| anyhow::bail!("backend prepare failed"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("prepare failed"), "{err:#}");
+        assert!(Arc::ptr_eq(&reg.get("hot").unwrap(), &old));
+    }
+
+    #[test]
+    fn swap_detects_evict_and_reregister_racing_the_build() {
+        // The ABA case: while a swap's replacement is being built off the
+        // lock, the key is evicted AND re-registered as a fresh lineage.
+        // Publishing anyway would wire the key to the retired lineage's
+        // counters; the swap must error and leave the fresh registration
+        // untouched. The warm hook runs exactly in that window, so the
+        // interleaving is deterministic.
+        let reg = registry(2);
+        let ma = gen::chain(50, GenSeed(72));
+        let mb = gen::chain(90, GenSeed(73));
+        reg.register("k", &ma).unwrap();
+        let err = reg
+            .swap("k", &mb, |_| {
+                reg.evict("k").expect("evict the old lineage");
+                reg.register("k", &ma).expect("fresh re-registration");
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("re-registered"), "{err:#}");
+        // The fresh registration survived un-clobbered.
+        assert_eq!(reg.get("k").unwrap().solver().n(), ma.n);
     }
 
     #[test]

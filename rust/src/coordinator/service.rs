@@ -21,6 +21,14 @@
 //! [`SolverBackend::prepare`], so plan construction and pool spawn happen
 //! at register time, not on the first request.
 //!
+//! Matrices are **dynamic**, not pinned forever:
+//! [`ShardedSolveService::evict`] retires a key after draining its
+//! in-flight requests (every routed request carries a drop-guarded
+//! in-flight mark, so the drain cannot be wedged or racily skipped), and
+//! [`ShardedSolveService::swap`] replaces a key's matrix live — the new
+//! entry is compiled/planned/warmed off the hot path and published in one
+//! atomic pointer move while requests keep flowing.
+//!
 //! Failures are loud, never hangs: backend construction errors fail
 //! `start`, registration (compile/verify) errors fail `register`, an
 //! unknown `matrix_key` gets an immediate error *reply*, and per-request
@@ -124,12 +132,36 @@ pub struct SolveResponse {
     pub metrics: SolveMetrics,
 }
 
+/// Owns one in-flight mark on a registry entry; checked out at route
+/// time, checked back in when dropped. Dropping *after* the reply send
+/// means [`ShardedSolveService::evict`] cannot return while any reply is
+/// still owed — and because it is a drop guard, a job that dies on the
+/// floor (worker panic, shutdown teardown) still checks in instead of
+/// wedging a future evict forever.
+struct InflightGuard(Arc<RegisteredMatrix>);
+
+impl InflightGuard {
+    /// The resolved registry entry this mark belongs to.
+    fn entry(&self) -> &Arc<RegisteredMatrix> {
+        &self.0
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.note_done();
+    }
+}
+
 /// A routed job on a shard queue: the registry entry is resolved at
-/// submit time so shard workers never touch the key map.
+/// submit time (owned by the in-flight guard) so shard workers never
+/// touch the key map.
 struct ShardJob {
-    entry: Arc<RegisteredMatrix>,
     b: Vec<f32>,
     reply: mpsc::Sender<Result<SolveResponse>>,
+    /// In-flight mark owning the resolved entry, dropped after the reply
+    /// is delivered.
+    guard: InflightGuard,
 }
 
 /// One shard: its queue, its workers, its counters, its backend handle.
@@ -229,12 +261,47 @@ impl ShardedSolveService {
         Ok(entry)
     }
 
+    /// Evict the matrix registered under `key`: the key becomes unknown
+    /// immediately (new submits get the error reply), the call blocks
+    /// until every request already routed for the key has been replied
+    /// to, and the drained entry is returned (its final `served` count is
+    /// readable; dropping it releases the plan). The key is then free for
+    /// re-registration. Errors if `key` is not registered.
+    ///
+    /// Call from a control-plane thread, not from inside a shard worker
+    /// (a worker cannot drain its own queue while blocked here).
+    pub fn evict(&self, key: &str) -> Result<Arc<RegisteredMatrix>> {
+        self.registry
+            .evict(key)
+            .with_context(|| format!("evict: matrix key {key:?} is not registered"))
+    }
+
+    /// Replace the matrix registered under `key` **live**: compile,
+    /// simulate and plan `m` off the hot path, warm the owning shard's
+    /// backend ([`SolverBackend::prepare`]), then atomically publish the
+    /// new entry. Requests keep flowing throughout: mid-swap submits are
+    /// served by whichever fully-formed entry they resolve, and the key
+    /// keeps its shard so routing never migrates. Errors if `key` is not
+    /// registered (or was evicted mid-swap); a failed prepare leaves the
+    /// old entry serving.
+    pub fn swap(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
+        self.registry.swap(key, m, |entry| {
+            self.shards[entry.shard()]
+                .backend
+                .prepare(entry.solver())
+                .with_context(|| format!("prepare backend for swapped matrix {key:?}"))
+        })
+    }
+
     /// Route one request to the shard owning its matrix. An unknown
     /// `matrix_key` is answered with an immediate error **reply** on the
     /// request's channel (never a hang, never a dropped request); the
     /// call itself errors only if the service is shutting down.
     pub fn route(&self, req: SolveRequest) -> Result<()> {
-        let Some(entry) = self.registry.get(&req.matrix_key) else {
+        // `checkout` (not `get`): the in-flight mark is taken under the
+        // registry's read lock, so an evict cannot slip between the
+        // lookup and the enqueue and miss this request in its drain.
+        let Some(entry) = self.registry.checkout(&req.matrix_key) else {
             let _ = req.reply.send(Err(anyhow!(
                 "unknown matrix key {:?} (registered: [{}])",
                 req.matrix_key,
@@ -242,15 +309,19 @@ impl ShardedSolveService {
             )));
             return Ok(());
         };
-        let shard = &self.shards[entry.shard()];
+        // Guard the mark before anything fallible: every early return
+        // below must check the request back in, or an evict of this key
+        // would wait forever on a request that never ran.
+        let guard = InflightGuard(entry);
+        let shard = &self.shards[guard.entry().shard()];
         shard
             .tx
             .as_ref()
             .context("service stopped")?
             .send(ShardJob {
-                entry,
                 b: req.b,
                 reply: req.reply,
+                guard,
             })
             .ok()
             .context("shard queue closed")?;
@@ -292,9 +363,27 @@ impl ShardedSolveService {
             .collect()
     }
 
-    /// Aggregate serving statistics across all shards.
+    /// Aggregate serving statistics across all shards, including the
+    /// worker-pool session concurrency of every **distinct** backend
+    /// (shards share one backend — and so one pool — by default;
+    /// `peak_concurrency >= 2` there means two solves really overlapped).
     pub fn stats(&self) -> ServingStats {
-        ServingStats::aggregate(&self.shard_stats())
+        let mut agg = ServingStats::aggregate(&self.shard_stats());
+        // Dedup backends by data pointer (not `Arc::ptr_eq`, which
+        // compares vtable pointers too on `dyn` and lints as ambiguous).
+        let mut seen: Vec<*const ()> = Vec::new();
+        for shard in &self.shards {
+            let ptr = Arc::as_ptr(&shard.backend) as *const ();
+            if seen.contains(&ptr) {
+                continue;
+            }
+            seen.push(ptr);
+            if let Some(pool) = shard.backend.pool_stats() {
+                agg.concurrent_sessions += pool.concurrent_sessions as u64;
+                agg.peak_concurrency = agg.peak_concurrency.max(pool.peak_concurrency as u64);
+            }
+        }
+        agg
     }
 
     /// Replies delivered so far (successful and error replies; unknown-key
@@ -366,17 +455,27 @@ fn shard_worker(
 type Reply = mpsc::Sender<Result<SolveResponse>>;
 
 /// One same-matrix slice of a drained batch: the registry entry and the
-/// `(rhs, reply)` pairs that target it.
-type MatrixGroup = (Arc<RegisteredMatrix>, Vec<(Vec<f32>, Reply)>);
+/// `(rhs, reply, in-flight mark)` triples that target it.
+type MatrixGroup = (
+    Arc<RegisteredMatrix>,
+    Vec<(Vec<f32>, Reply, InflightGuard)>,
+);
 
 /// Partition a drained batch into per-matrix groups (order-preserving;
-/// identity is the registry entry, compared by `Arc` pointer).
+/// identity is the registry entry, compared by `Arc` pointer — so jobs
+/// resolved against a pre-swap entry never batch with post-swap ones).
 fn group_by_matrix(jobs: Vec<ShardJob>) -> Vec<MatrixGroup> {
     let mut groups: Vec<MatrixGroup> = Vec::new();
     for job in jobs {
-        match groups.iter_mut().find(|(e, _)| Arc::ptr_eq(e, &job.entry)) {
-            Some((_, g)) => g.push((job.b, job.reply)),
-            None => groups.push((job.entry, vec![(job.b, job.reply)])),
+        match groups
+            .iter_mut()
+            .find(|(e, _)| Arc::ptr_eq(e, job.guard.entry()))
+        {
+            Some((_, g)) => g.push((job.b, job.reply, job.guard)),
+            None => {
+                let entry = Arc::clone(job.guard.entry());
+                groups.push((entry, vec![(job.b, job.reply, job.guard)]));
+            }
         }
     }
     groups
@@ -388,7 +487,7 @@ fn group_by_matrix(jobs: Vec<ShardJob>) -> Vec<MatrixGroup> {
 fn solve_group(
     backend: &dyn SolverBackend,
     entry: &RegisteredMatrix,
-    group: Vec<(Vec<f32>, Reply)>,
+    group: Vec<(Vec<f32>, Reply, InflightGuard)>,
     counters: &ShardCounters,
 ) {
     let count = group.len();
@@ -397,7 +496,16 @@ fn solve_group(
         // Batched rounds go through the backend's multi-RHS path,
         // amortizing dispatch and gather staging. The RHS vectors move
         // out of the jobs (no clone); replies only need the channels.
-        let (bs, replies): (Vec<Vec<f32>>, Vec<Reply>) = group.into_iter().unzip();
+        // The in-flight guards stay alive until every reply in the group
+        // has been sent, so an evict observes all-or-nothing per round.
+        let mut bs = Vec::with_capacity(count);
+        let mut replies = Vec::with_capacity(count);
+        let mut guards = Vec::with_capacity(count);
+        for (b, reply, guard) in group {
+            bs.push(b);
+            replies.push(reply);
+            guards.push(guard);
+        }
         match backend.solve_multi(entry.solver(), &bs) {
             Ok(xs) => {
                 let elapsed = t0.elapsed();
@@ -420,11 +528,12 @@ fn solve_group(
                 }
             }
         }
+        drop(guards); // replies delivered: requests leave the in-flight set
     } else {
         // Scalar path: reply immediately after each solve (no head-of-
         // group latency), recording counters just before each send so a
         // caller holding its response never reads stale stats.
-        for (b, reply) in group {
+        for (b, reply, guard) in group {
             let t1 = Instant::now();
             let out = backend.solve(entry.solver(), &b).map(|x| SolveResponse {
                 x,
@@ -439,6 +548,7 @@ fn solve_group(
                 Err(_) => counters.record_round(0, 1, t1.elapsed()),
             }
             let _ = reply.send(out);
+            drop(guard); // reply delivered: request leaves the in-flight set
         }
     }
 }
@@ -758,6 +868,49 @@ mod tests {
         let m = gen::chain(60, GenSeed(74));
         svc.register("m", &m).unwrap();
         assert!(svc.register("m", &m).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn evict_retires_the_key_and_frees_it_for_reregistration() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(2)).unwrap();
+        let m = gen::banded(200, 4, 0.6, GenSeed(76));
+        svc.register("cold", &m).unwrap();
+        let resp = svc.solve("cold", vec![1.0; m.n]).unwrap();
+        assert_close_to_reference(&m, &vec![1.0; m.n], &resp.x, 1e-3);
+        let entry = svc.evict("cold").unwrap();
+        assert_eq!(entry.served(), 1);
+        assert_eq!(entry.inflight(), 0, "evict returned before draining");
+        // The key is unknown now (error reply, not a hang)...
+        let err = svc.solve("cold", vec![1.0; m.n]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown matrix key"));
+        // ...an evict of an unknown key is an error...
+        assert!(svc.evict("cold").is_err());
+        // ...and the key can be registered again.
+        svc.register("cold", &m).unwrap();
+        assert!(svc.solve("cold", vec![1.0; m.n]).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn swap_replaces_the_matrix_between_requests() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(2)).unwrap();
+        let ma = gen::banded(180, 4, 0.6, GenSeed(77));
+        let mb = gen::banded(240, 5, 0.7, GenSeed(78));
+        let old = svc.register("hot", &ma).unwrap();
+        let ra = svc.solve("hot", vec![1.0; ma.n]).unwrap();
+        assert_close_to_reference(&ma, &vec![1.0; ma.n], &ra.x, 1e-3);
+        // Swap to a different matrix (different order, even): the key
+        // stays routable throughout and keeps its shard.
+        let new = svc.swap("hot", &mb).unwrap();
+        assert_eq!(new.shard(), old.shard());
+        assert_eq!(new.served(), 1, "served carries across the swap");
+        let rb = svc.solve("hot", vec![1.0; mb.n]).unwrap();
+        assert_eq!(rb.x.len(), mb.n);
+        assert_close_to_reference(&mb, &vec![1.0; mb.n], &rb.x, 1e-3);
+        assert_eq!(new.served(), 2);
+        // Swapping an unknown key errors without disturbing the rest.
+        assert!(svc.swap("ghost", &ma).is_err());
         svc.shutdown();
     }
 }

@@ -31,25 +31,35 @@
 //!   level-width statistics. MGD workers live in a **persistent pool**
 //!   (`runtime/pool.rs`): spawned once per backend, parked on a condvar
 //!   between solves, shared across every solve and matrix the backend
-//!   serves — no per-solve thread spawns on the serve path. An optional
-//!   PJRT loader/executor for the AOT-compiled JAX/Pallas level kernels
-//!   in `artifacts/` sits behind the `pjrt` cargo feature.
+//!   serves — no per-solve thread spawns on the serve path. Pool
+//!   sessions **overlap**: each solve leases at most its plan's
+//!   `par_width` workers and leftover workers serve other sessions
+//!   concurrently, with the overlap counted in
+//!   `MgdPoolStats::{concurrent_sessions, peak_concurrency}`. An
+//!   optional PJRT loader/executor for the AOT-compiled JAX/Pallas level
+//!   kernels in `artifacts/` sits behind the `pjrt` cargo feature.
 //! - [`coordinator`] — the L3 serving runtime: a sharded, multi-matrix
 //!   `ShardedSolveService` over a `MatrixRegistry`. Each matrix is
 //!   registered by key and compiled/simulated/planned exactly once;
 //!   requests (`SolveRequest { matrix_key, b, reply }`) route to the
 //!   shard owning their matrix, where workers batch same-matrix requests
-//!   through the backend's multi-RHS path. Per-shard counters aggregate
-//!   into service-wide `ServingStats`. Backend construction failures
-//!   fail startup, unknown keys get an immediate error reply, and solver
-//!   errors are replied to the requester. `SolveService` is the
-//!   single-matrix facade over the same machinery.
+//!   through the backend's multi-RHS path. Matrices are dynamic:
+//!   `evict(key)` drains a key's in-flight requests and retires it, and
+//!   `swap(key, m)` hot-swaps a key's matrix atomically while requests
+//!   keep flowing. Per-shard counters aggregate into service-wide
+//!   `ServingStats` (including pool-session concurrency). Backend
+//!   construction failures fail startup, unknown keys get an immediate
+//!   error reply, and solver errors are replied to the requester.
+//!   `SolveService` is the single-matrix facade over the same machinery.
 //! - [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md §3), plus a native-vs-PJRT backend
 //!   comparison table (`mgd bench backends`), a level-vs-mgd scheduler
 //!   comparison (`mgd bench schedulers`, emits `BENCH_schedulers.json`),
-//!   and a persistent-pool vs per-solve-spawn serving comparison
-//!   (`mgd bench serving`, emits `BENCH_serving.json`).
+//!   a persistent-pool vs per-solve-spawn serving comparison
+//!   (`mgd bench serving`, emits `BENCH_serving.json`), and an
+//!   overlapped-vs-serialized pool-session comparison
+//!   (`mgd bench concurrency`, emits `BENCH_concurrency.json`). CI gates
+//!   the three headline ratios against `ci/bench_baselines/`.
 //!
 //! ## Cargo features
 //!

@@ -53,6 +53,15 @@ pub trait SolverBackend: Send + Sync {
         Ok(())
     }
 
+    /// Introspection of the backend's persistent worker pool, if it has
+    /// one: worker/live-thread counts, sessions served, and the session
+    /// concurrency high-water mark. The serving runtime folds this into
+    /// [`ServingStats`](crate::coordinator::ServingStats); the default
+    /// (for pool-less backends) is `None`.
+    fn pool_stats(&self) -> Option<super::MgdPoolStats> {
+        None
+    }
+
     /// Solve `L x = b` through the prepared plan.
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>>;
 

@@ -16,8 +16,10 @@
 //!     work-stealing deques, counter-driven readiness, node-local
 //!     partial sums and ICR-ordered gathers ([`mgd_exec`]), executed on
 //!     the backend's persistent [`MgdPool`] (workers spawn once and park
-//!     between solves — no per-solve thread spawns on the serve path);
-//!     bitwise identical to the serial reference for any thread count;
+//!     between solves — no per-solve thread spawns on the serve path —
+//!     and independent solves overlap as concurrent slot-leased
+//!     sessions); bitwise identical to the serial reference for any
+//!     thread count;
 //!   - `auto` — picks per plan from level-width statistics (deep/narrow
 //!     DAGs go barrier-free).
 //! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled

@@ -249,8 +249,10 @@ pub struct NativeBackend {
     /// Persistent barrier-free worker pool ([`MgdPool`]), spawned lazily
     /// on the first mgd solve that can use more than one worker and
     /// reused for the backend's lifetime — across solves, and (under the
-    /// sharded service) across matrices. The former per-solve
-    /// `thread::scope` spawn is gone from the serve path.
+    /// sharded service) across matrices. Concurrent solves run as
+    /// overlapping pool sessions, each leasing at most its plan's
+    /// `par_width` workers. The former per-solve `thread::scope` spawn
+    /// is gone from the serve path.
     mgd_pool: std::sync::OnceLock<MgdPool>,
     parallel_levels: AtomicU64,
     chunks_dispatched: AtomicU64,
@@ -294,10 +296,12 @@ impl NativeBackend {
     }
 
     /// Introspection of the persistent mgd pool: worker/live-thread
-    /// counts and sessions served. All-zero until the first multi-worker
-    /// mgd solve spawns the pool (and always in single-thread configs).
-    /// Service lifecycle tests use this to assert that repeated
-    /// start/shutdown cycles reuse the pool instead of leaking threads.
+    /// counts, sessions served, and the session concurrency high-water
+    /// mark (`peak_concurrency >= 2` proves two solves really overlapped
+    /// in this pool). All-zero until the first multi-worker mgd solve
+    /// spawns the pool (and always in single-thread configs). Service
+    /// lifecycle tests use this to assert that repeated start/shutdown
+    /// cycles reuse the pool instead of leaking threads.
     pub fn mgd_pool_stats(&self) -> MgdPoolStats {
         self.mgd_pool.get().map_or(MgdPoolStats::default(), MgdPool::stats)
     }
@@ -500,6 +504,10 @@ impl SolverBackend for NativeBackend {
 
     fn supports_multi_rhs(&self) -> bool {
         true
+    }
+
+    fn pool_stats(&self) -> Option<MgdPoolStats> {
+        Some(self.mgd_pool_stats())
     }
 
     fn prepare(&self, plan: &LevelSolver) -> Result<()> {
@@ -780,6 +788,59 @@ mod tests {
         // Garbage and zero fall through to the CPU count.
         assert!(resolve_threads_from(0, Some("not-a-number")) >= 1);
         assert!(resolve_threads_from(0, Some("0")) >= 1);
+    }
+
+    /// Two mgd solves on **distinct matrices** issued from two threads
+    /// must be able to overlap as concurrent sessions of the backend's
+    /// one persistent pool. Overlap is timing-dependent per round, so a
+    /// start barrier plus bounded retries makes the observation robust;
+    /// a pool that serializes sessions can never raise the peak above 1.
+    #[test]
+    fn concurrent_mgd_solves_overlap_in_one_pool() {
+        use crate::matrix::triangular::solve_serial;
+        use std::sync::Barrier;
+        let nb = Arc::new(NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Mgd,
+            ..NativeConfig::default()
+        }));
+        let ma = gen::shallow(3000, 0.4, GenSeed(51));
+        let mb = gen::shallow(2600, 0.5, GenSeed(52));
+        let pa = Arc::new(LevelSolver::new(&ma));
+        let pb = Arc::new(LevelSolver::new(&mb));
+        let b_a: Vec<f32> = (0..ma.n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b_b: Vec<f32> = (0..mb.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let want_a = solve_serial(&ma, &b_a);
+        let want_b = solve_serial(&mb, &b_b);
+        for _round in 0..50 {
+            let barrier = Arc::new(Barrier::new(2));
+            let handles: Vec<_> = [(Arc::clone(&pa), b_a.clone()), (Arc::clone(&pb), b_b.clone())]
+                .into_iter()
+                .map(|(plan, b)| {
+                    let nb = Arc::clone(&nb);
+                    let barrier = Arc::clone(&barrier);
+                    std::thread::spawn(move || {
+                        barrier.wait();
+                        nb.solve(&plan, &b).unwrap()
+                    })
+                })
+                .collect();
+            let xs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for (x, want) in xs.iter().zip([&want_a, &want_b]) {
+                for i in 0..want.len() {
+                    assert_eq!(x[i].to_bits(), want[i].to_bits(), "row {i}");
+                }
+            }
+            if nb.mgd_pool_stats().peak_concurrency >= 2 {
+                break;
+            }
+        }
+        let stats = nb.mgd_pool_stats();
+        assert!(
+            stats.peak_concurrency >= 2,
+            "no overlap in 50 paired solves: {stats:?}"
+        );
+        assert_eq!(stats.workers, 3, "one shared pool, never respawned");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Persistent worker pool of the barrier-free MGD scheduler.
+//! Persistent worker pool of the barrier-free MGD scheduler, with
+//! **concurrent sessions**.
 //!
 //! [`mgd_exec`](super::mgd_exec) used to spawn scoped workers per solve
 //! (`std::thread::scope`), which is fine at bench sizes but measurable on
@@ -12,37 +13,47 @@
 //!
 //! # Session protocol
 //!
-//! One solve is one *session*: [`MgdPool::run`] installs a closure, wakes
-//! the parked workers, runs slot `0` of the closure on the calling thread,
-//! and returns only after every worker that joined the session has left
-//! it. Workers *claim* participant slots (`1..=extra`) under the state
-//! mutex; a session is closed by marking it non-claimable and waiting for
-//! the active count to reach zero. Sessions serialize: the pool executes
-//! one solve at a time, each using every claimed worker (concurrent
-//! callers queue on the install step). That is the intended shape for a
-//! shared serving pool — a solve already fans out across all cores, so
-//! running two at once would just interleave their cache footprints.
+//! One solve is one *session*: [`MgdPool::run`] installs a closure into a
+//! free slot of the session slab, wakes the parked workers, runs slot `0`
+//! of the closure on the calling thread, and returns only after every
+//! worker that joined the session has left it. Workers *claim*
+//! participant slots (`1..=extra`) under the state mutex; a session is
+//! closed by marking it non-claimable and waiting for its active count to
+//! reach zero.
 //!
-//! A worker that never wakes in time simply misses the session: the MGD
-//! executor tolerates absent workers (their seeded deques are stolen
-//! empty), so the pool never blocks on a straggler to *start* work, only
-//! to *finish* it.
+//! Sessions **overlap**: each session holds a *slot lease* of at most
+//! `extra` workers (for a solve, its plan's `par_width`), and workers the
+//! lease does not claim stay parked — available to any other session
+//! installed meanwhile. A mixed-traffic service can therefore run a small
+//! solve's session next to a large one instead of queueing behind it,
+//! mirroring how the paper's accelerator keeps PEs busy on independent
+//! DAG regions. The pool tracks how much overlap actually happens
+//! ([`MgdPoolStats::concurrent_sessions`] /
+//! [`MgdPoolStats::peak_concurrency`]).
+//!
+//! A worker that never wakes in time (or is leased to another session)
+//! simply misses the session: the MGD executor tolerates absent workers
+//! (their seeded deques are stolen empty), so a session never blocks on a
+//! straggler to *start* work, only to *finish* it — the calling thread
+//! always participates as slot 0, so every session makes progress even
+//! when the pool is fully leased out.
 //!
 //! # Safety
 //!
-//! The installed closure is stored as a lifetime-erased raw pointer so a
+//! Each installed closure is stored as a lifetime-erased raw pointer so a
 //! borrowing closure (the executor's, which borrows the per-solve run
 //! state on the caller's stack) can cross into long-lived threads without
-//! a staging copy. Soundness rests on one
-//! invariant, enforced in [`MgdPool::run`] even under unwinding (a drop
-//! guard closes the session if the caller's slot panics): **the call does
-//! not return until no worker can observe the pointer** — the session is
-//! marked closing (no new claims) and `active == 0` (no live borrows)
-//! before the pointer goes out of scope.
+//! a staging copy. Soundness rests on one per-session invariant, enforced
+//! in [`MgdPool::run`] even under unwinding (a drop guard closes the
+//! session if the caller's slot panics): **the call does not return until
+//! no worker can observe that session's pointer** — the session is marked
+//! closing (no new claims) and its `active == 0` (no live borrows) before
+//! the pointer goes out of scope. Sessions are independent: closing one
+//! neither blocks on nor unblocks another.
 //!
 //! Memory ordering: all session state crosses threads under the state
 //! `Mutex`/`Condvar` pair, which provides the happens-before edges for the
-//! closure pointer and the slot claims. The `x`-slab ordering *inside* a
+//! closure pointers and the slot claims. The `x`-slab ordering *inside* a
 //! solve is the executor's counter protocol, documented in
 //! `runtime/atomics.md`.
 
@@ -64,12 +75,19 @@ pub struct MgdPoolStats {
     /// Sessions executed through [`MgdPool::run`] since construction
     /// (including caller-only sessions that engaged no worker).
     pub sessions: u64,
+    /// Sessions in flight right now (callers inside [`MgdPool::run`],
+    /// including caller-only sessions).
+    pub concurrent_sessions: usize,
+    /// Maximum number of simultaneously in-flight sessions ever observed
+    /// — the overlap proof: `>= 2` means two solves really did share the
+    /// pool instead of queueing.
+    pub peak_concurrency: usize,
 }
 
 /// Lifetime-erased session closure (`&dyn Fn(usize)` of the caller's
 /// stack frame). Only ever dereferenced between a slot claim and the
-/// matching `active` decrement, both of which the session-close handshake
-/// orders before [`MgdPool::run`] returns.
+/// matching `active` decrement, both of which the owning session's
+/// close handshake orders before [`MgdPool::run`] returns.
 #[derive(Clone, Copy)]
 struct SessionFn(*const (dyn Fn(usize) + Sync));
 
@@ -78,12 +96,13 @@ struct SessionFn(*const (dyn Fn(usize) + Sync));
 // the module-level Safety section).
 unsafe impl Send for SessionFn {}
 
-/// One installed session.
+/// One installed session (a slot-lease of up to `limit` workers).
 struct Job {
     f: SessionFn,
     /// Next participant slot a worker may claim (slot 0 is the caller's).
     next_slot: usize,
-    /// Highest claimable slot; `limit` workers may join at most.
+    /// Highest claimable slot; the session leases at most `limit` workers
+    /// and leaves the rest to concurrently installed sessions.
     limit: usize,
     /// Workers currently executing the closure.
     active: usize,
@@ -95,27 +114,36 @@ struct Job {
 
 /// State shared between the pool handle and its worker threads.
 struct State {
-    job: Option<Job>,
+    /// Session slab: `None` entries are free and reused by the next
+    /// install. Grows to the peak number of simultaneous sessions and
+    /// stays there (entries are a few words each).
+    sessions: Vec<Option<Job>>,
     shutdown: bool,
 }
 
 struct Shared {
     state: Mutex<State>,
-    /// Workers park here waiting for a session (or shutdown).
+    /// Workers park here waiting for a claimable session (or shutdown).
     work: Condvar,
-    /// Session closers (and queued installers) park here waiting for
-    /// `active` to drain (or the slot to free up).
+    /// Session closers park here waiting for their session's `active`
+    /// count to drain.
     done: Condvar,
 }
 
 /// A persistent pool of parked MGD workers, shared across solves (and, in
 /// the sharded service, across matrices). Construction spawns the
-/// threads; drop shuts them down gracefully (wake + join).
+/// threads; drop shuts them down gracefully (wake + join). Multiple
+/// sessions may run concurrently, each leasing a disjoint subset of the
+/// workers (see the module docs).
 pub struct MgdPool {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     live: Arc<AtomicUsize>,
     sessions: AtomicU64,
+    /// Sessions currently inside [`MgdPool::run`].
+    concurrent: AtomicUsize,
+    /// High-water mark of `concurrent`.
+    peak: AtomicUsize,
 }
 
 impl MgdPool {
@@ -125,7 +153,7 @@ impl MgdPool {
     pub fn new(workers: usize) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
-                job: None,
+                sessions: Vec::new(),
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -140,7 +168,7 @@ impl MgdPool {
                 std::thread::Builder::new()
                     .name(format!("mgd-pool-{w}"))
                     .spawn(move || {
-                        worker_loop(&shared);
+                        worker_loop(&shared, w);
                         live.fetch_sub(1, Ordering::SeqCst);
                     })
                     .expect("spawn mgd pool worker thread"),
@@ -151,6 +179,8 @@ impl MgdPool {
             handles,
             live,
             sessions: AtomicU64::new(0),
+            concurrent: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
         }
     }
 
@@ -170,6 +200,8 @@ impl MgdPool {
             workers: self.workers(),
             live: self.live_workers(),
             sessions: self.sessions.load(Ordering::Relaxed),
+            concurrent_sessions: self.concurrent.load(Ordering::SeqCst),
+            peak_concurrency: self.peak.load(Ordering::SeqCst),
         }
     }
 
@@ -181,43 +213,59 @@ impl MgdPool {
     /// a panic on the caller's own slot propagates (after the session is
     /// closed safely).
     ///
-    /// Sessions serialize: if another session is in flight, this call
-    /// parks until it fully drains.
+    /// Sessions overlap: concurrent callers run side by side, each
+    /// leasing at most its own `extra` workers; workers a session does
+    /// not claim stay available to the others. A session never waits for
+    /// another to finish — at worst it runs caller-only because every
+    /// worker is leased elsewhere.
     pub fn run<F: Fn(usize) + Sync>(&self, extra: usize, f: &F) -> Result<()> {
         self.sessions.fetch_add(1, Ordering::Relaxed);
+        let cur = self.concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(cur, Ordering::SeqCst);
+        // Decrement `concurrent` however this call exits (return, error,
+        // or an unwinding caller slot).
+        let _concurrency = ConcurrencyGuard(&self.concurrent);
         let extra = extra.min(self.handles.len());
         if extra == 0 {
             f(0);
             return Ok(());
         }
-        {
+        let idx = {
             let mut st = self.shared.state.lock().unwrap();
-            while st.job.is_some() {
-                // Another session is draining; queue behind it.
-                st = self.shared.done.wait(st).unwrap();
-            }
-            st.job = Some(Job {
+            let job = Job {
                 f: erase(f),
                 next_slot: 1,
                 limit: extra,
                 active: 0,
                 closing: false,
                 panicked: false,
-            });
+            };
+            let idx = match st.sessions.iter().position(Option::is_none) {
+                Some(i) => {
+                    st.sessions[i] = Some(job);
+                    i
+                }
+                None => {
+                    st.sessions.push(Some(job));
+                    st.sessions.len() - 1
+                }
+            };
             drop(st);
             self.shared.work.notify_all();
-        }
+            idx
+        };
         // Close the session even if `f(0)` unwinds: without this, a
         // worker could later claim a slot and call through a dangling
         // pointer into a dead stack frame.
         let mut guard = SessionCloser {
             shared: &self.shared,
+            idx,
             armed: true,
         };
         f(0);
         guard.armed = false;
         drop(guard);
-        let panicked = close_session(&self.shared);
+        let panicked = close_session(&self.shared, idx);
         ensure!(!panicked, "mgd pool worker panicked during a session");
         Ok(())
     }
@@ -237,6 +285,16 @@ impl Drop for MgdPool {
     }
 }
 
+/// Decrements the pool's in-flight session count on drop (normal return
+/// and unwinding alike), keeping `concurrent_sessions` honest.
+struct ConcurrencyGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ConcurrencyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Erase the closure's borrow lifetime for storage in the shared state.
 ///
 /// SAFETY: the returned pointer must not be dereferenced after the
@@ -253,76 +311,87 @@ fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> SessionFn {
 }
 
 /// Unwind guard of [`MgdPool::run`]: if the caller's slot-0 invocation
-/// panics, the session must still be closed (and drained) before the
+/// panics, its session must still be closed (and drained) before the
 /// closure's stack frame dies, or a late-claiming worker would call
 /// through a dangling pointer. Disarmed on the normal path, where the
 /// explicit [`close_session`] call reports worker panics.
 struct SessionCloser<'a> {
     shared: &'a Shared,
+    idx: usize,
     armed: bool,
 }
 
 impl Drop for SessionCloser<'_> {
     fn drop(&mut self) {
         if self.armed {
-            let _ = close_session(self.shared);
+            let _ = close_session(self.shared, self.idx);
         }
     }
 }
 
-/// Mark the current session closing, wait for active workers to drain,
-/// and uninstall it. Returns whether any worker panicked.
-fn close_session(shared: &Shared) -> bool {
+/// Mark the session at slab slot `idx` closing, wait for its active
+/// workers to drain, and uninstall it (other sessions are untouched).
+/// Returns whether any worker panicked inside it.
+fn close_session(shared: &Shared, idx: usize) -> bool {
     let mut st = shared.state.lock().unwrap();
-    match st.job.as_mut() {
+    match st.sessions[idx].as_mut() {
         Some(job) => job.closing = true,
         None => return false,
     }
-    while st.job.as_ref().is_some_and(|j| j.active > 0) {
+    while st.sessions[idx].as_ref().is_some_and(|j| j.active > 0) {
         st = shared.done.wait(st).unwrap();
     }
-    let job = st.job.take().expect("closing session vanished");
-    drop(st);
-    // Wake sessions queued on the install step.
-    shared.done.notify_all();
+    let job = st.sessions[idx].take().expect("closing session vanished");
     job.panicked
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, w: usize) {
     let mut st = shared.state.lock().unwrap();
     loop {
         if st.shutdown {
             return;
         }
-        let claim = match st.job.as_mut() {
-            Some(job) if !job.closing && job.next_slot <= job.limit => {
-                let slot = job.next_slot;
-                job.next_slot += 1;
-                job.active += 1;
-                Some((job.f, slot))
+        // Scan the slab for a session with an unclaimed slot, starting at
+        // a per-worker offset so concurrent sessions spread across the
+        // pool instead of all workers piling into slab slot 0.
+        let nslots = st.sessions.len();
+        let mut claim = None;
+        for off in 0..nslots {
+            let idx = (w + off) % nslots;
+            if let Some(job) = st.sessions[idx].as_mut() {
+                if !job.closing && job.next_slot <= job.limit {
+                    let slot = job.next_slot;
+                    job.next_slot += 1;
+                    job.active += 1;
+                    claim = Some((job.f, slot, idx));
+                    break;
+                }
             }
-            _ => None,
-        };
+        }
         match claim {
-            Some((f, slot)) => {
+            Some((f, slot, idx)) => {
                 drop(st);
                 // Catch panics so one bad session cannot kill a pool
                 // thread (the pool must survive for the next solve); the
                 // flag turns it into a loud per-session error.
                 let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     // SAFETY: `active` was incremented under the lock, so
-                    // the session closer is still waiting on us — the
+                    // this session's closer is still waiting on us — the
                     // closure's stack frame is alive.
                     unsafe { (&*f.0)(slot) }
                 }))
                 .is_ok();
                 st = shared.state.lock().unwrap();
-                let job = st.job.as_mut().expect("session closed with active worker");
+                let job = st.sessions[idx]
+                    .as_mut()
+                    .expect("session closed with active worker");
                 job.active -= 1;
                 if !ok {
                     job.panicked = true;
                 }
                 shared.done.notify_all();
+                // Loop around without waiting: another session may have
+                // been installed while this one ran.
             }
             None => st = shared.work.wait(st).unwrap(),
         }
@@ -369,10 +438,11 @@ mod tests {
         let stats = pool.stats();
         assert_eq!(stats.sessions, 50);
         assert_eq!(stats.live, 2, "pool must not grow or shrink per solve");
+        assert_eq!(stats.concurrent_sessions, 0, "no session left in flight");
     }
 
     #[test]
-    fn concurrent_sessions_serialize_safely() {
+    fn concurrent_sessions_run_safely() {
         let pool = Arc::new(MgdPool::new(2));
         let total = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::new();
@@ -391,8 +461,91 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(pool.stats().sessions, 40);
+        let stats = pool.stats();
+        assert_eq!(stats.sessions, 40);
         assert!(total.load(Ordering::Relaxed) >= 40);
+        assert_eq!(stats.concurrent_sessions, 0);
+        assert!(stats.peak_concurrency >= 1);
+    }
+
+    /// Acceptance: two sessions provably overlap in one pool. Each
+    /// caller's slot 0 spins until the *other* session has arrived, so
+    /// the test deadlocks (and the bounded spin fails it loudly) unless
+    /// the pool really runs both sessions at once — the old serialized
+    /// protocol could never pass this.
+    #[test]
+    fn two_sessions_overlap_and_raise_peak_concurrency() {
+        let pool = Arc::new(MgdPool::new(2));
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let pool = Arc::clone(&pool);
+            let arrived = Arc::clone(&arrived);
+            handles.push(std::thread::spawn(move || {
+                pool.run(1, &|slot| {
+                    if slot == 0 {
+                        arrived.fetch_add(1, Ordering::SeqCst);
+                        let mut spins = 0u64;
+                        while arrived.load(Ordering::SeqCst) < 2 {
+                            std::thread::yield_now();
+                            spins += 1;
+                            assert!(
+                                spins < 50_000_000,
+                                "sessions failed to overlap (pool serialized them?)"
+                            );
+                        }
+                    }
+                })
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.sessions, 2);
+        assert!(
+            stats.peak_concurrency >= 2,
+            "overlap not recorded: {stats:?}"
+        );
+        assert_eq!(stats.concurrent_sessions, 0);
+    }
+
+    /// A session's slot lease caps how many workers it can claim; the
+    /// rest of the pool stays claimable by a concurrently installed
+    /// session (both rendezvous inside their worker slots).
+    #[test]
+    fn slot_leases_partition_the_workers_across_sessions() {
+        let pool = Arc::new(MgdPool::new(2));
+        let engaged = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let pool = Arc::clone(&pool);
+            let engaged = Arc::clone(&engaged);
+            handles.push(std::thread::spawn(move || {
+                // Lease exactly one worker; hold the session open until a
+                // worker slot of *each* session has checked in. If one
+                // session could claim both workers the other would never
+                // engage one, and the bounded spin fails the test.
+                pool.run(1, &|slot| {
+                    if slot != 0 {
+                        engaged.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let mut spins = 0u64;
+                    while engaged.load(Ordering::SeqCst) < 2 {
+                        std::thread::yield_now();
+                        spins += 1;
+                        assert!(spins < 50_000_000, "worker slots never split 1+1");
+                    }
+                })
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(engaged.load(Ordering::SeqCst), 2);
+        assert!(pool.stats().peak_concurrency >= 2);
     }
 
     #[test]
@@ -418,7 +571,16 @@ mod tests {
         })
         .unwrap();
         assert_eq!(hits.load(Ordering::Relaxed), 1);
-        assert_eq!(pool.stats(), MgdPoolStats { workers: 0, live: 0, sessions: 1 });
+        assert_eq!(
+            pool.stats(),
+            MgdPoolStats {
+                workers: 0,
+                live: 0,
+                sessions: 1,
+                concurrent_sessions: 0,
+                peak_concurrency: 1,
+            }
+        );
     }
 
     #[test]
@@ -446,6 +608,7 @@ mod tests {
         })
         .unwrap();
         assert!(ok.load(Ordering::Relaxed) >= 1);
+        assert_eq!(pool.stats().concurrent_sessions, 0);
     }
 
     #[test]

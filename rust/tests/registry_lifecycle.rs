@@ -1,0 +1,237 @@
+//! Lifecycle edge cases of the multi-matrix registry, driven through the
+//! public `ShardedSolveService` API:
+//!
+//! - evicting a key with requests **in flight** blocks until every
+//!   routed request has been replied to (and the reply is correct);
+//! - a live hot swap under concurrent submitters never produces a torn
+//!   or wrong reply — every response is bitwise-identical to the serial
+//!   reference of either the pre-swap or the post-swap matrix, and
+//!   post-swap requests resolve the new matrix exactly;
+//! - an evicted key can be registered again (and duplicates still
+//!   error while a key is live).
+
+use mgd_sptrsv::coordinator::{ShardedServiceConfig, ShardedSolveService};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::matrix::triangular::solve_serial;
+use mgd_sptrsv::runtime::{LevelSolver, NativeConfig, SchedulerKind, SolverBackend};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+fn cfg(shards: usize) -> ShardedServiceConfig {
+    ShardedServiceConfig {
+        shards,
+        workers_per_shard: 2,
+        batch_size: 4,
+        backend: mgd_sptrsv::runtime::BackendConfig {
+            kind: mgd_sptrsv::runtime::BackendKind::Native,
+            native: NativeConfig {
+                threads: 4,
+                scheduler: SchedulerKind::Mgd,
+                ..NativeConfig::default()
+            },
+            ..mgd_sptrsv::runtime::BackendConfig::default()
+        },
+        ..ShardedServiceConfig::default()
+    }
+}
+
+/// A backend whose solves block until released — the deterministic way
+/// to hold a request "in flight" while the test pokes at the registry.
+struct GatedBackend {
+    started: mpsc::Sender<()>,
+    release: Mutex<mpsc::Receiver<()>>,
+    gate_open: AtomicBool,
+}
+
+impl GatedBackend {
+    fn new() -> (Arc<Self>, mpsc::Receiver<()>, mpsc::Sender<()>) {
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        (
+            Arc::new(Self {
+                started: started_tx,
+                release: Mutex::new(release_rx),
+                gate_open: AtomicBool::new(false),
+            }),
+            started_rx,
+            release_tx,
+        )
+    }
+}
+
+impl SolverBackend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn solve(&self, plan: &LevelSolver, b: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if !self.gate_open.load(Ordering::SeqCst) {
+            let _ = self.started.send(());
+            // Block until the test releases the gate; stay open after
+            // that so drains and later solves run through.
+            let _ = self
+                .release
+                .lock()
+                .unwrap()
+                .recv_timeout(Duration::from_secs(30));
+            self.gate_open.store(true, Ordering::SeqCst);
+        }
+        Ok(solve_serial(plan.matrix(), b))
+    }
+}
+
+#[test]
+fn evict_blocks_until_inflight_requests_are_replied() {
+    let (backend, started, release) = GatedBackend::new();
+    let svc = Arc::new(ShardedSolveService::start_with_backend(
+        backend,
+        ShardedServiceConfig {
+            workers_per_shard: 1,
+            ..cfg(1)
+        },
+    ));
+    let m = gen::banded(150, 4, 0.6, GenSeed(120));
+    svc.register("busy", &m).unwrap();
+    let b = vec![1.0f32; m.n];
+    let reply = svc.submit("busy", b.clone()).unwrap();
+    // Wait until the solve is genuinely inside the backend.
+    started
+        .recv_timeout(Duration::from_secs(30))
+        .expect("solve never started");
+    assert_eq!(svc.registry().get("busy").unwrap().inflight(), 1);
+    // Evict from another thread: it must not return while the request
+    // is being served.
+    let (evicted_tx, evicted_rx) = mpsc::channel();
+    let svc2 = Arc::clone(&svc);
+    let evictor = std::thread::spawn(move || {
+        let entry = svc2.evict("busy").unwrap();
+        evicted_tx.send(entry.served()).unwrap();
+    });
+    assert!(
+        evicted_rx.recv_timeout(Duration::from_millis(300)).is_err(),
+        "evict returned while a request was in flight"
+    );
+    // The key is unmapped promptly even while the drain still waits...
+    let mut spins = 0u64;
+    while svc.registry().get("busy").is_some() {
+        std::thread::yield_now();
+        spins += 1;
+        assert!(spins < 50_000_000, "evict never unmapped the key");
+    }
+    // ...so new submits get the unknown-key error reply immediately.
+    let err = svc.solve("busy", b.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown matrix key"), "{err:#}");
+    // Release the gate: the in-flight request completes (correctly),
+    // and only then does the evict return.
+    release.send(()).unwrap();
+    let resp = reply
+        .recv_timeout(Duration::from_secs(30))
+        .expect("reply must arrive")
+        .unwrap();
+    let want = solve_serial(&m, &b);
+    for i in 0..m.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+    }
+    let served = evicted_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("evict never finished after the drain");
+    assert_eq!(served, 1, "drained entry saw its request through");
+    evictor.join().unwrap();
+    // Duplicate re-registration after evict: the key is free again, and
+    // duplicates error once it is live.
+    svc.register("busy", &m).unwrap();
+    assert!(svc.register("busy", &m).is_err());
+    let resp = svc.solve("busy", b.clone()).unwrap();
+    for i in 0..m.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "post-evict row {i}");
+    }
+    Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+}
+
+#[test]
+fn swap_under_concurrent_submitters_is_never_torn() {
+    // Same order, different values: a reply computed from a torn mix of
+    // the two entries matches neither reference bitwise.
+    let ma = gen::shallow(900, 0.4, GenSeed(121));
+    let mb = gen::shallow(900, 0.4, GenSeed(122));
+    assert_eq!(ma.n, mb.n);
+    let svc = Arc::new(ShardedSolveService::start(cfg(2)).unwrap());
+    svc.register("hot", &ma).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut submitters = Vec::new();
+    for t in 0..4u64 {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        let (ma, mb) = (ma.clone(), mb.clone());
+        submitters.push(std::thread::spawn(move || {
+            let mut round = 0u64;
+            let mut matched_old = 0u64;
+            let mut matched_new = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let b: Vec<f32> = (0..ma.n)
+                    .map(|i| ((i as u64 + 3 * t + round) % 9) as f32 - 4.0)
+                    .collect();
+                let resp = svc.solve("hot", b.clone()).unwrap();
+                let want_old = solve_serial(&ma, &b);
+                let want_new = solve_serial(&mb, &b);
+                let is_old = (0..ma.n).all(|i| resp.x[i].to_bits() == want_old[i].to_bits());
+                let is_new = (0..mb.n).all(|i| resp.x[i].to_bits() == want_new[i].to_bits());
+                assert!(
+                    is_old || is_new,
+                    "reply matches neither pre- nor post-swap matrix bitwise (torn swap?)"
+                );
+                if is_old {
+                    matched_old += 1;
+                } else {
+                    matched_new += 1;
+                }
+                round += 1;
+            }
+            (matched_old, matched_new)
+        }));
+    }
+    // Let traffic flow, swap mid-stream, let more traffic flow.
+    std::thread::sleep(Duration::from_millis(100));
+    let new_entry = svc.swap("hot", &mb).unwrap();
+    assert_eq!(new_entry.solver().n(), mb.n);
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    let mut total_old = 0u64;
+    let mut total_new = 0u64;
+    for s in submitters {
+        let (o, n) = s.join().unwrap();
+        total_old += o;
+        total_new += n;
+    }
+    assert!(total_old + total_new > 0, "no traffic flowed");
+    // After the swap is published, fresh requests must resolve the new
+    // matrix exactly.
+    let b: Vec<f32> = (0..mb.n).map(|i| (i % 7) as f32 - 3.0).collect();
+    let resp = svc.solve("hot", b.clone()).unwrap();
+    let want = solve_serial(&mb, &b);
+    for i in 0..mb.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "post-swap row {i}");
+    }
+    // Lifetime served counter: everything above landed on the one key.
+    assert_eq!(
+        svc.registry().get("hot").unwrap().served(),
+        total_old + total_new + 1
+    );
+    Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+}
+
+#[test]
+fn swap_during_draining_evict_errors_and_leaves_key_gone() {
+    // An evict and a swap racing on the same key must converge to one of
+    // the two legal outcomes; with the evict strictly first, the swap
+    // errors and the key stays unknown.
+    let svc = ShardedSolveService::start(cfg(1)).unwrap();
+    let m = gen::shallow(400, 0.4, GenSeed(123));
+    svc.register("gone", &m).unwrap();
+    svc.evict("gone").unwrap();
+    let err = svc.swap("gone", &m).unwrap_err();
+    assert!(format!("{err:#}").contains("not registered"), "{err:#}");
+    assert!(svc.registry().get("gone").is_none());
+    svc.shutdown();
+}
