@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
         bs.push(b);
     }
     for (step, rx) in pend.into_iter().enumerate() {
-        let resp = rx.recv()??;
+        let resp = rx.wait()?;
         if step % 100 == 0 {
             let want = solve_serial(&m, &bs[step]);
             for i in 0..m.n {

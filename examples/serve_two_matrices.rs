@@ -7,10 +7,11 @@
 //!
 //! Run: `cargo run --release --example serve_two_matrices`
 
-use mgd_sptrsv::coordinator::{ShardedServiceConfig, ShardedSolveService};
+use mgd_sptrsv::coordinator::{Admission, ShardedServiceConfig, ShardedSolveService};
 use mgd_sptrsv::matrix::gen::{self, GenSeed};
 use mgd_sptrsv::matrix::triangular::solve_serial;
-use mgd_sptrsv::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
+use mgd_sptrsv::runtime::{BackendConfig, BackendKind, NativeConfig, RequestClass, SchedulerKind};
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     // One service, two shards, sharing one native backend — and therefore
@@ -62,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         pending.push((key, b.clone(), svc.submit(key, b)?));
     }
     for (key, b, rx) in pending {
-        let resp = rx.recv()??;
+        let resp = rx.wait()?;
         let m = if key == "power_grid" { &grid } else { &band };
         // The native MGD scheduler's contract: bitwise-identical to the
         // serial reference.
@@ -94,6 +95,28 @@ fn main() -> anyhow::Result<()> {
     let want = solve_serial(&grid2, &b);
     for i in 0..grid2.n {
         assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "post-swap row {i}");
+    }
+
+    // Admission-aware submission: `try_route` never parks under a shed
+    // policy and reports the verdict; an admitted request hands back a
+    // `SolveHandle`, whose `wait_timeout` finally gives callers a
+    // deadline (an expired deadline leaves the request in flight — the
+    // reply can still be awaited later). The `Latency` class jumps any
+    // bulk backlog on the shard queue and may lease the pool's reserved
+    // workers (none are reserved in this default config).
+    let b: Vec<f32> = (0..grid2.n).map(|i| (i % 3) as f32).collect();
+    match svc.try_route("power_grid", b.clone(), Some(RequestClass::Latency))? {
+        Admission::Admitted(handle) => {
+            let resp = handle
+                .wait_timeout(Duration::from_secs(30))
+                .expect("a 30s deadline is generous for this solve")?;
+            let want = solve_serial(&grid2, &b);
+            for i in 0..grid2.n {
+                assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "latency row {i}");
+            }
+            println!("latency-class request served under a deadline");
+        }
+        Admission::Shed(reason) => println!("request shed: {reason}"),
     }
 
     // Eviction: retire a cold matrix. The call drains any in-flight

@@ -1,0 +1,20 @@
+//! `cargo bench --bench admission` — latency-class p50/p99 under a bulk
+//! flood, first-come vs bounded by-class admission (emits
+//! BENCH_admission.json). Scale via MGD_BENCH_SCALE=small|full (default
+//! small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("admission", &scale) {
+        Ok(out) => {
+            println!("==== admission (scale={scale}) ====");
+            println!("{out}");
+            println!("[admission completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("admission failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! Latency-class tail latency under a bulk flood (`mgd bench admission`):
+//! p50/p99 of latency-critical probe requests while bulk submitters keep
+//! the shard queue saturated, measured twice on the same traffic shape —
+//! once through the **first-come** front end (unbounded single-priority
+//! queueing: probes ride the bulk lane, nothing is reserved) and once
+//! through the **by-class** admission stack (bounded lanes, bulk shed at
+//! the queue cap, probes in the latency lane, one pool worker reserved
+//! for latency sessions). Emits the machine-readable
+//! `BENCH_admission.json` artifact consumed by CI's bench-regression
+//! gate; the headline is the first-come-over-by-class p99 ratio (> 1 =
+//! the admission stack protects the tail).
+//!
+//! The bench also *enforces* the admission invariants while it runs:
+//! every admitted reply is verified **bitwise** against
+//! [`solve_serial`] (the MGD contract — shedding must never corrupt the
+//! numerics of what it admits), and the observed per-shard queue depth
+//! must never exceed the configured cap.
+
+use crate::coordinator::{Admission, AdmissionPolicy, ShardedServiceConfig, ShardedSolveService};
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::triangular::solve_serial;
+use crate::matrix::CsrMatrix;
+use crate::runtime::{BackendConfig, BackendKind, NativeConfig, RequestClass, SchedulerKind};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Worker-thread count of the shared native backend (fixed so the
+/// artifact is comparable across machines with different core counts).
+pub const ADMISSION_THREADS: usize = 4;
+
+/// Per-lane queue cap of the by-class mode (the first-come baseline runs
+/// unbounded, which is exactly the regime being measured against).
+pub const QUEUE_CAP: usize = 16;
+
+/// Bulk requests each flooder keeps outstanding (in queue or in
+/// service). Two flooders × this window comfortably exceeds
+/// [`QUEUE_CAP`], so the bounded mode visibly sheds.
+const FLOOD_WINDOW: usize = 16;
+
+/// Flooder threads saturating the bulk lane.
+const FLOODERS: usize = 2;
+
+/// One mode's measurements.
+#[derive(Debug, Clone)]
+pub struct AdmissionRow {
+    /// `"first_come"` (unbounded, single priority) or `"by_class"`
+    /// (bounded lanes + latency reserve).
+    pub mode: &'static str,
+    /// Latency-class probe requests measured.
+    pub probes: u64,
+    /// Median probe latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile probe latency, milliseconds.
+    pub p99_ms: f64,
+    /// Bulk requests served to completion during the run.
+    pub bulk_served: u64,
+    /// Bulk requests shed at admission (0 in the unbounded mode).
+    pub bulk_shed: u64,
+    /// Deepest queue lane observed on the shard.
+    pub peak_queue_depth: u64,
+    /// The lane cap this mode ran under (0 = unbounded).
+    pub queue_cap: u64,
+}
+
+/// The two matrices of the traffic mix: a bulk workload large enough
+/// that a backlog of them dominates an unprotected queue, and a small
+/// latency-critical probe. Both are shallow scattered-dependency DAGs so
+/// every solve opens a real multi-worker MGD pool session. `"tiny"` is
+/// the unit-test scale (seconds of `cargo test` budget, not a
+/// measurement); CI and the CLI use `"small"`/`"full"`.
+fn suite(scale: &str) -> (CsrMatrix, CsrMatrix) {
+    let (bulk_n, probe_n) = match scale {
+        "tiny" => (800, 300),
+        "small" => (2400, 600),
+        _ => (4800, 600),
+    };
+    let bulk = gen::shallow(bulk_n, 0.4, GenSeed(501));
+    let probe = gen::shallow(probe_n, 0.4, GenSeed(502));
+    (bulk, probe)
+}
+
+/// Probe request count per mode.
+fn probe_count(scale: &str) -> usize {
+    match scale {
+        "tiny" => 8,
+        "small" => 30,
+        _ => 80,
+    }
+}
+
+fn service_config(by_class: bool) -> ShardedServiceConfig {
+    ShardedServiceConfig {
+        shards: 1,
+        workers_per_shard: 2,
+        batch_size: 4,
+        backend: BackendConfig {
+            kind: BackendKind::Native,
+            native: NativeConfig {
+                threads: ADMISSION_THREADS,
+                scheduler: SchedulerKind::Mgd,
+                reserved_latency_workers: if by_class { 1 } else { 0 },
+                ..NativeConfig::default()
+            },
+            ..BackendConfig::default()
+        },
+        queue_cap: if by_class { QUEUE_CAP } else { 0 },
+        admission: if by_class {
+            AdmissionPolicy::ByClass
+        } else {
+            AdmissionPolicy::Block
+        },
+        ..ShardedServiceConfig::default()
+    }
+}
+
+/// A fixed cycle of RHS vectors with their precomputed bitwise
+/// references, so flooders and probes can verify every reply cheaply.
+struct VerifiedRhs {
+    bs: Vec<Vec<f32>>,
+    refs: Vec<Vec<f32>>,
+}
+
+impl VerifiedRhs {
+    fn new(m: &CsrMatrix, variants: usize, salt: usize) -> Self {
+        let bs: Vec<Vec<f32>> = (0..variants)
+            .map(|k| {
+                (0..m.n)
+                    .map(|i| ((i + 3 * k + salt) % 9) as f32 - 4.0)
+                    .collect()
+            })
+            .collect();
+        let refs = bs.iter().map(|b| solve_serial(m, b)).collect();
+        Self { bs, refs }
+    }
+
+    fn verify(&self, k: usize, x: &[f32], what: &str) -> Result<()> {
+        let want = &self.refs[k % self.refs.len()];
+        ensure!(x.len() == want.len(), "{what}: wrong solution length");
+        for i in 0..want.len() {
+            ensure!(
+                x[i].to_bits() == want[i].to_bits(),
+                "{what}: reply not bitwise-serial at row {i}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Run one mode: flood the bulk lane from [`FLOODERS`] threads while the
+/// main thread issues sequential latency probes, each timed and verified
+/// bitwise. Returns the row.
+fn run_mode(by_class: bool, scale: &str) -> Result<AdmissionRow> {
+    let (bulk_m, probe_m) = suite(scale);
+    let svc = Arc::new(
+        ShardedSolveService::start(service_config(by_class)).context("start admission service")?,
+    );
+    // Both keys on the one shard: the whole point is that they contend
+    // for the same queue. The probe key defaults to Latency in by-class
+    // mode — the per-key default set at registration, not per request.
+    svc.register("bulk", &bulk_m)?;
+    if by_class {
+        svc.register_with_class("probe", &probe_m, RequestClass::Latency)?;
+    } else {
+        svc.register("probe", &probe_m)?;
+    }
+    let bulk_rhs = Arc::new(VerifiedRhs::new(&bulk_m, 4, 0));
+    let probe_rhs = VerifiedRhs::new(&probe_m, 4, 1);
+
+    // Warm both paths (plans, pool, caches) and verify once before any
+    // timing.
+    let warm = svc.solve("bulk", bulk_rhs.bs[0].clone())?;
+    bulk_rhs.verify(0, &warm.x, "bulk warmup")?;
+    let warm = svc.solve("probe", probe_rhs.bs[0].clone())?;
+    probe_rhs.verify(0, &warm.x, "probe warmup")?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let shed_total = Arc::new(AtomicU64::new(0));
+    let mut flooders = Vec::new();
+    for f in 0..FLOODERS {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        let shed_total = Arc::clone(&shed_total);
+        let bulk_rhs = Arc::clone(&bulk_rhs);
+        flooders.push(std::thread::spawn(move || -> Result<()> {
+            let mut pending = VecDeque::new();
+            let mut k = f; // stagger the RHS cycle across flooders
+            while !stop.load(Ordering::SeqCst) {
+                match svc.try_route("bulk", bulk_rhs.bs[k % bulk_rhs.bs.len()].clone(), None)? {
+                    Admission::Admitted(handle) => pending.push_back((k, handle)),
+                    Admission::Shed(_) => {
+                        shed_total.fetch_add(1, Ordering::Relaxed);
+                        // Back off by reaping a reply: admission said the
+                        // lane is full, so wait for service-side progress
+                        // instead of hammering the cap.
+                        if let Some((kk, handle)) = pending.pop_front() {
+                            bulk_rhs.verify(kk, &handle.wait()?.x, "bulk reply")?;
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                if pending.len() >= FLOOD_WINDOW {
+                    let (kk, handle) = pending.pop_front().expect("window is non-empty");
+                    bulk_rhs.verify(kk, &handle.wait()?.x, "bulk reply")?;
+                }
+                k += FLOODERS;
+            }
+            for (kk, handle) in pending {
+                bulk_rhs.verify(kk, &handle.wait()?.x, "bulk drain")?;
+            }
+            Ok(())
+        }));
+    }
+
+    // Let the flood build a steady backlog before probing.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+
+    // Sequential latency probes: in the first-come baseline they queue
+    // behind the backlog like everyone else (the key's default class is
+    // Bulk there); in by-class mode the Latency default puts them in the
+    // priority lane and the reserved pool worker serves their session.
+    let mut latencies_ms = Vec::with_capacity(probe_count(scale));
+    for p in 0..probe_count(scale) {
+        let b = probe_rhs.bs[p % probe_rhs.bs.len()].clone();
+        let t0 = Instant::now();
+        let resp = svc.solve("probe", b)?;
+        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        probe_rhs.verify(p, &resp.x, "probe reply")?;
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    for f in flooders {
+        f.join().expect("flooder thread panicked")?;
+    }
+    let stats = svc.stats();
+    let cap = if by_class { QUEUE_CAP as u64 } else { 0 };
+    if cap > 0 {
+        ensure!(
+            stats.peak_queue_depth <= cap,
+            "queue depth {} exceeded the cap {cap}",
+            stats.peak_queue_depth
+        );
+    }
+    ensure!(
+        stats.shed_latency == 0,
+        "latency probes must never shed ({} did)",
+        stats.shed_latency
+    );
+    let row = AdmissionRow {
+        mode: if by_class { "by_class" } else { "first_come" },
+        probes: latencies_ms.len() as u64,
+        p50_ms: percentile(&mut latencies_ms.clone(), 0.50),
+        p99_ms: percentile(&mut latencies_ms, 0.99),
+        // Everything served minus the probes and the two warmup solves.
+        bulk_served: stats.served.saturating_sub(probe_count(scale) as u64 + 2),
+        bulk_shed: stats.shed_bulk,
+        peak_queue_depth: stats.peak_queue_depth,
+        queue_cap: cap,
+    };
+    // Sanity: the service-side shed count and the flooders' view agree.
+    ensure!(
+        row.bulk_shed == shed_total.load(Ordering::Relaxed),
+        "shed accounting diverged: counters {} vs flooders {}",
+        row.bulk_shed,
+        shed_total.load(Ordering::Relaxed)
+    );
+    Arc::try_unwrap(svc)
+        .ok()
+        .expect("flooders joined; sole owner")
+        .shutdown();
+    Ok(row)
+}
+
+/// Nearest-rank percentile (q in [0, 1]) of `values`; sorts in place.
+fn percentile(values: &mut [f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let idx = ((values.len() - 1) as f64 * q).ceil() as usize;
+    values[idx.min(values.len() - 1)]
+}
+
+/// Run both modes and render the comparison. First-come runs first so
+/// its unbounded backlog cannot leak into the bounded measurement.
+pub fn admission_compare(scale: &str) -> Result<(crate::util::Table, Vec<AdmissionRow>)> {
+    let rows = vec![run_mode(false, scale)?, run_mode(true, scale)?];
+    let mut t = crate::util::Table::new(vec![
+        "mode",
+        "probes",
+        "p50 ms",
+        "p99 ms",
+        "bulk served",
+        "bulk shed",
+        "peak depth",
+        "cap",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.mode.to_string(),
+            r.probes.to_string(),
+            format!("{:.4}", r.p50_ms),
+            format!("{:.4}", r.p99_ms),
+            r.bulk_served.to_string(),
+            r.bulk_shed.to_string(),
+            r.peak_queue_depth.to_string(),
+            r.queue_cap.to_string(),
+        ]);
+    }
+    Ok((t, rows))
+}
+
+/// Headline ratio the CI bench-regression gate watches: first-come p99
+/// over by-class p99 for the latency probes (> 1 = bounded by-class
+/// admission protects the latency tail).
+pub fn latency_p99_ratio(rows: &[AdmissionRow]) -> f64 {
+    let first = rows.iter().find(|r| r.mode == "first_come");
+    let byclass = rows.iter().find(|r| r.mode == "by_class");
+    match (first, byclass) {
+        (Some(f), Some(b)) => f.p99_ms / b.p99_ms.max(1e-9),
+        _ => 1.0,
+    }
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[AdmissionRow]) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"admission\",\n");
+    out.push_str(&format!("  \"threads\": {ADMISSION_THREADS},\n"));
+    out.push_str(&format!(
+        "  \"latency_p99_ratio\": {:.4},\n  \"rows\": [\n",
+        latency_p99_ratio(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"probes\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \
+             \"bulk_served\": {}, \"bulk_shed\": {}, \"peak_queue_depth\": {}, \
+             \"queue_cap\": {}}}{}\n",
+            r.mode,
+            r.probes,
+            r.p50_ms,
+            r.p99_ms,
+            r.bulk_served,
+            r.bulk_shed,
+            r.peak_queue_depth,
+            r.queue_cap,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_admission.json`).
+pub fn write_json(path: &Path, rows: &[AdmissionRow]) -> Result<()> {
+    std::fs::write(path, render_json(rows)).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let mut v = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&mut v.clone(), 0.0), 1.0);
+        assert_eq!(percentile(&mut v.clone(), 0.5), 3.0);
+        assert_eq!(percentile(&mut v.clone(), 0.99), 5.0);
+        assert_eq!(percentile(&mut v, 1.0), 5.0);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let rows = vec![
+            AdmissionRow {
+                mode: "first_come",
+                probes: 30,
+                p50_ms: 2.0,
+                p99_ms: 9.0,
+                bulk_served: 200,
+                bulk_shed: 0,
+                peak_queue_depth: 40,
+                queue_cap: 0,
+            },
+            AdmissionRow {
+                mode: "by_class",
+                probes: 30,
+                p50_ms: 0.4,
+                p99_ms: 1.5,
+                bulk_served: 180,
+                bulk_shed: 25,
+                peak_queue_depth: 16,
+                queue_cap: 16,
+            },
+        ];
+        let j = render_json(&rows);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"admission\""));
+        assert!(j.contains("\"latency_p99_ratio\": 6.0000"));
+        assert!(j.contains("\"queue_cap\": 16"));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let r = latency_p99_ratio(&rows);
+        assert!((r - 6.0).abs() < 1e-9, "{r}");
+        assert_eq!(latency_p99_ratio(&rows[..1]), 1.0, "missing mode = neutral");
+    }
+
+    /// End-to-end smoke at the dedicated `"tiny"` test scale (small
+    /// matrices, 8 probes — the measurement scales stay off the
+    /// `cargo test` budget): both modes run, every reply verifies
+    /// bitwise (inside `run_mode`), the bounded mode respects its cap,
+    /// and the ratio is a positive finite number. The *size* of the
+    /// ratio is asserted by the CI gate against the pinned baseline,
+    /// not here — unit tests on loaded machines would flake.
+    #[test]
+    fn admission_compare_smoke() {
+        let (t, rows) = admission_compare("tiny").unwrap();
+        assert_eq!(rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("first_come") && s.contains("by_class"));
+        for r in &rows {
+            assert!(r.probes > 0);
+            assert!(r.p50_ms >= 0.0 && r.p99_ms >= r.p50_ms);
+            if r.queue_cap > 0 {
+                assert!(r.peak_queue_depth <= r.queue_cap, "{r:?}");
+            }
+        }
+        let ratio = latency_p99_ratio(&rows);
+        assert!(ratio.is_finite() && ratio > 0.0, "{ratio}");
+    }
+}

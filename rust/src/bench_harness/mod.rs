@@ -6,6 +6,7 @@
 //! where the crossovers fall — is the reproduction target, not absolute
 //! values from the authors' testbed.
 
+pub mod admission;
 pub mod backends;
 pub mod concurrency;
 pub mod fig10;

@@ -1,7 +1,9 @@
 //! Experiment runner used by the CLI and the `cargo bench` targets: maps an
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
-use super::{backends, concurrency, fig10, fig11, fig9, schedulers, serving, tables, workloads};
+use super::{
+    admission, backends, concurrency, fig10, fig11, fig9, schedulers, serving, tables, workloads,
+};
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
 
@@ -69,6 +71,18 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
                 json_path.display(),
             )
         }
+        "admission" => {
+            let (t, rows) = admission::admission_compare(scale)?;
+            let json_path = std::path::Path::new("BENCH_admission.json");
+            admission::write_json(json_path, &rows)?;
+            format!(
+                "{}\nlatency-probe p99 ratio (first-come over by-class admission): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                admission::latency_p99_ratio(&rows),
+                json_path.display(),
+            )
+        }
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -106,6 +120,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "schedulers",
     "serving",
     "concurrency",
+    "admission",
 ];
 
 #[cfg(test)]

@@ -7,8 +7,10 @@
 //!                        [--scheduler level|mgd|auto] [--artifacts DIR]
 //! mgd serve    --matrices <spec,spec,...> [--shards N] [--workers N]
 //!                        [--requests N] [--swap-every N] [--backend ...]
-//!                        [--scheduler ...]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|all>
+//!                        [--scheduler ...] [--queue-cap N]
+//!                        [--admission block|shed|by-class]
+//!                        [--reserved-latency-workers N]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|admission|all>
 //!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
@@ -16,7 +18,10 @@
 use crate::arch::ArchConfig;
 use crate::bench_harness::report;
 use crate::compiler::{compile, CompilerConfig};
-use crate::coordinator::{ServiceConfig, ShardedServiceConfig, ShardedSolveService, SolveService};
+use crate::coordinator::{
+    Admission, AdmissionPolicy, ServiceConfig, ShardedServiceConfig, ShardedSolveService,
+    SolveService,
+};
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
@@ -58,7 +63,8 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
 }
 
 /// Backend selection shared by `solve` and `serve`: `--backend`,
-/// `--scheduler` and `--artifacts` with the same defaults.
+/// `--scheduler`, `--artifacts` and `--reserved-latency-workers` with
+/// the same defaults.
 fn backend_config(args: &[String]) -> Result<BackendConfig> {
     let artifacts = flag_value(args, "--artifacts")
         .map(PathBuf::from)
@@ -71,11 +77,17 @@ fn backend_config(args: &[String]) -> Result<BackendConfig> {
         .as_deref()
         .unwrap_or("auto")
         .parse()?;
+    let reserved_latency_workers: usize = flag_value(args, "--reserved-latency-workers")
+        .as_deref()
+        .unwrap_or("0")
+        .parse()
+        .context("--reserved-latency-workers")?;
     Ok(BackendConfig {
         kind,
         artifacts,
         native: NativeConfig {
             scheduler,
+            reserved_latency_workers,
             ..NativeConfig::default()
         },
     })
@@ -182,10 +194,21 @@ fn run_inner() -> Result<()> {
                 .unwrap_or("0")
                 .parse()
                 .context("--swap-every")?;
+            let queue_cap: usize = flag_value(&args, "--queue-cap")
+                .as_deref()
+                .unwrap_or("0")
+                .parse()
+                .context("--queue-cap")?;
+            let admission: AdmissionPolicy = flag_value(&args, "--admission")
+                .as_deref()
+                .unwrap_or("block")
+                .parse()?;
             let cfg = ShardedServiceConfig {
                 shards,
                 workers_per_shard: workers,
                 backend: backend_config(&args)?,
+                queue_cap,
+                admission,
                 ..ShardedServiceConfig::default()
             };
             let svc = ShardedSolveService::start(cfg)?;
@@ -225,10 +248,17 @@ fn run_inner() -> Result<()> {
                     swaps += 1;
                 }
                 let (key, n) = &keys[i % keys.len()];
-                rxs.push(svc.submit(key, vec![1.0f32; *n])?);
+                // `try_route` so a shed is a structured verdict at submit
+                // time (expected under overload with --admission
+                // shed|by-class) rather than something to fish out of an
+                // error message; admitted replies are awaited strictly.
+                match svc.try_route(key, vec![1.0f32; *n], None)? {
+                    Admission::Admitted(handle) => rxs.push(handle),
+                    Admission::Shed(_) => {}
+                }
             }
             for rx in rxs {
-                rx.recv().context("worker dropped")??;
+                rx.wait()?;
             }
             let mut t = Table::new(vec!["shard", "served", "errors", "rounds", "solve ms"]);
             for s in svc.shard_stats() {
@@ -253,6 +283,16 @@ fn run_inner() -> Result<()> {
                 agg.batched_rounds,
                 agg.solve_seconds * 1e3,
                 agg.peak_concurrency,
+            );
+            println!(
+                "admission {admission} (queue cap {queue_cap}): \
+                 {} latency + {} bulk admitted, {} latency + {} bulk shed, \
+                 peak queue depth {}",
+                agg.admitted_latency,
+                agg.admitted_bulk,
+                agg.shed_latency,
+                agg.shed_bulk,
+                agg.peak_queue_depth,
             );
             svc.shutdown();
         }
@@ -294,9 +334,16 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
          \x20 mgd serve   --matrices <spec,spec,...> [--shards N] [--workers N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--swap-every N] [--backend ...]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...] [--queue-cap N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--admission block|shed|by-class]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--reserved-latency-workers N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats;\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --swap-every N hot-swaps a matrix every N requests\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --swap-every N hot-swaps a matrix every N requests;\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --queue-cap bounds each shard's queue lanes and\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --admission picks the full-lane policy (block parks,\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 shed rejects with a reason reply, by-class sheds bulk\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 only); --reserved-latency-workers keeps pool workers\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 for latency-class solves\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
@@ -305,7 +352,7 @@ fn print_usage() {
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
          \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
-         \x20 backends schedulers serving concurrency"
+         \x20 backends schedulers serving concurrency admission"
     );
 }
 
@@ -412,6 +459,56 @@ mod tests {
             .parse()
             .unwrap();
         assert_eq!(every, 0);
+    }
+
+    #[test]
+    fn admission_flags_parse_with_defaults() {
+        let args: Vec<String> = [
+            "serve",
+            "--matrices",
+            "gen:chain:50:1",
+            "--queue-cap",
+            "32",
+            "--admission",
+            "by-class",
+            "--reserved-latency-workers",
+            "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let cap: usize = flag_value(&args, "--queue-cap")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(cap, 32);
+        let policy: AdmissionPolicy = flag_value(&args, "--admission")
+            .as_deref()
+            .unwrap_or("block")
+            .parse()
+            .unwrap();
+        assert_eq!(policy, AdmissionPolicy::ByClass);
+        let cfg = backend_config(&args).unwrap();
+        assert_eq!(cfg.native.reserved_latency_workers, 2);
+        // Unset flags fall back to the documented defaults (unbounded
+        // first-come, nothing reserved).
+        let none: Vec<String> = vec!["serve".into()];
+        let cap: usize = flag_value(&none, "--queue-cap")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(cap, 0);
+        let policy: AdmissionPolicy = flag_value(&none, "--admission")
+            .as_deref()
+            .unwrap_or("block")
+            .parse()
+            .unwrap();
+        assert_eq!(policy, AdmissionPolicy::Block);
+        assert_eq!(backend_config(&none).unwrap().native.reserved_latency_workers, 0);
+        // Unknown policies error with the accepted set.
+        assert!("drop".parse::<AdmissionPolicy>().is_err());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! counters of the sharded service and their aggregate view.
 
 use crate::arch::ArchConfig;
+use crate::runtime::RequestClass;
 use crate::sim::{EnergyModel, RunStats};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -55,6 +56,11 @@ pub struct ShardCounters {
     errors: AtomicU64,
     batched_rounds: AtomicU64,
     solve_nanos: AtomicU64,
+    admitted_latency: AtomicU64,
+    admitted_bulk: AtomicU64,
+    shed_latency: AtomicU64,
+    shed_bulk: AtomicU64,
+    peak_queue_depth: AtomicU64,
 }
 
 impl ShardCounters {
@@ -67,6 +73,26 @@ impl ShardCounters {
         self.batched_rounds.fetch_add(1, Ordering::Relaxed);
         self.solve_nanos
             .fetch_add(solve_time.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one admitted request of `class`, with the depth its lane
+    /// reached after the enqueue (feeds the queue-depth high-water mark,
+    /// which the admission cap bounds by construction).
+    pub fn note_admitted(&self, class: RequestClass, depth: u64) {
+        match class {
+            RequestClass::Latency => self.admitted_latency.fetch_add(1, Ordering::Relaxed),
+            RequestClass::Bulk => self.admitted_bulk.fetch_add(1, Ordering::Relaxed),
+        };
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Record one request of `class` shed at admission (the caller got
+    /// the queue-cap error reply instead of a queue slot).
+    pub fn note_shed(&self, class: RequestClass) {
+        match class {
+            RequestClass::Latency => self.shed_latency.fetch_add(1, Ordering::Relaxed),
+            RequestClass::Bulk => self.shed_bulk.fetch_add(1, Ordering::Relaxed),
+        };
     }
 
     /// Successful replies so far.
@@ -82,6 +108,11 @@ impl ShardCounters {
             errors: self.errors.load(Ordering::Relaxed),
             batched_rounds: self.batched_rounds.load(Ordering::Relaxed),
             solve_seconds: self.solve_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            admitted_latency: self.admitted_latency.load(Ordering::Relaxed),
+            admitted_bulk: self.admitted_bulk.load(Ordering::Relaxed),
+            shed_latency: self.shed_latency.load(Ordering::Relaxed),
+            shed_bulk: self.shed_bulk.load(Ordering::Relaxed),
+            peak_queue_depth: self.peak_queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -102,6 +133,17 @@ pub struct ShardStats {
     /// Cumulative wall-clock seconds the shard spent in the numeric
     /// backend.
     pub solve_seconds: f64,
+    /// Latency-class requests admitted to this shard's queue.
+    pub admitted_latency: u64,
+    /// Bulk-class requests admitted to this shard's queue.
+    pub admitted_bulk: u64,
+    /// Latency-class requests shed at admission (queue-cap error reply).
+    pub shed_latency: u64,
+    /// Bulk-class requests shed at admission (queue-cap error reply).
+    pub shed_bulk: u64,
+    /// High-water mark of this shard's queue-lane depth; bounded by the
+    /// service's `queue_cap` whenever one is set.
+    pub peak_queue_depth: u64,
 }
 
 /// Aggregate serving statistics across every shard of a service.
@@ -128,6 +170,17 @@ pub struct ServingStats {
     /// overlapped in one pool instead of queueing. Filled in by
     /// `ShardedSolveService::stats`.
     pub peak_concurrency: u64,
+    /// Total latency-class requests admitted across shards.
+    pub admitted_latency: u64,
+    /// Total bulk-class requests admitted across shards.
+    pub admitted_bulk: u64,
+    /// Total latency-class requests shed at admission.
+    pub shed_latency: u64,
+    /// Total bulk-class requests shed at admission.
+    pub shed_bulk: u64,
+    /// Deepest queue lane observed on any shard (≤ the configured
+    /// `queue_cap` whenever one is set).
+    pub peak_queue_depth: u64,
 }
 
 impl ServingStats {
@@ -144,6 +197,11 @@ impl ServingStats {
             solve_seconds: per_shard.iter().map(|s| s.solve_seconds).sum(),
             concurrent_sessions: 0,
             peak_concurrency: 0,
+            admitted_latency: per_shard.iter().map(|s| s.admitted_latency).sum(),
+            admitted_bulk: per_shard.iter().map(|s| s.admitted_bulk).sum(),
+            shed_latency: per_shard.iter().map(|s| s.shed_latency).sum(),
+            shed_bulk: per_shard.iter().map(|s| s.shed_bulk).sum(),
+            peak_queue_depth: per_shard.iter().map(|s| s.peak_queue_depth).max().unwrap_or(0),
         }
     }
 }
@@ -157,18 +215,31 @@ mod tests {
         let a = ShardCounters::default();
         a.record_round(3, 0, Duration::from_millis(2));
         a.record_round(1, 1, Duration::from_millis(1));
+        a.note_admitted(RequestClass::Bulk, 3);
+        a.note_admitted(RequestClass::Latency, 1);
+        a.note_shed(RequestClass::Bulk);
         let b = ShardCounters::default();
         b.record_round(5, 0, Duration::from_millis(4));
+        b.note_admitted(RequestClass::Bulk, 5);
         let snaps = [a.snapshot(0), b.snapshot(1)];
         assert_eq!(snaps[0].served, 4);
         assert_eq!(snaps[0].errors, 1);
         assert_eq!(snaps[0].batched_rounds, 2);
+        assert_eq!(snaps[0].admitted_latency, 1);
+        assert_eq!(snaps[0].admitted_bulk, 1);
+        assert_eq!(snaps[0].shed_bulk, 1);
+        assert_eq!(snaps[0].shed_latency, 0);
+        assert_eq!(snaps[0].peak_queue_depth, 3);
         assert_eq!(snaps[1].shard, 1);
         let agg = ServingStats::aggregate(&snaps);
         assert_eq!(agg.shards, 2);
         assert_eq!(agg.served, 9);
         assert_eq!(agg.errors, 1);
         assert_eq!(agg.batched_rounds, 3);
+        assert_eq!(agg.admitted_latency, 1);
+        assert_eq!(agg.admitted_bulk, 2);
+        assert_eq!(agg.shed_bulk, 1);
+        assert_eq!(agg.peak_queue_depth, 5, "aggregate takes the max depth");
         assert!((agg.solve_seconds - 0.007).abs() < 1e-6);
     }
 

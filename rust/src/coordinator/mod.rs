@@ -18,6 +18,14 @@
 //!   worker pool** is spawned once and reused across every solve and
 //!   matrix, with independent solves overlapping as concurrent pool
 //!   sessions;
+//! - admission is **bounded and class-aware**: each shard holds two
+//!   queue lanes ([`crate::runtime::RequestClass::Latency`] drained
+//!   before `Bulk`) capped by `queue_cap`, an [`AdmissionPolicy`]
+//!   decides whether a full lane blocks or sheds
+//!   ([`ShardedSolveService::try_route`] → [`Admission`]), and
+//!   [`SolveHandle::wait_timeout`] gives callers deadlines; the class
+//!   rides down to the pool's reserved latency-lane workers, so bulk
+//!   floods neither wedge the queues nor lease the pool dry;
 //! - matrices are **dynamic**: [`ShardedSolveService::evict`] retires a
 //!   key after draining its in-flight requests, and
 //!   [`ShardedSolveService::swap`] replaces a key's matrix live with an
@@ -44,6 +52,6 @@ pub mod service;
 pub use metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
 pub use registry::{MatrixRegistry, RegisteredMatrix};
 pub use service::{
-    ServiceConfig, ShardedServiceConfig, ShardedSolveService, SolveRequest, SolveResponse,
-    SolveService,
+    Admission, AdmissionPolicy, ServiceConfig, ShardedServiceConfig, ShardedSolveService,
+    SolveHandle, SolveRequest, SolveResponse, SolveService,
 };

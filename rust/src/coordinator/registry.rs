@@ -33,12 +33,22 @@
 use super::metrics::SolveMetrics;
 use crate::compiler::{compile, CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
-use crate::runtime::LevelSolver;
+use crate::runtime::{LevelSolver, RequestClass};
 use crate::sim::Accelerator;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// Parking spot for [`MatrixRegistry::evict`]: the evictor waits here for
+/// the lineage's in-flight count to drain instead of burning a core in a
+/// poll loop. Lineage-shared like the counters, so a drain covers
+/// requests routed against any entry the key ever resolved to.
+#[derive(Default)]
+struct DrainGate {
+    lock: Mutex<()>,
+    drained: Condvar,
+}
 
 /// One registered matrix: everything the serve path needs, prepared once.
 ///
@@ -58,6 +68,12 @@ pub struct RegisteredMatrix {
     /// Requests routed against this key whose replies have not been
     /// delivered yet — what [`MatrixRegistry::evict`] drains.
     inflight: Arc<AtomicU64>,
+    /// Where the evictor parks while the drain completes (lineage-shared
+    /// with `inflight`).
+    drain: Arc<DrainGate>,
+    /// The class a request for this key runs under when it carries no
+    /// class of its own.
+    default_class: RequestClass,
 }
 
 impl RegisteredMatrix {
@@ -102,6 +118,14 @@ impl RegisteredMatrix {
         self.inflight.load(Ordering::Acquire)
     }
 
+    /// The scheduling class a request for this key runs under when it
+    /// carries no class of its own — set at
+    /// [`MatrixRegistry::register_with_class`] /
+    /// [`MatrixRegistry::swap_with_class`], `Bulk` otherwise.
+    pub fn default_class(&self) -> RequestClass {
+        self.default_class
+    }
+
     /// Count `n` served requests (called by shard workers).
     pub(crate) fn note_served(&self, n: u64) {
         self.served.fetch_add(n, Ordering::Relaxed);
@@ -109,8 +133,15 @@ impl RegisteredMatrix {
 
     /// One request finished (replied or dropped); pairs with the
     /// increment `MatrixRegistry::checkout` performed at route time.
+    /// The request that drains the lineage to zero wakes any evictor
+    /// parked on the drain gate; the empty critical section orders the
+    /// notification after the evictor's check-then-wait, so the wakeup
+    /// cannot be lost.
     pub(crate) fn note_done(&self) {
-        self.inflight.fetch_sub(1, Ordering::Release);
+        if self.inflight.fetch_sub(1, Ordering::Release) == 1 {
+            let _guard = self.drain.lock.lock().unwrap();
+            self.drain.drained.notify_all();
+        }
     }
 }
 
@@ -183,8 +214,22 @@ impl MatrixRegistry {
     /// Register `m` under `key`: compile, simulate once, build the solve
     /// plan, and assign a shard. Errors if the key is already registered
     /// — a key is an identity, not a slot to overwrite (use
-    /// [`MatrixRegistry::swap`] to replace a live key).
+    /// [`MatrixRegistry::swap`] to replace a live key). Requests for the
+    /// key default to the `Bulk` class; use
+    /// [`MatrixRegistry::register_with_class`] for latency-critical keys.
     pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
+        self.register_with_class(key, m, RequestClass::Bulk)
+    }
+
+    /// [`MatrixRegistry::register`] with an explicit per-key default
+    /// [`RequestClass`]: requests that carry no class of their own are
+    /// admitted, queued and executed under `class`.
+    pub fn register_with_class(
+        &self,
+        key: &str,
+        m: &CsrMatrix,
+        class: RequestClass,
+    ) -> Result<Arc<RegisteredMatrix>> {
         if self.inner.read().unwrap().contains_key(key) {
             bail!("matrix key {key:?} is already registered");
         }
@@ -205,6 +250,8 @@ impl MatrixRegistry {
             metrics,
             served: Arc::new(AtomicU64::new(0)),
             inflight: Arc::new(AtomicU64::new(0)),
+            drain: Arc::new(DrainGate::default()),
+            default_class: class,
         });
         map.insert(key.to_string(), Arc::clone(&entry));
         Ok(entry)
@@ -231,6 +278,22 @@ impl MatrixRegistry {
     where
         F: FnOnce(&Arc<RegisteredMatrix>) -> Result<()>,
     {
+        self.swap_with_class(key, m, None, warm)
+    }
+
+    /// [`MatrixRegistry::swap`] that also sets the key's default
+    /// [`RequestClass`]: `Some(class)` re-classes the key, `None` keeps
+    /// the class of the entry being replaced.
+    pub fn swap_with_class<F>(
+        &self,
+        key: &str,
+        m: &CsrMatrix,
+        class: Option<RequestClass>,
+        warm: F,
+    ) -> Result<Arc<RegisteredMatrix>>
+    where
+        F: FnOnce(&Arc<RegisteredMatrix>) -> Result<()>,
+    {
         let Some(old) = self.get(key) else {
             bail!("swap: matrix key {key:?} is not registered");
         };
@@ -243,6 +306,8 @@ impl MatrixRegistry {
             metrics,
             served: Arc::clone(&old.served),
             inflight: Arc::clone(&old.inflight),
+            drain: Arc::clone(&old.drain),
+            default_class: class.unwrap_or(old.default_class),
         });
         warm(&entry)?;
         let mut map = self.inner.write().unwrap();
@@ -303,22 +368,22 @@ impl MatrixRegistry {
     /// drained entry — dropping it releases the plan. `None` if the key
     /// was not registered.
     ///
-    /// The wait backs off spin → yield → sleep; eviction is a
-    /// control-plane operation, so a few hundred microseconds of latency
-    /// while a shard finishes its batch is fine.
+    /// The wait parks on the lineage's drain gate (a `Condvar` signaled
+    /// by the request that drains `inflight` to zero) instead of
+    /// polling: an evictor blocked behind a slow solve costs nothing
+    /// until the wakeup. Because the key is unmapped first, `inflight`
+    /// is monotonically non-increasing here — once zero, it stays zero.
     pub fn evict(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
         let entry = self.remove(key)?;
-        let mut spins = 0u32;
+        let mut guard = entry.drain.lock.lock().unwrap();
+        // The check runs under the gate's lock and `note_done` notifies
+        // under the same lock, so the last decrement either happens
+        // before this check (we never wait) or its notification happens
+        // after we wait — a lost-wakeup window does not exist.
         while entry.inflight() > 0 {
-            spins = spins.saturating_add(1);
-            if spins < 64 {
-                std::hint::spin_loop();
-            } else if spins < 4096 {
-                std::thread::yield_now();
-            } else {
-                std::thread::sleep(std::time::Duration::from_micros(100));
-            }
+            guard = entry.drain.drained.wait(guard).unwrap();
         }
+        drop(guard);
         Some(entry)
     }
 
@@ -509,6 +574,49 @@ mod tests {
         assert!(format!("{err:#}").contains("re-registered"), "{err:#}");
         // The fresh registration survived un-clobbered.
         assert_eq!(reg.get("k").unwrap().solver().n(), ma.n);
+    }
+
+    #[test]
+    fn default_class_is_bulk_and_survives_plain_swaps() {
+        let reg = registry(1);
+        let m = gen::chain(40, GenSeed(80));
+        let bulk = reg.register("bg", &m).unwrap();
+        assert_eq!(bulk.default_class(), RequestClass::Bulk);
+        let lat = reg
+            .register_with_class("fg", &m, RequestClass::Latency)
+            .unwrap();
+        assert_eq!(lat.default_class(), RequestClass::Latency);
+        // A plain swap keeps the key's class; an explicit one re-classes.
+        let m2 = gen::chain(60, GenSeed(81));
+        let swapped = reg.swap("fg", &m2, |_| Ok(())).unwrap();
+        assert_eq!(swapped.default_class(), RequestClass::Latency);
+        let reclassed = reg
+            .swap_with_class("fg", &m, Some(RequestClass::Bulk), |_| Ok(()))
+            .unwrap();
+        assert_eq!(reclassed.default_class(), RequestClass::Bulk);
+    }
+
+    #[test]
+    fn evict_with_no_straggler_parks_and_wakes_across_threads() {
+        // Several requests in flight, finished from another thread one by
+        // one: the evictor must park (not spin) and wake exactly when the
+        // last reply lands. Timing-independent: the finisher sleeps
+        // between note_done calls, so a broken wakeup hangs loudly.
+        let reg = Arc::new(registry(1));
+        let m = gen::chain(50, GenSeed(82));
+        reg.register("drainme", &m).unwrap();
+        let e1 = reg.checkout("drainme").unwrap();
+        let e2 = reg.checkout("drainme").unwrap();
+        assert_eq!(e1.inflight(), 2);
+        let finisher = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            e1.note_done();
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            e2.note_done();
+        });
+        let drained = reg.evict("drainme").expect("key was registered");
+        assert_eq!(drained.inflight(), 0);
+        finisher.join().unwrap();
     }
 
     #[test]

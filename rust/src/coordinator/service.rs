@@ -29,11 +29,36 @@
 //! entry is compiled/planned/warmed off the hot path and published in one
 //! atomic pointer move while requests keep flowing.
 //!
-//! Failures are loud, never hangs: backend construction errors fail
-//! `start`, registration (compile/verify) errors fail `register`, an
-//! unknown `matrix_key` gets an immediate error *reply*, and per-request
-//! solver errors are replied to the requester — workers never exit
-//! silently with requests pending.
+//! # Admission control and priority lanes
+//!
+//! The front end is **admission-controlled**: each shard holds two
+//! bounded queue lanes — [`RequestClass::Latency`] drained strictly
+//! before [`RequestClass::Bulk`] — and
+//! [`ShardedServiceConfig::queue_cap`] bounds each lane's depth. What
+//! happens at a full lane is the [`AdmissionPolicy`]: `Block` parks the
+//! submitter until space frees (bounded first-come), `Shed` rejects with
+//! an immediate queue-cap error reply, and `ByClass` sheds bulk while
+//! blocking (never dropping) latency traffic.
+//! [`ShardedSolveService::try_route`] is the non-blocking submit: it
+//! returns [`Admission::Shed`] with the reason instead of ever parking a
+//! `Shed`/`ByClass`-bulk caller, and [`Admission::Admitted`] carries a
+//! [`SolveHandle`] whose [`SolveHandle::wait_timeout`] finally gives
+//! callers a deadline. The class rides the request (or the key's default,
+//! set at `register`/`swap`) through queue ordering and down into the
+//! native backend's pool lease, where reserved latency-lane workers stop
+//! a bulk flood from leasing the pool dry.
+//!
+//! Failure story: failures are loud, and every *admitted* request is
+//! answered. Backend construction errors fail `start`, registration
+//! (compile/verify) errors fail `register`, an unknown `matrix_key` or a
+//! shed request gets an immediate error *reply*, per-request solver
+//! errors are replied to the requester, and the shutdown race replies
+//! with a "service stopped" error instead of dropping the channel —
+//! workers never exit silently with requests pending. The one *wait* a
+//! caller can still experience — its own solve taking long — is what
+//! [`SolveHandle::wait_timeout`] bounds: the request stays in flight
+//! (and its in-flight accounting intact) after a timeout, and the reply
+//! can still be awaited later.
 //!
 //! [`SolveService`] remains as the single-matrix facade (CLI `mgd solve`,
 //! benches): a 1-shard service with one matrix registered under an
@@ -43,10 +68,56 @@ use super::metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
 use super::registry::{MatrixRegistry, RegisteredMatrix};
 use crate::compiler::{CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
-use crate::runtime::{create_backend, BackendConfig, SolverBackend};
-use anyhow::{anyhow, Context, Result};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use crate::runtime::{create_backend, BackendConfig, RequestClass, SolverBackend};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::str::FromStr;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What a shard does when a request arrives at a full queue lane (each
+/// lane is bounded by [`ShardedServiceConfig::queue_cap`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Park the submitting thread until the lane has room — bounded
+    /// first-come (the compatibility default; with `queue_cap == 0`
+    /// nothing ever blocks and admission behaves exactly like the
+    /// unbounded front end this replaces).
+    #[default]
+    Block,
+    /// Reject with an immediate error reply naming the cap — the
+    /// submitter never parks; [`ShardedSolveService::try_route`] reports
+    /// it as [`Admission::Shed`].
+    Shed,
+    /// Per-class: [`RequestClass::Bulk`] is shed at the cap,
+    /// [`RequestClass::Latency`] blocks (latency-critical traffic is
+    /// never dropped; its lane only fills under genuine latency
+    /// overload, which back-pressures instead of losing requests).
+    ByClass,
+}
+
+impl FromStr for AdmissionPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "block" => Ok(Self::Block),
+            "shed" => Ok(Self::Shed),
+            "by-class" => Ok(Self::ByClass),
+            other => bail!("unknown admission policy {other:?} (expected block|shed|by-class)"),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Block => "block",
+            Self::Shed => "shed",
+            Self::ByClass => "by-class",
+        })
+    }
+}
 
 /// Configuration of the sharded multi-matrix service.
 #[derive(Debug, Clone)]
@@ -69,6 +140,15 @@ pub struct ShardedServiceConfig {
     /// workers, so shards contend on cores either way and sharing keeps
     /// the thread count bounded.
     pub backend_per_shard: bool,
+    /// Per-lane queue-depth bound of each shard (two lanes per shard:
+    /// latency and bulk). `0` means unbounded — the pre-admission
+    /// behavior. With a cap set, no lane's depth ever exceeds it; the
+    /// [`AdmissionPolicy`] decides what a full lane does to the
+    /// submitter.
+    pub queue_cap: usize,
+    /// Full-lane behavior (see [`AdmissionPolicy`]); irrelevant while
+    /// `queue_cap == 0`.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for ShardedServiceConfig {
@@ -80,6 +160,8 @@ impl Default for ShardedServiceConfig {
             batch_size: 8,
             backend: BackendConfig::default(),
             backend_per_shard: false,
+            queue_cap: 0,
+            admission: AdmissionPolicy::Block,
         }
     }
 }
@@ -109,7 +191,7 @@ impl Default for ServiceConfig {
 }
 
 /// One solve request of the sharded service: which matrix, which RHS,
-/// and where to send the reply.
+/// which scheduling class, and where to send the reply.
 pub struct SolveRequest {
     /// Registration key of the matrix to solve against.
     pub matrix_key: String,
@@ -117,6 +199,55 @@ pub struct SolveRequest {
     pub b: Vec<f32>,
     /// Response channel.
     pub reply: mpsc::Sender<Result<SolveResponse>>,
+    /// Scheduling class; `None` uses the key's default (itself
+    /// [`RequestClass::Bulk`] unless the key was registered or swapped
+    /// with an explicit class).
+    pub class: Option<RequestClass>,
+}
+
+/// Receiver side of one admitted request: wraps the reply channel with
+/// deadline-aware waits. Obtained from [`ShardedSolveService::submit`],
+/// [`ShardedSolveService::submit_class`] or an [`Admission::Admitted`].
+pub struct SolveHandle {
+    rx: mpsc::Receiver<Result<SolveResponse>>,
+}
+
+impl SolveHandle {
+    /// Block until the reply arrives. A dropped reply channel (the
+    /// service was torn down around the request — the contract makes
+    /// this unreachable, but the API refuses to hang on it) maps to an
+    /// error.
+    pub fn wait(self) -> Result<SolveResponse> {
+        self.rx
+            .recv()
+            .context("reply channel dropped without a reply")?
+    }
+
+    /// Wait for the reply with a deadline. `None` means the deadline
+    /// passed: the request is **still in flight** (its reply, and its
+    /// in-flight accounting toward [`ShardedSolveService::evict`], are
+    /// unaffected) and the handle can be waited again — a timeout
+    /// observes slowness, it does not cancel work.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<SolveResponse>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => Some(reply),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(anyhow!("reply channel dropped without a reply")))
+            }
+        }
+    }
+}
+
+/// Outcome of a non-blocking [`ShardedSolveService::try_route`].
+pub enum Admission {
+    /// The request holds a queue slot (or was answered immediately, e.g.
+    /// an unknown key): exactly one reply will arrive on the handle.
+    Admitted(SolveHandle),
+    /// The admission policy rejected the request at a full queue lane;
+    /// the string names the lane, its cap and the policy. Nothing was
+    /// enqueued.
+    Shed(String),
 }
 
 /// One solve response.
@@ -162,11 +293,174 @@ struct ShardJob {
     /// In-flight mark owning the resolved entry, dropped after the reply
     /// is delivered.
     guard: InflightGuard,
+    /// Effective class (request override or key default), fixed at
+    /// admission.
+    class: RequestClass,
+}
+
+/// Internal admission outcome (`admit` already delivered any error
+/// reply; this only tells the public wrappers what to report).
+enum Admitted {
+    /// The request holds a queue slot.
+    Enqueued,
+    /// The request was answered immediately (unknown key).
+    Answered,
+    /// The request was shed; the reply channel got the reason too.
+    Shed(String),
+}
+
+/// Outcome of one [`ShardQueue::push`].
+enum Enqueue {
+    /// The job holds a queue slot; `depth` is its lane's depth right
+    /// after the enqueue (feeds the peak-depth counter).
+    Admitted { depth: usize },
+    /// Rejected at a full lane under `Shed`/`ByClass`; the job comes
+    /// back so the caller can send the error reply on its channel.
+    Shed { job: Box<ShardJob>, reason: String },
+    /// The queue is closed (service stopping); the job comes back so the
+    /// caller can uphold the reply contract.
+    Closed { job: Box<ShardJob> },
+}
+
+/// One shard's bounded two-lane queue. The latency lane is drained
+/// strictly before the bulk lane; each lane's depth is bounded by `cap`
+/// (0 = unbounded) **under the mutex**, so the bound is exact — there is
+/// no window where a lane overshoots. `Block`-policy submitters park on
+/// `space`; workers park on `ready`.
+struct ShardQueue {
+    cap: usize,
+    policy: AdmissionPolicy,
+    state: Mutex<LaneState>,
+    /// Signaled on every enqueue and on close (workers wait here).
+    ready: Condvar,
+    /// Signaled on every dequeue and on close (blocked submitters wait
+    /// here).
+    space: Condvar,
+}
+
+#[derive(Default)]
+struct LaneState {
+    latency: VecDeque<ShardJob>,
+    bulk: VecDeque<ShardJob>,
+    closed: bool,
+}
+
+impl ShardQueue {
+    fn new(cap: usize, policy: AdmissionPolicy) -> Self {
+        Self {
+            cap,
+            policy,
+            state: Mutex::new(LaneState::default()),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Admit `job` into its class's lane, applying the admission policy
+    /// at a full lane. Never drops the job: a rejected or raced-shutdown
+    /// job is handed back for an error reply.
+    fn push(&self, job: ShardJob) -> Enqueue {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Enqueue::Closed { job: Box::new(job) };
+            }
+            let depth = match job.class {
+                RequestClass::Latency => st.latency.len(),
+                RequestClass::Bulk => st.bulk.len(),
+            };
+            if self.cap == 0 || depth < self.cap {
+                break;
+            }
+            let blocks = match self.policy {
+                AdmissionPolicy::Block => true,
+                AdmissionPolicy::Shed => false,
+                AdmissionPolicy::ByClass => job.class == RequestClass::Latency,
+            };
+            if !blocks {
+                return Enqueue::Shed {
+                    reason: format!(
+                        "{} lane is at its queue cap ({depth} of {} slots, admission policy {})",
+                        job.class, self.cap, self.policy
+                    ),
+                    job: Box::new(job),
+                };
+            }
+            st = self.space.wait(st).unwrap();
+        }
+        let lane = match job.class {
+            RequestClass::Latency => &mut st.latency,
+            RequestClass::Bulk => &mut st.bulk,
+        };
+        lane.push_back(job);
+        let depth = lane.len();
+        self.ready.notify_one();
+        Enqueue::Admitted { depth }
+    }
+
+    /// Dequeue the next drain group: latency-lane jobs strictly first.
+    /// Returns `None` only when the queue is closed **and** both lanes
+    /// are empty (workers drain before exiting).
+    ///
+    /// The group is extended past the first job only while batching is
+    /// actually exploitable: the backend must batch (`multi_rhs`) and the
+    /// next job must target the same registry entry (same matrix, same
+    /// swap generation — and, living in the same lane, the same class).
+    /// Anything else stays queued for a sibling worker, so a burst of
+    /// unbatchable jobs spreads across the worker pool instead of
+    /// serializing behind one greedy drain.
+    fn pop(&self, batch: usize, multi_rhs: bool) -> Option<Vec<ShardJob>> {
+        let mut st = self.state.lock().unwrap();
+        let (first, from_latency) = loop {
+            let from_latency = !st.latency.is_empty();
+            let job = if from_latency {
+                st.latency.pop_front()
+            } else {
+                st.bulk.pop_front()
+            };
+            match job {
+                Some(j) => break (j, from_latency),
+                None if st.closed => return None,
+                None => st = self.ready.wait(st).unwrap(),
+            }
+        };
+        let mut jobs = vec![first];
+        if multi_rhs {
+            let lane = if from_latency {
+                &mut st.latency
+            } else {
+                &mut st.bulk
+            };
+            while jobs.len() < batch.max(1) {
+                let same_entry = lane
+                    .front()
+                    .is_some_and(|j| Arc::ptr_eq(j.guard.entry(), jobs[0].guard.entry()));
+                if !same_entry {
+                    break;
+                }
+                jobs.push(lane.pop_front().expect("front exists"));
+            }
+        }
+        drop(st);
+        // Every dequeue frees at least one slot; wake all blocked
+        // submitters (they re-check their own lane's depth).
+        self.space.notify_all();
+        Some(jobs)
+    }
+
+    /// Close the queue: no new jobs are admitted (pushers get
+    /// `Enqueue::Closed`, parked pushers wake into it), while already
+    /// queued jobs remain drainable by the workers.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
 }
 
 /// One shard: its queue, its workers, its counters, its backend handle.
 struct Shard {
-    tx: Option<mpsc::Sender<ShardJob>>,
+    queue: Arc<ShardQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
     counters: Arc<ShardCounters>,
     backend: Arc<dyn SolverBackend>,
@@ -218,19 +512,20 @@ impl ShardedSolveService {
         let shards = backends
             .into_iter()
             .map(|backend| {
-                let (tx, rx) = mpsc::channel::<ShardJob>();
-                let rx = Arc::new(Mutex::new(rx));
+                let queue = Arc::new(ShardQueue::new(cfg.queue_cap, cfg.admission));
                 let counters = Arc::new(ShardCounters::default());
                 let workers = (0..cfg.workers_per_shard.max(1))
                     .map(|_| {
-                        let rx = Arc::clone(&rx);
+                        let queue = Arc::clone(&queue);
                         let backend = Arc::clone(&backend);
                         let counters = Arc::clone(&counters);
-                        std::thread::spawn(move || shard_worker(&rx, &*backend, &counters, batch))
+                        std::thread::spawn(move || {
+                            shard_worker(&queue, &*backend, &counters, batch)
+                        })
                     })
                     .collect();
                 Shard {
-                    tx: Some(tx),
+                    queue,
                     workers,
                     counters,
                     backend,
@@ -248,9 +543,24 @@ impl ShardedSolveService {
     /// [`MatrixRegistry::register`]), then warm the owning shard's
     /// backend ([`SolverBackend::prepare`] — for the native backend this
     /// builds the cached MGD plan and spawns the persistent pool). After
-    /// this returns, requests for `key` pay zero setup.
+    /// this returns, requests for `key` pay zero setup. The key's
+    /// requests default to the `Bulk` class; see
+    /// [`ShardedSolveService::register_with_class`].
     pub fn register(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
-        let entry = self.registry.register(key, m)?;
+        self.register_with_class(key, m, RequestClass::Bulk)
+    }
+
+    /// [`ShardedSolveService::register`] with a per-key default
+    /// [`RequestClass`]: requests for `key` that carry no class of their
+    /// own ride the given lane (latency-critical keys jump bulk
+    /// backlogs and may lease the pool's reserved workers).
+    pub fn register_with_class(
+        &self,
+        key: &str,
+        m: &CsrMatrix,
+        class: RequestClass,
+    ) -> Result<Arc<RegisteredMatrix>> {
+        let entry = self.registry.register_with_class(key, m, class)?;
         if let Err(e) = self.shards[entry.shard()].backend.prepare(entry.solver()) {
             // Roll the registration back: a key must not stay routed to
             // a backend that failed to prepare (retries would otherwise
@@ -285,7 +595,19 @@ impl ShardedSolveService {
     /// registered (or was evicted mid-swap); a failed prepare leaves the
     /// old entry serving.
     pub fn swap(&self, key: &str, m: &CsrMatrix) -> Result<Arc<RegisteredMatrix>> {
-        self.registry.swap(key, m, |entry| {
+        self.swap_with_class(key, m, None)
+    }
+
+    /// [`ShardedSolveService::swap`] that also sets the key's default
+    /// [`RequestClass`]: `Some(class)` re-classes the key as part of the
+    /// same atomic publish, `None` keeps the replaced entry's class.
+    pub fn swap_with_class(
+        &self,
+        key: &str,
+        m: &CsrMatrix,
+        class: Option<RequestClass>,
+    ) -> Result<Arc<RegisteredMatrix>> {
+        self.registry.swap_with_class(key, m, class, |entry| {
             self.shards[entry.shard()]
                 .backend
                 .prepare(entry.solver())
@@ -293,11 +615,53 @@ impl ShardedSolveService {
         })
     }
 
-    /// Route one request to the shard owning its matrix. An unknown
-    /// `matrix_key` is answered with an immediate error **reply** on the
-    /// request's channel (never a hang, never a dropped request); the
-    /// call itself errors only if the service is shutting down.
+    /// Route one request to the shard owning its matrix, applying the
+    /// admission policy. The reply contract: **every** request either
+    /// takes a queue slot or receives an immediate error *reply* on its
+    /// channel — an unknown `matrix_key`, a shed request (the reply
+    /// names the full lane, its cap and the policy) and the shutdown
+    /// race all answer instead of dropping the channel. The call itself
+    /// errors only when the service is stopping (after the error reply
+    /// has been sent). Under `Block` (or `ByClass` for latency
+    /// requests) the call parks while the target lane is full;
+    /// [`ShardedSolveService::try_route`] is the never-parking form.
     pub fn route(&self, req: SolveRequest) -> Result<()> {
+        self.admit(req).map(|_| ())
+    }
+
+    /// Non-blocking submit with an admission verdict: builds the reply
+    /// channel, routes, and returns [`Admission::Admitted`] with the
+    /// [`SolveHandle`] (exactly one reply will arrive — possibly an
+    /// error reply, e.g. for an unknown key) or [`Admission::Shed`] with
+    /// the queue-cap reason. Errors only when the service is stopping.
+    ///
+    /// "Non-blocking" is admission-wide under `Shed`; under
+    /// `Block`/`ByClass` a full *blocking-class* lane still parks the
+    /// caller, because that is what those policies promise the request.
+    pub fn try_route(
+        &self,
+        key: &str,
+        b: Vec<f32>,
+        class: Option<RequestClass>,
+    ) -> Result<Admission> {
+        let (reply, rx) = mpsc::channel();
+        let outcome = self.admit(SolveRequest {
+            matrix_key: key.to_string(),
+            b,
+            reply,
+            class,
+        })?;
+        Ok(match outcome {
+            Admitted::Enqueued | Admitted::Answered => Admission::Admitted(SolveHandle { rx }),
+            Admitted::Shed(reason) => Admission::Shed(reason),
+        })
+    }
+
+    /// The one admission path behind [`ShardedSolveService::route`] and
+    /// [`ShardedSolveService::try_route`]. Sends the error reply itself
+    /// in every non-enqueued case, so the reply contract holds no matter
+    /// which caller drops which half of the plumbing.
+    fn admit(&self, req: SolveRequest) -> Result<Admitted> {
         // `checkout` (not `get`): the in-flight mark is taken under the
         // registry's read lock, so an evict cannot slip between the
         // lookup and the enqueue and miss this request in its drain.
@@ -307,41 +671,80 @@ impl ShardedSolveService {
                 req.matrix_key,
                 self.registry.keys().join(", ")
             )));
-            return Ok(());
+            return Ok(Admitted::Answered);
         };
-        // Guard the mark before anything fallible: every early return
-        // below must check the request back in, or an evict of this key
-        // would wait forever on a request that never ran.
+        let class = req.class.unwrap_or(entry.default_class());
+        // Guard the mark before anything fallible: every exit below
+        // either enqueues the guard or drops it (checking the request
+        // back in), so an evict of this key can never wait forever on a
+        // request that never ran.
         let guard = InflightGuard(entry);
         let shard = &self.shards[guard.entry().shard()];
-        shard
-            .tx
-            .as_ref()
-            .context("service stopped")?
-            .send(ShardJob {
-                b: req.b,
-                reply: req.reply,
-                guard,
-            })
-            .ok()
-            .context("shard queue closed")?;
-        Ok(())
+        let matrix_key = req.matrix_key;
+        let job = ShardJob {
+            b: req.b,
+            reply: req.reply,
+            guard,
+            class,
+        };
+        match shard.queue.push(job) {
+            Enqueue::Admitted { depth } => {
+                shard.counters.note_admitted(class, depth as u64);
+                Ok(Admitted::Enqueued)
+            }
+            Enqueue::Shed { job, reason } => {
+                shard.counters.note_shed(class);
+                let _ = job
+                    .reply
+                    .send(Err(anyhow!("request for {matrix_key:?} shed: {reason}")));
+                Ok(Admitted::Shed(reason))
+                // `job` (and its in-flight guard) drops here: a shed
+                // request leaves the in-flight set immediately.
+            }
+            Enqueue::Closed { job } => {
+                // The shutdown race: the queue closed between checkout
+                // and enqueue. The old front end dropped `reply` here,
+                // leaving waiters a bare RecvError; the contract demands
+                // a descriptive reply first.
+                let _ = job.reply.send(Err(anyhow!(
+                    "service stopped: shard {} accepts no new requests \
+                     (request for {matrix_key:?} was not enqueued)",
+                    job.guard.entry().shard()
+                )));
+                Err(anyhow!("service stopped"))
+            }
+        }
     }
 
-    /// Submit a request for `key`; returns the receiver for the response.
-    pub fn submit(&self, key: &str, b: Vec<f32>) -> Result<mpsc::Receiver<Result<SolveResponse>>> {
+    /// Submit a request for `key` under its default class; returns the
+    /// handle for the response.
+    pub fn submit(&self, key: &str, b: Vec<f32>) -> Result<SolveHandle> {
+        self.submit_class(key, b, None)
+    }
+
+    /// Submit a request for `key` with an explicit class override
+    /// (`None` = the key's default). Shed requests surface as an `Err`
+    /// on the returned handle's wait, exactly like other error replies
+    /// (`admit` answers the channel before handing the shed back).
+    pub fn submit_class(
+        &self,
+        key: &str,
+        b: Vec<f32>,
+        class: Option<RequestClass>,
+    ) -> Result<SolveHandle> {
         let (reply, rx) = mpsc::channel();
-        self.route(SolveRequest {
+        self.admit(SolveRequest {
             matrix_key: key.to_string(),
             b,
             reply,
+            class,
         })?;
-        Ok(rx)
+        Ok(SolveHandle { rx })
     }
 
     /// Solve synchronously against the matrix registered under `key`.
     pub fn solve(&self, key: &str, b: Vec<f32>) -> Result<SolveResponse> {
-        self.submit(key, b)?.recv().context("worker dropped")?
+        self.submit(key, b)?.wait()
     }
 
     /// The matrix registry (lookups, keys, per-matrix served counts).
@@ -398,6 +801,17 @@ impl ShardedSolveService {
         self.backend_name
     }
 
+    /// Stop accepting new requests on every shard: from this point each
+    /// [`ShardedSolveService::route`]/submit answers with a "service
+    /// stopped" error reply (and errors), while requests already queued
+    /// keep draining and replying normally. The first step of a graceful
+    /// shutdown; [`ShardedSolveService::shutdown`] calls it implicitly.
+    pub fn close_intake(&self) {
+        for shard in &self.shards {
+            shard.queue.close();
+        }
+    }
+
     /// Stop all shard workers (each drains its queue first). Dropping the
     /// service does the same; this form merely makes the join explicit.
     pub fn shutdown(mut self) {
@@ -405,9 +819,7 @@ impl ShardedSolveService {
     }
 
     fn stop(&mut self) {
-        for shard in &mut self.shards {
-            shard.tx.take();
-        }
+        self.close_intake();
         for shard in &mut self.shards {
             for w in shard.workers.drain(..) {
                 let _ = w.join();
@@ -422,72 +834,45 @@ impl Drop for ShardedSolveService {
     }
 }
 
-/// One shard worker: drain up to `batch` jobs per round, group
-/// same-matrix jobs, and dispatch each group through the backend
-/// (multi-RHS when the group and backend allow it).
+/// One shard worker: drain the next group and dispatch it through the
+/// backend. The queue hands back *homogeneous* groups — same registry
+/// entry, same class, latency lane first — and extends a group past one
+/// job only when the backend can actually batch it ([`ShardQueue::pop`]).
+/// The former greedy drain (grab `batch` jobs regardless) serialized
+/// unbatchable bursts behind one worker while its siblings idled; now an
+/// unbatchable burst spreads one job per worker.
 fn shard_worker(
-    rx: &Mutex<mpsc::Receiver<ShardJob>>,
+    queue: &ShardQueue,
     backend: &dyn SolverBackend,
     counters: &ShardCounters,
     batch: usize,
 ) {
-    loop {
-        let mut jobs = Vec::with_capacity(batch);
-        {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(j) => jobs.push(j),
-                Err(_) => return, // channel closed: clean shutdown
-            }
-            while jobs.len() < batch {
-                match guard.try_recv() {
-                    Ok(j) => jobs.push(j),
-                    Err(_) => break,
-                }
-            }
-        }
-        for (entry, group) in group_by_matrix(jobs) {
-            solve_group(backend, &entry, group, counters);
-        }
+    let multi_rhs = backend.supports_multi_rhs();
+    while let Some(jobs) = queue.pop(batch, multi_rhs) {
+        let entry = Arc::clone(jobs[0].guard.entry());
+        let class = jobs[0].class;
+        let group = jobs
+            .into_iter()
+            .map(|job| {
+                debug_assert!(Arc::ptr_eq(job.guard.entry(), &entry));
+                debug_assert_eq!(job.class, class);
+                (job.b, job.reply, job.guard)
+            })
+            .collect();
+        solve_group(backend, &entry, group, class, counters);
     }
 }
 
 type Reply = mpsc::Sender<Result<SolveResponse>>;
 
-/// One same-matrix slice of a drained batch: the registry entry and the
-/// `(rhs, reply, in-flight mark)` triples that target it.
-type MatrixGroup = (
-    Arc<RegisteredMatrix>,
-    Vec<(Vec<f32>, Reply, InflightGuard)>,
-);
-
-/// Partition a drained batch into per-matrix groups (order-preserving;
-/// identity is the registry entry, compared by `Arc` pointer — so jobs
-/// resolved against a pre-swap entry never batch with post-swap ones).
-fn group_by_matrix(jobs: Vec<ShardJob>) -> Vec<MatrixGroup> {
-    let mut groups: Vec<MatrixGroup> = Vec::new();
-    for job in jobs {
-        match groups
-            .iter_mut()
-            .find(|(e, _)| Arc::ptr_eq(e, job.guard.entry()))
-        {
-            Some((_, g)) => g.push((job.b, job.reply, job.guard)),
-            None => {
-                let entry = Arc::clone(job.guard.entry());
-                groups.push((entry, vec![(job.b, job.reply, job.guard)]));
-            }
-        }
-    }
-    groups
-}
-
-/// Solve one same-matrix group and reply to every requester. Errors are
-/// propagated to each caller in the group — a worker must never drop
-/// requests on the floor.
+/// Solve one same-matrix, same-class group and reply to every requester.
+/// Errors are propagated to each caller in the group — a worker must
+/// never drop requests on the floor.
 fn solve_group(
     backend: &dyn SolverBackend,
     entry: &RegisteredMatrix,
     group: Vec<(Vec<f32>, Reply, InflightGuard)>,
+    class: RequestClass,
     counters: &ShardCounters,
 ) {
     let count = group.len();
@@ -506,7 +891,7 @@ fn solve_group(
             replies.push(reply);
             guards.push(guard);
         }
-        match backend.solve_multi(entry.solver(), &bs) {
+        match backend.solve_multi_class(entry.solver(), &bs, class) {
             Ok(xs) => {
                 let elapsed = t0.elapsed();
                 let per = elapsed.as_secs_f64() / count as f64;
@@ -535,11 +920,13 @@ fn solve_group(
         // caller holding its response never reads stale stats.
         for (b, reply, guard) in group {
             let t1 = Instant::now();
-            let out = backend.solve(entry.solver(), &b).map(|x| SolveResponse {
-                x,
-                host_seconds: t1.elapsed().as_secs_f64(),
-                metrics: entry.metrics().clone(),
-            });
+            let out = backend
+                .solve_class(entry.solver(), &b, class)
+                .map(|x| SolveResponse {
+                    x,
+                    host_seconds: t1.elapsed().as_secs_f64(),
+                    metrics: entry.metrics().clone(),
+                });
             match &out {
                 Ok(_) => {
                     entry.note_served(1);
@@ -592,7 +979,7 @@ impl SolveService {
                 workers_per_shard: cfg.workers,
                 batch_size: cfg.batch_size,
                 backend: cfg.backend,
-                backend_per_shard: false,
+                ..ShardedServiceConfig::default()
             },
         );
         let entry = inner.register(SINGLE_KEY, m)?;
@@ -605,8 +992,8 @@ impl SolveService {
         })
     }
 
-    /// Submit a request; returns the receiver for the response.
-    pub fn submit(&self, b: Vec<f32>) -> Result<mpsc::Receiver<Result<SolveResponse>>> {
+    /// Submit a request; returns the handle for the response.
+    pub fn submit(&self, b: Vec<f32>) -> Result<SolveHandle> {
         self.inner.submit(SINGLE_KEY, b)
     }
 
@@ -666,8 +1053,7 @@ mod tests {
             shards,
             workers_per_shard: 2,
             batch_size: 4,
-            backend: BackendConfig::default(),
-            backend_per_shard: false,
+            ..ShardedServiceConfig::default()
         }
     }
 
@@ -683,7 +1069,7 @@ mod tests {
             bs.push(b);
         }
         for (rx, b) in rxs.into_iter().zip(bs) {
-            let resp = rx.recv().unwrap().unwrap();
+            let resp = rx.wait().unwrap();
             assert_close_to_reference(&m, &b, &resp.x, 1e-3);
             assert!(resp.metrics.gops > 0.0);
             // >= 0.0, not > 0.0: tiny solves can land under the host
@@ -722,7 +1108,7 @@ mod tests {
             bs.push(b);
         }
         for (rx, b) in rxs.into_iter().zip(bs) {
-            let resp = rx.recv().unwrap().unwrap();
+            let resp = rx.wait().unwrap();
             // The MGD scheduler's contract is bitwise-serial numerics.
             let want = crate::matrix::triangular::solve_serial(&m, &b);
             for i in 0..m.n {
@@ -804,7 +1190,7 @@ mod tests {
             expect.push((m, b));
         }
         for (rx, (m, b)) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv().unwrap().unwrap();
+            let resp = rx.wait().unwrap();
             assert_close_to_reference(m, &b, &resp.x, 1e-3);
         }
         // Both shards served, and the aggregate adds up.
@@ -911,6 +1297,252 @@ mod tests {
         assert_eq!(new.served(), 2);
         // Swapping an unknown key errors without disturbing the rest.
         assert!(svc.swap("ghost", &ma).is_err());
+        svc.shutdown();
+    }
+
+    use crate::matrix::triangular::solve_serial;
+    use crate::runtime::LevelSolver;
+    use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+
+    /// Scalar-only backend whose **first** solve blocks until released,
+    /// recording the order in which solves run (identified by `b[0]`).
+    /// The deterministic way to hold a shard worker busy while the test
+    /// shapes the queue behind it.
+    struct GatedOrderBackend {
+        started: mpsc::Sender<()>,
+        release: Mutex<mpsc::Receiver<()>>,
+        gated: AtomicBool,
+        order: Mutex<Vec<i32>>,
+    }
+
+    impl GatedOrderBackend {
+        fn new() -> (Arc<Self>, mpsc::Receiver<()>, mpsc::Sender<()>) {
+            let (started_tx, started_rx) = mpsc::channel();
+            let (release_tx, release_rx) = mpsc::channel();
+            (
+                Arc::new(Self {
+                    started: started_tx,
+                    release: Mutex::new(release_rx),
+                    gated: AtomicBool::new(true),
+                    order: Mutex::new(Vec::new()),
+                }),
+                started_rx,
+                release_tx,
+            )
+        }
+
+        fn order(&self) -> Vec<i32> {
+            self.order.lock().unwrap().clone()
+        }
+    }
+
+    impl SolverBackend for GatedOrderBackend {
+        fn name(&self) -> &'static str {
+            "gated-order"
+        }
+
+        fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
+            if self.gated.swap(false, AtomicOrdering::SeqCst) {
+                let _ = self.started.send(());
+                let _ = self
+                    .release
+                    .lock()
+                    .unwrap()
+                    .recv_timeout(std::time::Duration::from_secs(30));
+            }
+            self.order.lock().unwrap().push(b[0] as i32);
+            Ok(solve_serial(plan.matrix(), b))
+        }
+    }
+
+    /// Start a 1-shard, 1-worker service over a gated backend with the
+    /// first (marker 0) request already inside the backend, so the test
+    /// can shape the queue deterministically behind it.
+    fn gated_service(
+        queue_cap: usize,
+        admission: AdmissionPolicy,
+    ) -> (
+        ShardedSolveService,
+        Arc<GatedOrderBackend>,
+        mpsc::Sender<()>,
+        crate::matrix::CsrMatrix,
+        SolveHandle,
+    ) {
+        let (backend, started, release) = GatedOrderBackend::new();
+        let svc = ShardedSolveService::start_with_backend(
+            Arc::clone(&backend) as Arc<dyn SolverBackend>,
+            ShardedServiceConfig {
+                workers_per_shard: 1,
+                queue_cap,
+                admission,
+                ..small_sharded_cfg(1)
+            },
+        );
+        let m = gen::chain(40, GenSeed(140));
+        svc.register("m", &m).unwrap();
+        let mut b0 = vec![1.0f32; m.n];
+        b0[0] = 0.0;
+        let gate_handle = svc.submit("m", b0).unwrap();
+        started
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("gate request never reached the backend");
+        (svc, backend, release, m, gate_handle)
+    }
+
+    fn marker_rhs(n: usize, marker: f32) -> Vec<f32> {
+        let mut b = vec![1.0f32; n];
+        b[0] = marker;
+        b
+    }
+
+    #[test]
+    fn latency_lane_is_drained_before_the_bulk_backlog() {
+        let (svc, backend, release, m, gate) = gated_service(0, AdmissionPolicy::Block);
+        // Queue two bulk requests, then one latency request, while the
+        // single worker is held inside the gate request.
+        let h1 = svc.submit("m", marker_rhs(m.n, 1.0)).unwrap();
+        let h2 = svc.submit("m", marker_rhs(m.n, 2.0)).unwrap();
+        let h9 = svc
+            .submit_class("m", marker_rhs(m.n, 9.0), Some(RequestClass::Latency))
+            .unwrap();
+        release.send(()).unwrap();
+        for h in [gate, h1, h2, h9] {
+            h.wait().unwrap();
+        }
+        // The latency request jumped the bulk backlog it arrived behind.
+        assert_eq!(backend.order(), vec![0, 9, 1, 2]);
+        let stats = svc.stats();
+        assert_eq!(stats.admitted_latency, 1);
+        assert_eq!(stats.admitted_bulk, 3);
+        assert_eq!(stats.shed_latency + stats.shed_bulk, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shed_policy_bounds_the_queue_and_names_the_cap() {
+        let (svc, _backend, release, m, gate) = gated_service(1, AdmissionPolicy::Shed);
+        // One queued request fills the single-slot bulk lane...
+        let h1 = svc.submit("m", marker_rhs(m.n, 1.0)).unwrap();
+        // ...so the next is shed, with the cap in the verdict...
+        match svc.try_route("m", marker_rhs(m.n, 2.0), None).unwrap() {
+            Admission::Shed(reason) => {
+                assert!(reason.contains("queue cap"), "{reason}");
+                assert!(reason.contains("bulk"), "{reason}");
+            }
+            Admission::Admitted(_) => panic!("request must be shed at the cap"),
+        }
+        // ...and a submit over the same full lane yields the error as a
+        // reply on the handle, never a dropped request.
+        let err = svc.submit("m", marker_rhs(m.n, 3.0)).unwrap().wait().unwrap_err();
+        assert!(format!("{err:#}").contains("shed"), "{err:#}");
+        release.send(()).unwrap();
+        gate.wait().unwrap();
+        h1.wait().unwrap();
+        let stats = svc.stats();
+        assert_eq!(stats.shed_bulk, 2, "{stats:?}");
+        assert_eq!(stats.admitted_bulk, 2, "{stats:?}");
+        assert_eq!(stats.peak_queue_depth, 1, "cap bounds the lane: {stats:?}");
+        assert_eq!(stats.served, 2, "{stats:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn by_class_sheds_bulk_but_admits_latency_at_the_cap() {
+        let (svc, backend, release, m, gate) = gated_service(1, AdmissionPolicy::ByClass);
+        let h1 = svc.submit("m", marker_rhs(m.n, 1.0)).unwrap(); // fills bulk lane
+        match svc.try_route("m", marker_rhs(m.n, 2.0), None).unwrap() {
+            Admission::Shed(reason) => assert!(reason.contains("by-class"), "{reason}"),
+            Admission::Admitted(_) => panic!("bulk must be shed at the cap under by-class"),
+        }
+        // The latency lane is empty, so latency traffic is untouched by
+        // the bulk lane being full.
+        let h9 = match svc
+            .try_route("m", marker_rhs(m.n, 9.0), Some(RequestClass::Latency))
+            .unwrap()
+        {
+            Admission::Admitted(h) => h,
+            Admission::Shed(r) => panic!("latency shed while its lane was empty: {r}"),
+        };
+        release.send(()).unwrap();
+        for h in [gate, h9, h1] {
+            h.wait().unwrap();
+        }
+        assert_eq!(backend.order(), vec![0, 9, 1]);
+        let stats = svc.stats();
+        assert_eq!(stats.shed_bulk, 1);
+        assert_eq!(stats.shed_latency, 0);
+        assert_eq!(stats.admitted_latency, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn block_policy_parks_the_submitter_until_space_frees() {
+        let (svc, _backend, release, m, gate) = gated_service(1, AdmissionPolicy::Block);
+        let svc = Arc::new(svc);
+        let h1 = svc.submit("m", marker_rhs(m.n, 1.0)).unwrap(); // lane full
+        let (parked_tx, parked_rx) = mpsc::channel();
+        let submitter = {
+            let svc = Arc::clone(&svc);
+            let b = marker_rhs(m.n, 2.0);
+            std::thread::spawn(move || {
+                let h = svc.submit("m", b).unwrap(); // parks at the cap
+                parked_tx.send(()).unwrap();
+                h.wait().unwrap()
+            })
+        };
+        // The submitter stays parked while the lane is full...
+        assert!(
+            parked_rx
+                .recv_timeout(std::time::Duration::from_millis(200))
+                .is_err(),
+            "blocked submitter returned with the lane still full"
+        );
+        // ...and admission completes once the worker frees a slot.
+        release.send(()).unwrap();
+        parked_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("blocked submitter never admitted after space freed");
+        gate.wait().unwrap();
+        h1.wait().unwrap();
+        submitter.join().unwrap();
+        let stats = svc.stats();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.shed_bulk + stats.shed_latency, 0, "block never sheds");
+        assert!(stats.peak_queue_depth <= 1, "{stats:?}");
+        Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+    }
+
+    #[test]
+    fn close_intake_answers_new_requests_instead_of_dropping_them() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(1)).unwrap();
+        let m = gen::chain(30, GenSeed(141));
+        svc.register("m", &m).unwrap();
+        svc.close_intake();
+        // The route call errors *and* the reply channel carries a
+        // descriptive error — the shutdown race can no longer surface as
+        // a bare RecvError on the waiter's side.
+        let (reply, rx) = mpsc::channel();
+        let err = svc
+            .route(SolveRequest {
+                matrix_key: "m".to_string(),
+                b: vec![1.0; m.n],
+                reply,
+                class: None,
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("service stopped"), "{err:#}");
+        let replied = rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("reply contract broken: channel dropped without a reply")
+            .unwrap_err();
+        assert!(
+            format!("{replied:#}").contains("accepts no new requests"),
+            "{replied:#}"
+        );
+        // The refused request left the in-flight set, so evict drains
+        // instantly instead of waiting on a request that never ran.
+        let entry = svc.evict("m").unwrap();
+        assert_eq!(entry.inflight(), 0);
         svc.shutdown();
     }
 }

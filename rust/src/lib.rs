@@ -35,21 +35,30 @@
 //!   sessions **overlap**: each solve leases at most its plan's
 //!   `par_width` workers and leftover workers serve other sessions
 //!   concurrently, with the overlap counted in
-//!   `MgdPoolStats::{concurrent_sessions, peak_concurrency}`. An
-//!   optional PJRT loader/executor for the AOT-compiled JAX/Pallas level
-//!   kernels in `artifacts/` sits behind the `pjrt` cargo feature.
+//!   `MgdPoolStats::{concurrent_sessions, peak_concurrency}`. Leases are
+//!   **class-aware**: a configurable count of workers is reserved for
+//!   `RequestClass::Latency` sessions, so bulk floods can never lease
+//!   the pool dry. An optional PJRT loader/executor for the
+//!   AOT-compiled JAX/Pallas level kernels in `artifacts/` sits behind
+//!   the `pjrt` cargo feature.
 //! - [`coordinator`] — the L3 serving runtime: a sharded, multi-matrix
 //!   `ShardedSolveService` over a `MatrixRegistry`. Each matrix is
 //!   registered by key and compiled/simulated/planned exactly once;
-//!   requests (`SolveRequest { matrix_key, b, reply }`) route to the
-//!   shard owning their matrix, where workers batch same-matrix requests
-//!   through the backend's multi-RHS path. Matrices are dynamic:
+//!   requests (`SolveRequest { matrix_key, b, reply, class }`) route to
+//!   the shard owning their matrix, where workers batch same-matrix,
+//!   same-class requests through the backend's multi-RHS path. Matrices are dynamic:
 //!   `evict(key)` drains a key's in-flight requests and retires it, and
 //!   `swap(key, m)` hot-swaps a key's matrix atomically while requests
-//!   keep flowing. Per-shard counters aggregate into service-wide
-//!   `ServingStats` (including pool-session concurrency). Backend
-//!   construction failures fail startup, unknown keys get an immediate
-//!   error reply, and solver errors are replied to the requester.
+//!   keep flowing. Admission is **bounded and class-aware**: each shard
+//!   holds two queue lanes (latency drained before bulk) capped by
+//!   `queue_cap`, an `AdmissionPolicy` (`block|shed|by-class`) decides
+//!   what a full lane does, `try_route` reports the verdict without
+//!   parking, and `SolveHandle::wait_timeout` gives callers deadlines.
+//!   Per-shard counters aggregate into service-wide `ServingStats`
+//!   (pool-session concurrency, per-class admitted/shed counts, queue
+//!   depth high-water mark). Backend construction failures fail startup,
+//!   unknown keys and shed requests get an immediate error reply, and
+//!   solver errors are replied to the requester.
 //!   `SolveService` is the single-matrix facade over the same machinery.
 //! - [`bench_harness`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md §3), plus a native-vs-PJRT backend
@@ -58,8 +67,10 @@
 //!   a persistent-pool vs per-solve-spawn serving comparison
 //!   (`mgd bench serving`, emits `BENCH_serving.json`), and an
 //!   overlapped-vs-serialized pool-session comparison
-//!   (`mgd bench concurrency`, emits `BENCH_concurrency.json`). CI gates
-//!   the three headline ratios against `ci/bench_baselines/`.
+//!   (`mgd bench concurrency`, emits `BENCH_concurrency.json`), and a
+//!   latency-tail-under-bulk-flood admission comparison
+//!   (`mgd bench admission`, emits `BENCH_admission.json`). CI gates
+//!   the headline ratios against `ci/bench_baselines/`.
 //!
 //! ## Cargo features
 //!

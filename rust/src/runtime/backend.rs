@@ -20,6 +20,7 @@
 
 use super::level_exec::LevelSolver;
 use super::native::{NativeBackend, NativeConfig};
+use super::pool::RequestClass;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::str::FromStr;
@@ -68,6 +69,28 @@ pub trait SolverBackend: Send + Sync {
     /// Solve a batch of RHS; the default falls back to scalar solves.
     fn solve_multi(&self, plan: &LevelSolver, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         bs.iter().map(|b| self.solve(plan, b)).collect()
+    }
+
+    /// [`SolverBackend::solve`] with the request's scheduling class
+    /// attached. Backends with class-aware resources (the native
+    /// backend's reserved latency-lane pool workers) use the class to
+    /// pick the session lease; the default ignores it.
+    fn solve_class(&self, plan: &LevelSolver, b: &[f32], class: RequestClass) -> Result<Vec<f32>> {
+        let _ = class;
+        self.solve(plan, b)
+    }
+
+    /// [`SolverBackend::solve_multi`] with the batch's scheduling class
+    /// attached (the sharded service only batches same-class requests).
+    /// The default ignores the class.
+    fn solve_multi_class(
+        &self,
+        plan: &LevelSolver,
+        bs: &[Vec<f32>],
+        class: RequestClass,
+    ) -> Result<Vec<Vec<f32>>> {
+        let _ = class;
+        self.solve_multi(plan, bs)
     }
 }
 

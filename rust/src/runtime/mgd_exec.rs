@@ -65,7 +65,7 @@
 //! ```
 
 use super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
-use super::pool::MgdPool;
+use super::pool::{MgdPool, RequestClass};
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -141,11 +141,29 @@ pub fn execute<B: AsRef<[f32]> + Sync>(
 /// The worker count is additionally clamped to what the plan can keep
 /// busy (node count and DAG width), so serial plans never touch the pool
 /// at all.
+///
+/// The session runs as [`RequestClass::Bulk`] — it leases only the
+/// pool's unreserved workers. Latency-critical solves go through
+/// [`execute_on_class`].
 pub fn execute_on<B: AsRef<[f32]> + Sync>(
     plan: &MgdPlan,
     bs: &[B],
     pool: &MgdPool,
     threads: usize,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    execute_on_class(plan, bs, pool, threads, RequestClass::Bulk)
+}
+
+/// [`execute_on`] with an explicit session [`RequestClass`]: `Latency`
+/// sessions may additionally lease the pool's reserved latency-lane
+/// workers (see [`MgdPool::new_with_reserved`]), so a latency-critical
+/// solve arriving during a bulk flood still finds workers to claim.
+pub fn execute_on_class<B: AsRef<[f32]> + Sync>(
+    plan: &MgdPlan,
+    bs: &[B],
+    pool: &MgdPool,
+    threads: usize,
+    class: RequestClass,
 ) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
     let n = plan.n;
     let r = bs.len();
@@ -161,9 +179,10 @@ pub fn execute_on<B: AsRef<[f32]> + Sync>(
         .collect();
     let num_nodes = plan.nodes.len();
     // Never engage more workers than the plan can keep busy or the pool
-    // can supply: a chain (width 1) runs on the calling thread with zero
-    // pool traffic.
-    let nworkers = effective_workers(plan, threads).min(pool.workers() + 1);
+    // can lease to this session's class: a chain (width 1) runs on the
+    // calling thread with zero pool traffic, and a bulk session only
+    // counts the unreserved workers it may actually claim.
+    let nworkers = effective_workers(plan, threads).min(pool.claimable(class) + 1);
     if nworkers <= 1 {
         // Serial path: node ids are topological, no scheduling needed.
         let mut scratch = Vec::new();
@@ -203,8 +222,8 @@ pub fn execute_on<B: AsRef<[f32]> + Sync>(
     }
     // One pool session: the caller runs slot 0; parked workers claim
     // slots 1..nworkers. `run` lives on this stack — the session-close
-    // handshake inside `pool.run` keeps the borrow sound.
-    pool.run(nworkers - 1, &|slot| worker_loop(&run, slot))?;
+    // handshake inside `pool.run_with_class` keeps the borrow sound.
+    pool.run_with_class(nworkers - 1, class, &|slot| worker_loop(&run, slot))?;
     ensure!(
         !run.poisoned.load(Ordering::Relaxed),
         "mgd node job panicked"

@@ -53,7 +53,7 @@ pub use level_exec::{LevelPlan, LevelSolver};
 pub use mgd_exec::MgdExecStats;
 pub use mgd_plan::{MgdPlan, MgdPlanConfig};
 pub use native::{MgdStats, NativeBackend, NativeConfig, NativeStats, SchedulerKind};
-pub use pool::{MgdPool, MgdPoolStats};
+pub use pool::{MgdPool, MgdPoolStats, RequestClass};
 
 #[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;

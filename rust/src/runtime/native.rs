@@ -34,7 +34,7 @@ use super::backend::SolverBackend;
 use super::level_exec::{LevelPlan, LevelSolver};
 use super::mgd_exec;
 use super::mgd_plan::MgdPlanConfig;
-use super::pool::{MgdPool, MgdPoolStats};
+use super::pool::{MgdPool, MgdPoolStats, RequestClass};
 use crate::matrix::CsrMatrix;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::str::FromStr;
@@ -95,6 +95,13 @@ pub struct NativeConfig {
     pub edge_budget: usize,
     /// Scheduler choice (`auto` resolves per plan).
     pub scheduler: SchedulerKind,
+    /// Persistent-pool workers reserved for [`RequestClass::Latency`]
+    /// sessions (clamped to the pool size, i.e. `threads - 1`). Bulk
+    /// solves lease at most the unreserved remainder, so a bulk flood
+    /// can never lease the pool dry. `0` (the default) reserves nothing.
+    /// Only the mgd scheduler's pool has lease lanes; the level
+    /// scheduler ignores the class.
+    pub reserved_latency_workers: usize,
 }
 
 impl Default for NativeConfig {
@@ -104,6 +111,7 @@ impl Default for NativeConfig {
             chunk_rows: 128,
             edge_budget: 32,
             scheduler: SchedulerKind::Auto,
+            reserved_latency_workers: 0,
         }
     }
 }
@@ -242,6 +250,9 @@ pub struct NativeBackend {
     chunk_rows: usize,
     edge_budget: usize,
     scheduler: SchedulerKind,
+    /// Pool workers reserved for latency-class sessions (pre-clamped to
+    /// the pool size at construction).
+    reserved_latency_workers: usize,
     /// Level-scheduler worker pool, spawned lazily on the first level
     /// whose width actually needs it — a backend whose solves all resolve
     /// to `mgd` never parks a level pool.
@@ -271,6 +282,9 @@ impl NativeBackend {
             chunk_rows,
             edge_budget: cfg.edge_budget.max(1),
             scheduler: cfg.scheduler,
+            reserved_latency_workers: cfg
+                .reserved_latency_workers
+                .min(threads.saturating_sub(1)),
             pool: std::sync::OnceLock::new(),
             mgd_pool: std::sync::OnceLock::new(),
             parallel_levels: AtomicU64::new(0),
@@ -289,10 +303,15 @@ impl NativeBackend {
 
     /// The persistent mgd pool: `None` in single-thread configs, else
     /// spawned on first use (with `threads - 1` parked workers — the
-    /// solving thread itself is always worker 0) and reused for the
-    /// backend's lifetime.
+    /// solving thread itself is always worker 0, and the configured
+    /// latency reserve carved out of them) and reused for the backend's
+    /// lifetime.
     fn mgd_worker_pool(&self) -> Option<&MgdPool> {
-        (self.threads > 1).then(|| self.mgd_pool.get_or_init(|| MgdPool::new(self.threads - 1)))
+        (self.threads > 1).then(|| {
+            self.mgd_pool.get_or_init(|| {
+                MgdPool::new_with_reserved(self.threads - 1, self.reserved_latency_workers)
+            })
+        })
     }
 
     /// Introspection of the persistent mgd pool: worker/live-thread
@@ -353,14 +372,16 @@ impl NativeBackend {
 
     /// Barrier-free path: execute the plan's cached
     /// [`MgdPlan`](super::mgd_plan::MgdPlan) (built on first use, sized by
-    /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute_on`] on the
-    /// backend's persistent [`MgdPool`] — workers are parked between
-    /// solves, never respawned. Borrows the RHS views — no staging copy
-    /// on this path.
+    /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute_on_class`] on
+    /// the backend's persistent [`MgdPool`] — workers are parked between
+    /// solves, never respawned, and the session leases workers according
+    /// to `class` (latency sessions may claim the reserved lane). Borrows
+    /// the RHS views — no staging copy on this path.
     fn execute_mgd<B: AsRef<[f32]> + Sync>(
         &self,
         plan: &LevelSolver,
         bs: &[B],
+        class: RequestClass,
     ) -> Result<Vec<Vec<f32>>> {
         let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
         let mgd = plan.mgd_plan(cfg);
@@ -368,7 +389,7 @@ impl NativeBackend {
         // never lazily spawn — the pool; they run inline on this thread.
         let pool = (mgd.par_width > 1).then(|| self.mgd_worker_pool()).flatten();
         let (xs, stats) = match pool {
-            Some(pool) => mgd_exec::execute_on(&mgd, bs, pool, self.threads)?,
+            Some(pool) => mgd_exec::execute_on_class(&mgd, bs, pool, self.threads, class)?,
             None => mgd_exec::execute(&mgd, bs, 1)?,
         };
         self.mgd_solves.fetch_add(1, Ordering::Relaxed);
@@ -527,20 +548,35 @@ impl SolverBackend for NativeBackend {
     }
 
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
+        self.solve_class(plan, b, RequestClass::Bulk)
+    }
+
+    fn solve_multi(&self, plan: &LevelSolver, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.solve_multi_class(plan, bs, RequestClass::Bulk)
+    }
+
+    fn solve_class(&self, plan: &LevelSolver, b: &[f32], class: RequestClass) -> Result<Vec<f32>> {
         // Dispatch before staging: the barrier-free path borrows the RHS
         // (and validates it itself), skipping the copy the level path
-        // needs for its shared-ownership staging.
+        // needs for its shared-ownership staging. The class only matters
+        // on the mgd path — the level scheduler's pool has no lease
+        // lanes.
         let mut out = if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            self.execute_mgd(plan, &[b])?
+            self.execute_mgd(plan, &[b], class)?
         } else {
             self.execute(plan, vec![b.to_vec()])?
         };
         Ok(out.pop().expect("one RHS in, one solution out"))
     }
 
-    fn solve_multi(&self, plan: &LevelSolver, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    fn solve_multi_class(
+        &self,
+        plan: &LevelSolver,
+        bs: &[Vec<f32>],
+        class: RequestClass,
+    ) -> Result<Vec<Vec<f32>>> {
         if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            return self.execute_mgd(plan, bs);
+            return self.execute_mgd(plan, bs, class);
         }
         self.execute(plan, bs.to_vec())
     }
@@ -762,6 +798,36 @@ mod tests {
         let level = backend(2, 64);
         level.prepare(&wide).unwrap();
         assert_eq!(level.mgd_pool_stats(), MgdPoolStats::default());
+    }
+
+    #[test]
+    fn reserved_latency_workers_are_clamped_and_surfaced() {
+        use crate::matrix::triangular::solve_serial;
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Mgd,
+            // Deliberately over-asked: clamps to the pool size (3).
+            reserved_latency_workers: 16,
+            ..NativeConfig::default()
+        });
+        let m = gen::shallow(900, 0.4, GenSeed(47));
+        let plan = LevelSolver::new(&m);
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let want = solve_serial(&m, &b);
+        // With the whole pool reserved, a bulk solve runs caller-only but
+        // stays bitwise-correct...
+        let x = nb.solve(&plan, &b).unwrap();
+        for i in 0..m.n {
+            assert_eq!(x[i].to_bits(), want[i].to_bits(), "bulk row {i}");
+        }
+        // ...and a latency solve may lease every worker.
+        let x = nb.solve_class(&plan, &b, RequestClass::Latency).unwrap();
+        for i in 0..m.n {
+            assert_eq!(x[i].to_bits(), want[i].to_bits(), "latency row {i}");
+        }
+        let stats = nb.mgd_pool_stats();
+        assert_eq!(stats.workers, 3);
+        assert_eq!(stats.reserved, 3, "{stats:?}");
     }
 
     #[test]

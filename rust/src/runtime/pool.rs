@@ -38,6 +38,21 @@
 //! always participates as slot 0, so every session makes progress even
 //! when the pool is fully leased out.
 //!
+//! # Priority lease lanes
+//!
+//! Sessions carry a [`RequestClass`]. A pool built with
+//! [`MgdPool::new_with_reserved`] sets aside its first `reserved` workers
+//! as a **latency lane**: those workers only ever claim slots of
+//! [`RequestClass::Latency`] sessions, so a flood of
+//! [`RequestClass::Bulk`] sessions can lease at most
+//! `workers - reserved` threads and can never lease the pool dry — a
+//! latency-critical solve arriving mid-flood always finds its reserved
+//! workers parked and claimable. This is the pool-level analog of the
+//! paper's partial-sum caching: keep resources available for the
+//! latency-determining front instead of letting background work block it.
+//! [`MgdPool::run`] submits a `Bulk` session;
+//! [`MgdPool::run_with_class`] chooses.
+//!
 //! # Safety
 //!
 //! Each installed closure is stored as a lifetime-erased raw pointer so a
@@ -61,6 +76,31 @@ use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+/// Scheduling class of one request (and of the pool session that serves
+/// it). The class travels from the serving front end
+/// (`SolveRequest`/shard queue ordering) down to the [`MgdPool`] slot
+/// lease, where it decides whether a session may claim reserved workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RequestClass {
+    /// Latency-critical traffic: drained ahead of `Bulk` by the sharded
+    /// service's per-shard queues and allowed to lease the pool's
+    /// reserved workers.
+    Latency,
+    /// Throughput traffic (the default): bounded to the unreserved part
+    /// of the pool so it can never starve the latency lane.
+    #[default]
+    Bulk,
+}
+
+impl std::fmt::Display for RequestClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Latency => "latency",
+            Self::Bulk => "bulk",
+        })
+    }
+}
+
 /// Point-in-time introspection of one [`MgdPool`] (leak checks, serving
 /// metrics, bench reports).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -82,6 +122,10 @@ pub struct MgdPoolStats {
     /// — the overlap proof: `>= 2` means two solves really did share the
     /// pool instead of queueing.
     pub peak_concurrency: usize,
+    /// Workers reserved for [`RequestClass::Latency`] sessions (the first
+    /// `reserved` worker indices); `Bulk` sessions can lease at most
+    /// `workers - reserved` threads.
+    pub reserved: usize,
 }
 
 /// Lifetime-erased session closure (`&dyn Fn(usize)` of the caller's
@@ -99,6 +143,8 @@ unsafe impl Send for SessionFn {}
 /// One installed session (a slot-lease of up to `limit` workers).
 struct Job {
     f: SessionFn,
+    /// Only `Latency` sessions may be claimed by reserved workers.
+    class: RequestClass,
     /// Next participant slot a worker may claim (slot 0 is the caller's).
     next_slot: usize,
     /// Highest claimable slot; the session leases at most `limit` workers
@@ -139,6 +185,9 @@ pub struct MgdPool {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     live: Arc<AtomicUsize>,
+    /// Workers reserved for `Latency` sessions (worker indices
+    /// `0..reserved` skip `Bulk` jobs in their slab scan).
+    reserved: usize,
     sessions: AtomicU64,
     /// Sessions currently inside [`MgdPool::run`].
     concurrent: AtomicUsize,
@@ -149,8 +198,19 @@ pub struct MgdPool {
 impl MgdPool {
     /// Spawn a pool of exactly `workers` parked threads. `0` is valid and
     /// spawns nothing: every [`MgdPool::run`] then executes on the caller
-    /// alone (the serial path keeps working through the same API).
+    /// alone (the serial path keeps working through the same API). No
+    /// workers are reserved; see [`MgdPool::new_with_reserved`].
     pub fn new(workers: usize) -> Self {
+        Self::new_with_reserved(workers, 0)
+    }
+
+    /// Like [`MgdPool::new`], but the first `reserved` workers (clamped
+    /// to the pool size) only ever serve [`RequestClass::Latency`]
+    /// sessions — [`RequestClass::Bulk`] sessions lease at most
+    /// `workers - reserved` threads, so bulk floods cannot lease the
+    /// pool dry. `reserved == workers` is valid: bulk sessions then run
+    /// caller-only.
+    pub fn new_with_reserved(workers: usize, reserved: usize) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 sessions: Vec::new(),
@@ -159,6 +219,7 @@ impl MgdPool {
             work: Condvar::new(),
             done: Condvar::new(),
         });
+        let reserved = reserved.min(workers);
         let live = Arc::new(AtomicUsize::new(workers));
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -168,7 +229,7 @@ impl MgdPool {
                 std::thread::Builder::new()
                     .name(format!("mgd-pool-{w}"))
                     .spawn(move || {
-                        worker_loop(&shared, w);
+                        worker_loop(&shared, w, w < reserved);
                         live.fetch_sub(1, Ordering::SeqCst);
                     })
                     .expect("spawn mgd pool worker thread"),
@@ -178,6 +239,7 @@ impl MgdPool {
             shared,
             handles,
             live,
+            reserved,
             sessions: AtomicU64::new(0),
             concurrent: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
@@ -187,6 +249,21 @@ impl MgdPool {
     /// Worker threads this pool was built with.
     pub fn workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Workers reserved for the latency lane (see
+    /// [`MgdPool::new_with_reserved`]).
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    /// How many pool workers a session of `class` may lease: every worker
+    /// for `Latency`, the unreserved remainder for `Bulk`.
+    pub fn claimable(&self, class: RequestClass) -> usize {
+        match class {
+            RequestClass::Latency => self.handles.len(),
+            RequestClass::Bulk => self.handles.len() - self.reserved,
+        }
     }
 
     /// Worker threads currently alive (see [`MgdPoolStats::live`]).
@@ -202,6 +279,7 @@ impl MgdPool {
             sessions: self.sessions.load(Ordering::Relaxed),
             concurrent_sessions: self.concurrent.load(Ordering::SeqCst),
             peak_concurrency: self.peak.load(Ordering::SeqCst),
+            reserved: self.reserved,
         }
     }
 
@@ -218,14 +296,31 @@ impl MgdPool {
     /// not claim stay available to the others. A session never waits for
     /// another to finish — at worst it runs caller-only because every
     /// worker is leased elsewhere.
+    ///
+    /// This form submits a [`RequestClass::Bulk`] session — it may only
+    /// lease **unreserved** workers. Latency-critical callers use
+    /// [`MgdPool::run_with_class`].
     pub fn run<F: Fn(usize) + Sync>(&self, extra: usize, f: &F) -> Result<()> {
+        self.run_with_class(extra, RequestClass::Bulk, f)
+    }
+
+    /// [`MgdPool::run`] with an explicit session class: `Latency`
+    /// sessions may lease any worker (including the reserved lane),
+    /// `Bulk` sessions lease at most [`MgdPool::claimable`]`(Bulk)`
+    /// workers so they can never starve latency traffic of its reserve.
+    pub fn run_with_class<F: Fn(usize) + Sync>(
+        &self,
+        extra: usize,
+        class: RequestClass,
+        f: &F,
+    ) -> Result<()> {
         self.sessions.fetch_add(1, Ordering::Relaxed);
         let cur = self.concurrent.fetch_add(1, Ordering::SeqCst) + 1;
         self.peak.fetch_max(cur, Ordering::SeqCst);
         // Decrement `concurrent` however this call exits (return, error,
         // or an unwinding caller slot).
         let _concurrency = ConcurrencyGuard(&self.concurrent);
-        let extra = extra.min(self.handles.len());
+        let extra = extra.min(self.claimable(class));
         if extra == 0 {
             f(0);
             return Ok(());
@@ -234,6 +329,7 @@ impl MgdPool {
             let mut st = self.shared.state.lock().unwrap();
             let job = Job {
                 f: erase(f),
+                class,
                 next_slot: 1,
                 limit: extra,
                 active: 0,
@@ -345,7 +441,7 @@ fn close_session(shared: &Shared, idx: usize) -> bool {
     job.panicked
 }
 
-fn worker_loop(shared: &Shared, w: usize) {
+fn worker_loop(shared: &Shared, w: usize, latency_only: bool) {
     let mut st = shared.state.lock().unwrap();
     loop {
         if st.shutdown {
@@ -353,12 +449,18 @@ fn worker_loop(shared: &Shared, w: usize) {
         }
         // Scan the slab for a session with an unclaimed slot, starting at
         // a per-worker offset so concurrent sessions spread across the
-        // pool instead of all workers piling into slab slot 0.
+        // pool instead of all workers piling into slab slot 0. Reserved
+        // workers skip every non-latency session: their slots stay
+        // parked for the next latency-class solve no matter how deep the
+        // bulk backlog runs.
         let nslots = st.sessions.len();
         let mut claim = None;
         for off in 0..nslots {
             let idx = (w + off) % nslots;
             if let Some(job) = st.sessions[idx].as_mut() {
+                if latency_only && job.class != RequestClass::Latency {
+                    continue;
+                }
                 if !job.closing && job.next_slot <= job.limit {
                     let slot = job.next_slot;
                     job.next_slot += 1;
@@ -579,8 +681,86 @@ mod tests {
                 sessions: 1,
                 concurrent_sessions: 0,
                 peak_concurrency: 1,
+                reserved: 0,
             }
         );
+    }
+
+    /// A fully-reserved pool never lends a worker to a bulk session: the
+    /// lease clamps to zero and the session runs caller-only, while a
+    /// latency session still engages every worker.
+    #[test]
+    fn reserved_workers_refuse_bulk_sessions() {
+        let pool = MgdPool::new_with_reserved(2, 2);
+        assert_eq!(pool.reserved(), 2);
+        assert_eq!(pool.claimable(RequestClass::Bulk), 0);
+        assert_eq!(pool.claimable(RequestClass::Latency), 2);
+        let slots = Mutex::new(Vec::new());
+        pool.run(2, &|slot| {
+            slots.lock().unwrap().push(slot);
+        })
+        .unwrap();
+        assert_eq!(*slots.lock().unwrap(), vec![0], "bulk leased a reserved worker");
+        // Latency sessions lease the whole pool; the rendezvous only
+        // resolves if both reserved workers really join.
+        let arrived = AtomicUsize::new(0);
+        pool.run_with_class(2, RequestClass::Latency, &|_slot| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < 3 {
+                std::thread::yield_now();
+            }
+        })
+        .unwrap();
+        assert_eq!(arrived.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.stats().reserved, 2);
+    }
+
+    /// With one of two workers reserved, a bulk session saturating its
+    /// lease cannot stop a concurrent latency session from engaging the
+    /// reserved worker — the "bulk flood leases the pool dry" regression.
+    #[test]
+    fn bulk_flood_cannot_lease_the_latency_reserve() {
+        let pool = Arc::new(MgdPool::new_with_reserved(2, 1));
+        let latency_engaged = Arc::new(AtomicUsize::new(0));
+        // Bulk session: claims its single unreserved worker and holds the
+        // session open until a latency session has engaged a worker slot.
+        let bulk = {
+            let pool = Arc::clone(&pool);
+            let latency_engaged = Arc::clone(&latency_engaged);
+            std::thread::spawn(move || {
+                pool.run(2, &|_slot| {
+                    let mut spins = 0u64;
+                    while latency_engaged.load(Ordering::SeqCst) == 0 {
+                        std::thread::yield_now();
+                        spins += 1;
+                        assert!(
+                            spins < 500_000_000,
+                            "latency session never engaged the reserved worker"
+                        );
+                    }
+                })
+                .unwrap();
+            })
+        };
+        // Latency session issued while the bulk session occupies every
+        // unreserved thread: its worker slot must still run (on the
+        // reserved worker), or the bulk session above spins forever.
+        pool.run_with_class(1, RequestClass::Latency, &|slot| {
+            if slot != 0 {
+                latency_engaged.fetch_add(1, Ordering::SeqCst);
+            } else {
+                let mut spins = 0u64;
+                while latency_engaged.load(Ordering::SeqCst) == 0 {
+                    std::thread::yield_now();
+                    spins += 1;
+                    assert!(spins < 500_000_000, "reserved worker never claimed the slot");
+                }
+            }
+        })
+        .unwrap();
+        bulk.join().unwrap();
+        assert_eq!(latency_engaged.load(Ordering::SeqCst), 1);
+        assert!(pool.stats().peak_concurrency >= 2);
     }
 
     #[test]

@@ -8,9 +8,16 @@
 //!   reference of either the pre-swap or the post-swap matrix, and
 //!   post-swap requests resolve the new matrix exactly;
 //! - an evicted key can be registered again (and duplicates still
-//!   error while a key is live).
+//!   error while a key is live);
+//! - the reply contract of the admission front end: the shutdown race
+//!   answers with a descriptive error reply (never a bare `RecvError`),
+//!   a shed request's reply names the queue cap, and a `wait_timeout`
+//!   that expires leaves the request — and its in-flight accounting
+//!   toward `evict` — fully intact.
 
-use mgd_sptrsv::coordinator::{ShardedServiceConfig, ShardedSolveService};
+use mgd_sptrsv::coordinator::{
+    Admission, AdmissionPolicy, ShardedServiceConfig, ShardedSolveService, SolveRequest,
+};
 use mgd_sptrsv::matrix::gen::{self, GenSeed};
 use mgd_sptrsv::matrix::triangular::solve_serial;
 use mgd_sptrsv::runtime::{LevelSolver, NativeConfig, SchedulerKind, SolverBackend};
@@ -126,7 +133,7 @@ fn evict_blocks_until_inflight_requests_are_replied() {
     // and only then does the evict return.
     release.send(()).unwrap();
     let resp = reply
-        .recv_timeout(Duration::from_secs(30))
+        .wait_timeout(Duration::from_secs(30))
         .expect("reply must arrive")
         .unwrap();
     let want = solve_serial(&m, &b);
@@ -218,6 +225,150 @@ fn swap_under_concurrent_submitters_is_never_torn() {
         svc.registry().get("hot").unwrap().served(),
         total_old + total_new + 1
     );
+    Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+}
+
+#[test]
+fn shutdown_race_sends_a_descriptive_error_reply() {
+    // The seed bug: when a shard queue was already closed, `route`
+    // dropped the reply channel without answering, so waiters saw a bare
+    // RecvError instead of the promised error reply.
+    let svc = ShardedSolveService::start(cfg(1)).unwrap();
+    let m = gen::chain(60, GenSeed(124));
+    svc.register("late", &m).unwrap();
+    svc.close_intake();
+    let (reply, rx) = mpsc::channel();
+    let err = svc
+        .route(SolveRequest {
+            matrix_key: "late".to_string(),
+            b: vec![1.0; m.n],
+            reply,
+            class: None,
+        })
+        .expect_err("routing into a closed service must error");
+    assert!(format!("{err:#}").contains("service stopped"), "{err:#}");
+    // The waiter's side: a real reply, not a disconnected channel.
+    let replied = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("reply contract broken: channel dropped without a reply")
+        .expect_err("the reply must be the shutdown error");
+    assert!(
+        format!("{replied:#}").contains("accepts no new requests"),
+        "{replied:#}"
+    );
+    // The refused request checked back in: evict has nothing to drain.
+    let entry = svc.evict("late").unwrap();
+    assert_eq!(entry.inflight(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn shed_reply_carries_the_queue_cap_reason() {
+    let (backend, started, release) = GatedBackend::new();
+    let svc = ShardedSolveService::start_with_backend(
+        backend,
+        ShardedServiceConfig {
+            workers_per_shard: 1,
+            queue_cap: 1,
+            admission: AdmissionPolicy::Shed,
+            ..cfg(1)
+        },
+    );
+    let m = gen::banded(120, 4, 0.6, GenSeed(125));
+    svc.register("capped", &m).unwrap();
+    let b = vec![1.0f32; m.n];
+    // First request occupies the worker inside the gate; second fills
+    // the single-slot bulk lane.
+    let h0 = svc.submit("capped", b.clone()).unwrap();
+    started
+        .recv_timeout(Duration::from_secs(30))
+        .expect("solve never started");
+    let h1 = svc.submit("capped", b.clone()).unwrap();
+    // Third: shed. try_route reports the verdict with the reason...
+    match svc.try_route("capped", b.clone(), None).unwrap() {
+        Admission::Shed(reason) => {
+            assert!(reason.contains("queue cap"), "{reason}");
+            assert!(reason.contains("1 slots"), "cap value missing: {reason}");
+        }
+        Admission::Admitted(_) => panic!("third request must shed at cap 1"),
+    }
+    // ...and the submit form delivers the same reason as an error reply.
+    let err = svc
+        .submit("capped", b.clone())
+        .unwrap()
+        .wait()
+        .expect_err("shed request must get an error reply");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shed") && msg.contains("queue cap"), "{msg}");
+    release.send(()).unwrap();
+    for h in [h0, h1] {
+        let resp = h
+            .wait_timeout(Duration::from_secs(30))
+            .expect("admitted reply must arrive")
+            .unwrap();
+        let want = solve_serial(&m, &b);
+        for i in 0..m.n {
+            assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.shed_bulk, 2, "{stats:?}");
+    assert!(stats.peak_queue_depth <= 1, "{stats:?}");
+    svc.shutdown();
+}
+
+#[test]
+fn wait_timeout_expiry_keeps_the_request_and_its_inflight_accounting() {
+    let (backend, started, release) = GatedBackend::new();
+    let svc = Arc::new(ShardedSolveService::start_with_backend(
+        backend,
+        ShardedServiceConfig {
+            workers_per_shard: 1,
+            ..cfg(1)
+        },
+    ));
+    let m = gen::banded(150, 4, 0.6, GenSeed(126));
+    svc.register("slow", &m).unwrap();
+    let b = vec![1.0f32; m.n];
+    let handle = match svc.try_route("slow", b.clone(), None).unwrap() {
+        Admission::Admitted(h) => h,
+        Admission::Shed(r) => panic!("nothing should shed on an empty queue: {r}"),
+    };
+    started
+        .recv_timeout(Duration::from_secs(30))
+        .expect("solve never started");
+    // Deadline expires while the backend still holds the solve: the
+    // caller gets its timeout, the request stays in flight.
+    assert!(
+        handle.wait_timeout(Duration::from_millis(100)).is_none(),
+        "gated solve finished implausibly fast"
+    );
+    assert_eq!(
+        svc.registry().get("slow").unwrap().inflight(),
+        1,
+        "timeout must not release the in-flight guard"
+    );
+    // An evict started now must still block on that request...
+    let svc2 = Arc::clone(&svc);
+    let evictor = std::thread::spawn(move || svc2.evict("slow").unwrap());
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(
+        !evictor.is_finished(),
+        "evict returned while the timed-out request was still in flight"
+    );
+    // ...and after release, the same handle still receives the reply.
+    release.send(()).unwrap();
+    let resp = handle
+        .wait_timeout(Duration::from_secs(30))
+        .expect("reply must survive an earlier timeout")
+        .unwrap();
+    let want = solve_serial(&m, &b);
+    for i in 0..m.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+    }
+    let drained = evictor.join().unwrap();
+    assert_eq!(drained.inflight(), 0);
+    assert_eq!(drained.served(), 1);
     Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
 }
 

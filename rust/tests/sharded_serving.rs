@@ -79,7 +79,7 @@ fn unknown_matrix_key_gets_an_error_reply_not_a_hang() {
     // must deliver a diagnostic error immediately.
     let rx = svc.submit("absent", vec![0.0; m.n]).unwrap();
     let err = rx
-        .recv_timeout(std::time::Duration::from_secs(30))
+        .wait_timeout(std::time::Duration::from_secs(30))
         .expect("reply must arrive, not hang")
         .unwrap_err();
     let msg = format!("{err:#}");
@@ -125,7 +125,7 @@ fn concurrent_requests_across_three_shards_stay_bitwise_serial() {
                     got.push((key.clone(), b, rx));
                 }
                 got.into_iter()
-                    .map(|(key, b, rx)| (key, b, rx.recv().unwrap().unwrap()))
+                    .map(|(key, b, rx)| (key, b, rx.wait().unwrap()))
                     .collect::<Vec<_>>()
             }));
         }
@@ -159,6 +159,80 @@ fn concurrent_requests_across_three_shards_stay_bitwise_serial() {
         assert_eq!(total, 36);
         Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
     }
+}
+
+/// Regression for the batch-starvation bug: a worker used to greedily
+/// drain up to `batch_size` jobs even when the backend could not batch
+/// them (no multi-RHS), serializing the whole burst behind itself while
+/// sibling workers idled. Now an unbatchable burst spreads one job per
+/// worker: this backend's solves rendezvous — each blocks until **two**
+/// solves are simultaneously inside the backend — so the test can only
+/// pass if two shard workers really overlap on a 2-job burst.
+#[test]
+fn two_workers_overlap_on_an_unbatchable_two_job_burst() {
+    use mgd_sptrsv::runtime::LevelSolver;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct RendezvousBackend {
+        arrived: AtomicUsize,
+    }
+
+    impl SolverBackend for RendezvousBackend {
+        fn name(&self) -> &'static str {
+            "rendezvous"
+        }
+
+        // No supports_multi_rhs override: the backend cannot batch, so a
+        // correct worker must not drain more than one of these jobs.
+        fn solve(&self, plan: &LevelSolver, b: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.arrived.fetch_add(1, Ordering::SeqCst);
+            let mut spins = 0u64;
+            while self.arrived.load(Ordering::SeqCst) < 2 {
+                std::thread::yield_now();
+                spins += 1;
+                assert!(
+                    spins < 500_000_000,
+                    "second worker never arrived: greedy drain serialized the burst"
+                );
+            }
+            Ok(solve_serial(plan.matrix(), b))
+        }
+    }
+
+    let svc = ShardedSolveService::start_with_backend(
+        Arc::new(RendezvousBackend {
+            arrived: AtomicUsize::new(0),
+        }),
+        ShardedServiceConfig {
+            shards: 1,
+            workers_per_shard: 2,
+            // A batch window larger than the burst: the old greedy drain
+            // would pull both jobs into one worker and deadlock the
+            // rendezvous; the fixed drain leaves job 2 for worker 2.
+            batch_size: 4,
+            ..ShardedServiceConfig::default()
+        },
+    );
+    let m = gen::chain(80, GenSeed(97));
+    svc.register("burst", &m).unwrap();
+    let b1 = rhs(m.n, 1);
+    let b2 = rhs(m.n, 2);
+    let h1 = svc.submit("burst", b1.clone()).unwrap();
+    let h2 = svc.submit("burst", b2.clone()).unwrap();
+    for (h, b) in [(h1, b1), (h2, b2)] {
+        let resp = h
+            .wait_timeout(std::time::Duration::from_secs(60))
+            .expect("burst reply must arrive")
+            .unwrap();
+        let want = solve_serial(&m, &b);
+        for i in 0..m.n {
+            assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.batched_rounds, 2, "one dispatch per worker: {stats:?}");
+    svc.shutdown();
 }
 
 #[test]
