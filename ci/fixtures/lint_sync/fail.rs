@@ -1,0 +1,19 @@
+//! Violation fixture for ci/lint_sync.py --selftest: every rule must
+//! trip at least once in this file. Never compiled — lint input only.
+
+// Rule A: instrumented primitive imported straight from std::sync.
+use std::sync::{Arc, Mutex};
+
+struct Counter(std::sync::atomic::AtomicU64);
+
+impl Counter {
+    fn bump(&self) -> u64 {
+        // Rule B: no justification marker anywhere near this ordering.
+        self.0.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn peek(&self) -> u64 {
+        // Rule C: no safety comment anywhere near this block.
+        unsafe { *(&self.0 as *const _ as *const u64) }
+    }
+}

@@ -1,0 +1,23 @@
+//! Clean fixture for ci/lint_sync.py --selftest: exercises every rule's
+//! allowed form and must produce zero violations. Never compiled.
+
+// Rule A: data-plumbing re-exports may come from std; instrumented
+// primitives come through the facade.
+use crate::runtime::sync::atomic::{AtomicU64, Ordering};
+use crate::runtime::sync::{Condvar, Mutex};
+use std::sync::{mpsc, Arc, OnceLock};
+
+struct Counter(AtomicU64);
+
+impl Counter {
+    fn bump(&self) -> u64 {
+        // relaxed: monotonic telemetry counter, no data published under it.
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn peek(&self) -> u64 {
+        // SAFETY: the counter is plain memory and u64 loads are valid
+        // for any bit pattern; this fixture never runs anyway.
+        unsafe { *(&self.0 as *const _ as *const u64) }
+    }
+}

@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Sync-facade lint: static concurrency-hygiene rules for rust/src.
+
+Usage:
+    python3 ci/lint_sync.py             # lint the tree (exit 1 on violations)
+    python3 ci/lint_sync.py --selftest  # run against ci/fixtures/lint_sync/
+
+Three rules, all enforced on rust/src/**/*.rs (tests under rust/tests/
+and benches are exempt — they model *external* users of the library):
+
+A. Facade discipline. The instrumented primitives must flow through
+   `runtime::sync` so the in-tree model checker sees every lock, wait and
+   notify. Importing Mutex/Condvar/RwLock/Barrier or the `atomic` module
+   from `std::sync` is an error anywhere except the facade itself
+   (rust/src/runtime/sync.rs). Plain data-plumbing re-exports (Arc, Weak,
+   mpsc, OnceLock, LockResult, PoisonError, TryLockError) may come from
+   either path.
+
+B. Relaxed justification. `Ordering::Relaxed` is free in the whitelisted
+   telemetry modules (coordinator/metrics.rs, coordinator/registry.rs).
+   Everywhere else each use must carry a `relaxed:` justification marker
+   in a comment on the same line or within the 5 preceding lines —
+   forcing the author to say why no happens-before edge is needed (the
+   protocol arguments live in rust/src/runtime/atomics.md). `#[cfg(test)]`
+   modules are exempt.
+
+C. Safety comments. Every line containing an `unsafe` token must have a
+   `SAFETY:` comment on the same line or within the 5 preceding lines.
+
+The lint is intentionally line-based and dependency-free: it runs on the
+stock python3 of the CI image, before any cargo build.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "rust" / "src"
+FIXTURES = REPO / "ci" / "fixtures" / "lint_sync"
+
+# The facade module itself: the only place std's instrumented primitives
+# may be named.
+FACADE = "runtime/sync.rs"
+
+# Modules whose Relaxed telemetry counters are documented wholesale in
+# runtime/atomics.md; per-site markers would be noise there.
+RELAXED_WHITELIST = {
+    "coordinator/metrics.rs",
+    "coordinator/registry.rs",
+}
+
+# std::sync names that must come from the facade instead.
+INSTRUMENTED = r"(?:Mutex|Condvar|RwLock|Barrier|atomic)"
+
+# `use std::sync::X` / `use std::sync::{..}` importing an instrumented
+# primitive, in either position (direct path or inside a brace list).
+DIRECT_IMPORT = re.compile(
+    r"use\s+std\s*::\s*sync\s*::\s*" + INSTRUMENTED + r"\b"
+)
+BRACE_IMPORT = re.compile(r"use\s+std\s*::\s*sync\s*::\s*\{([^}]*)\}")
+BRACE_NAME = re.compile(r"^" + INSTRUMENTED + r"$")
+
+RELAXED = re.compile(r"Ordering\s*::\s*Relaxed|\bRelaxed\b\s*\)")
+RELAXED_MARKER = "relaxed:"
+MARKER_WINDOW = 5
+
+UNSAFE = re.compile(r"\bunsafe\b")
+SAFETY_MARKER = "SAFETY:"
+CFG_TEST = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+
+
+def rel(path):
+    return path.relative_to(REPO).as_posix()
+
+
+def test_module_start(lines):
+    """Index of the `#[cfg(test)]` attribute opening the trailing test
+    module, or len(lines) if the file has none. Everything from there on
+    is exempt from rule B (tests assert on counters; they are not part of
+    the cross-thread protocol)."""
+    for i, line in enumerate(lines):
+        if CFG_TEST.search(line) and i + 1 < len(lines) and "mod " in lines[i + 1]:
+            return i
+    return len(lines)
+
+
+def lint_file(path, violations):
+    relpath = rel(path)
+    text = path.read_text(encoding="utf-8")
+    lines = text.splitlines()
+    in_facade = relpath.endswith(FACADE)
+    tests_at = test_module_start(lines)
+
+    for i, line in enumerate(lines):
+        code = line.split("//")[0]
+
+        # Rule A: no std::sync imports of instrumented primitives
+        # outside the facade.
+        if not in_facade:
+            hit = DIRECT_IMPORT.search(code)
+            if not hit:
+                brace = BRACE_IMPORT.search(code)
+                if brace:
+                    names = [n.strip() for n in brace.group(1).split(",")]
+                    hit = any(BRACE_NAME.match(n) for n in names if n)
+            if hit:
+                violations.append(
+                    f"{relpath}:{i + 1}: [facade] import the instrumented "
+                    f"primitive from crate::runtime::sync, not std::sync: "
+                    f"{line.strip()}"
+                )
+
+        # Rule B: Relaxed needs a nearby `relaxed:` marker.
+        if (
+            relpath[len("rust/src/") :] not in RELAXED_WHITELIST
+            and i < tests_at
+            and RELAXED.search(code)
+        ):
+            window = lines[max(0, i - MARKER_WINDOW) : i + 1]
+            if not any(RELAXED_MARKER in w for w in window):
+                violations.append(
+                    f"{relpath}:{i + 1}: [relaxed] Ordering::Relaxed without a "
+                    f"`relaxed:` justification marker within {MARKER_WINDOW} "
+                    f"lines: {line.strip()}"
+                )
+
+        # Rule C: unsafe needs a nearby SAFETY: comment. Scan the full
+        # line (the marker usually lives in a comment).
+        if UNSAFE.search(code):
+            window = lines[max(0, i - MARKER_WINDOW) : i + 1]
+            if not any(SAFETY_MARKER in w for w in window):
+                violations.append(
+                    f"{relpath}:{i + 1}: [safety] unsafe without a `SAFETY:` "
+                    f"comment within {MARKER_WINDOW} lines: {line.strip()}"
+                )
+
+
+def lint_tree(root):
+    violations = []
+    for path in sorted(root.rglob("*.rs")):
+        lint_file(path, violations)
+    return violations
+
+
+def selftest():
+    """The fixture contract: fail.rs trips every rule, pass.rs none."""
+    fail_path = FIXTURES / "fail.rs"
+    pass_path = FIXTURES / "pass.rs"
+    failures = []
+    lint_file(fail_path, failures)
+    tags = {v.split("[", 1)[1].split("]", 1)[0] for v in failures}
+    want = {"facade", "relaxed", "safety"}
+    if tags != want:
+        print(f"selftest FAILED: fail.rs tripped {sorted(tags)}, want {sorted(want)}")
+        for v in failures:
+            print(" ", v)
+        return 1
+    passes = []
+    lint_file(pass_path, passes)
+    if passes:
+        print("selftest FAILED: pass.rs tripped rules:")
+        for v in passes:
+            print(" ", v)
+        return 1
+    print(f"selftest OK: fail.rs tripped {sorted(want)}; pass.rs is clean")
+    return 0
+
+
+def main():
+    if "--selftest" in sys.argv[1:]:
+        return selftest()
+    violations = lint_tree(SRC)
+    if violations:
+        print(f"lint_sync: {len(violations)} violation(s)")
+        for v in violations:
+            print(" ", v)
+        return 1
+    print("lint_sync: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

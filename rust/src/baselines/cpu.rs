@@ -14,8 +14,8 @@
 use crate::graph::{Dag, Levels};
 use crate::matrix::triangular::solve_serial;
 use crate::matrix::CsrMatrix;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier};
+use crate::runtime::sync::atomic::{AtomicUsize, Ordering};
+use crate::runtime::sync::{Arc, Barrier};
 use std::time::Instant;
 
 /// Measured throughput of one CPU solver.
@@ -81,6 +81,8 @@ pub fn level_scheduled(
                         let nodes = lv.level(l);
                         // Dynamic chunking over the level.
                         loop {
+                            // relaxed: chunk-claim ticket; rows are
+                            // published by the level barrier, not by it.
                             let k = counter.fetch_add(8, Ordering::Relaxed);
                             if k >= nodes.len() {
                                 break;
@@ -102,6 +104,8 @@ pub fn level_scheduled(
                         }
                         let w = barrier.wait();
                         if w.is_leader() {
+                            // relaxed: reset between the two barriers; no
+                            // worker reads it until the second wait.
                             counter.store(0, Ordering::Relaxed);
                         }
                         barrier.wait();
@@ -125,6 +129,9 @@ pub fn level_scheduled(
 /// Levels are data-race-free by construction (disjoint rows per level,
 /// barriers between levels).
 struct XSlot(std::cell::UnsafeCell<Vec<f32>>);
+// SAFETY: workers only touch disjoint rows within a level (the chunk
+// counter partitions them) and a barrier separates levels, so no two
+// threads ever access the same element without a happens-before edge.
 unsafe impl Sync for XSlot {}
 
 #[cfg(test)]

@@ -20,11 +20,11 @@ use crate::coordinator::{Admission, AdmissionPolicy, ShardedServiceConfig, Shard
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::triangular::solve_serial;
 use crate::matrix::CsrMatrix;
+use crate::runtime::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::runtime::{BackendConfig, BackendKind, NativeConfig, RequestClass, SchedulerKind};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -192,6 +192,7 @@ fn run_mode(by_class: bool, scale: &str) -> Result<AdmissionRow> {
                 match svc.try_route("bulk", bulk_rhs.bs[k % bulk_rhs.bs.len()].clone(), None)? {
                     Admission::Admitted(handle) => pending.push_back((k, handle)),
                     Admission::Shed(_) => {
+                        // relaxed: telemetry tally, read after join.
                         shed_total.fetch_add(1, Ordering::Relaxed);
                         // Back off by reaping a reply: admission said the
                         // lane is full, so wait for service-side progress
@@ -262,6 +263,7 @@ fn run_mode(by_class: bool, scale: &str) -> Result<AdmissionRow> {
         queue_cap: cap,
     };
     // Sanity: the service-side shed count and the flooders' view agree.
+    // relaxed: flooder threads were joined above (happens-before edge).
     ensure!(
         row.bulk_shed == shed_total.load(Ordering::Relaxed),
         "shed accounting diverged: counters {} vs flooders {}",

@@ -3,6 +3,8 @@
 //! ```text
 //! mgd compile  <matrix.mtx | gen:<family>:<n>:<seed>>   — compile & report
 //! mgd sim      <matrix>                                 — compile + simulate + verify
+//! mgd check    <matrix> [--corrupt deps|cycle|ext-order|par-width]
+//!                                                       — static MGD plan audit
 //! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto]
 //!                        [--scheduler level|mgd|auto] [--artifacts DIR]
 //! mgd serve    --matrices <spec,spec,...> [--shards N] [--workers N]
@@ -25,7 +27,9 @@ use crate::coordinator::{
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
-use crate::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
+use crate::runtime::{
+    BackendConfig, BackendKind, MgdPlan, MgdPlanConfig, NativeConfig, SchedulerKind,
+};
 use crate::sim::Accelerator;
 use crate::util::Table;
 use anyhow::{bail, Context, Result};
@@ -93,6 +97,31 @@ fn backend_config(args: &[String]) -> Result<BackendConfig> {
     })
 }
 
+/// Seed one in-memory corruption into a built plan (`mgd check
+/// --corrupt <kind>`): a demonstration — and the CI smoke — of the
+/// static verifier's rejection path. Each kind breaks exactly one
+/// invariant family that [`MgdPlan::verify`] audits.
+fn corrupt_plan(plan: &mut MgdPlan, kind: &str) -> Result<()> {
+    let k = plan
+        .nodes
+        .iter()
+        .position(|nd| nd.ext.len() >= 2 && !nd.succs.is_empty())
+        .context("matrix too small to corrupt: no interior node with two external sources")?;
+    match kind {
+        // Readiness counter out of step with the real predecessor count.
+        "deps" => plan.nodes[k].init_deps += 1,
+        // A self-edge: the successor list stops mirroring the (acyclic)
+        // recomputed dependency edges.
+        "cycle" => plan.nodes[k].succs.insert(0, k as u32),
+        // ICR gather list no longer ascending/deduplicated.
+        "ext-order" => plan.nodes[k].ext.reverse(),
+        // Advertised parallelism diverges from the node DAG's width.
+        "par-width" => plan.par_width += 1,
+        other => bail!("unknown corruption {other} (deps|cycle|ext-order|par-width)"),
+    }
+    Ok(())
+}
+
 /// Entry point used by `main`.
 pub fn run() {
     if let Err(e) = run_inner() {
@@ -145,6 +174,23 @@ fn run_inner() -> Result<()> {
                 run.stats.dnop,
                 run.stats.lnop,
                 run.gops(&cfg.arch, p.flops()),
+            );
+        }
+        "check" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let mut plan = MgdPlan::build(&m, MgdPlanConfig::default());
+            if let Some(kind) = flag_value(&args, "--corrupt") {
+                corrupt_plan(&mut plan, &kind)?;
+                println!("seeded `{kind}` corruption into the built plan");
+            }
+            plan.verify().context("static plan audit")?;
+            println!(
+                "plan OK: n={} nodes={} dep_edges={} roots={} par_width={}",
+                plan.n,
+                plan.num_nodes(),
+                plan.num_dep_edges(),
+                plan.roots.len(),
+                plan.par_width,
             );
         }
         "solve" => {
@@ -330,6 +376,10 @@ fn print_usage() {
          usage:\n\
          \x20 mgd compile <matrix>             compile & report schedule stats\n\
          \x20 mgd sim     <matrix>             compile + cycle-accurate sim + verify\n\
+         \x20 mgd check   <matrix> [--corrupt deps|cycle|ext-order|par-width]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 static MGD plan audit without executing (the same\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 verifier debug builds run at register/swap); --corrupt\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 seeds one defect to demonstrate the rejection path\n\
          \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
          \x20 mgd serve   --matrices <spec,spec,...> [--shards N] [--workers N]\n\
@@ -531,5 +581,18 @@ mod tests {
             .unwrap();
         assert_eq!(kind, BackendKind::Auto);
         assert!("gpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn check_corruption_kinds_are_all_rejected_by_verify() {
+        let m = gen::banded(200, 4, 0.7, GenSeed(5));
+        for kind in ["deps", "cycle", "ext-order", "par-width"] {
+            let mut plan = MgdPlan::build(&m, MgdPlanConfig::default());
+            plan.verify().expect("freshly built plan verifies");
+            corrupt_plan(&mut plan, kind).unwrap();
+            assert!(plan.verify().is_err(), "{kind} corruption must be rejected");
+        }
+        let mut plan = MgdPlan::build(&m, MgdPlanConfig::default());
+        assert!(corrupt_plan(&mut plan, "nope").is_err(), "unknown kind errors");
     }
 }

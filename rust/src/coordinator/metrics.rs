@@ -3,9 +3,9 @@
 //! counters of the sharded service and their aggregate view.
 
 use crate::arch::ArchConfig;
+use crate::runtime::sync::atomic::{AtomicU64, Ordering};
 use crate::runtime::RequestClass;
 use crate::sim::{EnergyModel, RunStats};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Metrics derived from one cycle-accurate simulation of the compiled

@@ -33,12 +33,12 @@
 use super::metrics::SolveMetrics;
 use crate::compiler::{compile, CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
+use crate::runtime::sync::atomic::{AtomicU64, Ordering};
+use crate::runtime::sync::{Arc, Condvar, Mutex, RwLock};
 use crate::runtime::{LevelSolver, RequestClass};
 use crate::sim::Accelerator;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// Parking spot for [`MatrixRegistry::evict`]: the evictor waits here for
 /// the lineage's in-flight count to drain instead of burning a core in a
@@ -208,6 +208,16 @@ impl MatrixRegistry {
             .with_context(|| format!("double-entry check for matrix {key:?}"))?;
         let metrics = SolveMetrics::from_run(&run.stats, &self.compiler.arch, program.flops());
         let solver = Arc::new(LevelSolver::new(m));
+        // Debug builds statically audit a freshly built medium-granularity
+        // plan at every registration and swap — the static tier of the
+        // verification ladder (`MgdPlan::verify`, also exposed as `mgd
+        // check`). Built standalone on purpose: `LevelSolver::mgd_plan`
+        // caches its first config, and the backend — not the registry —
+        // owns the thread-count choice that picks the served plan's shape.
+        #[cfg(debug_assertions)]
+        crate::runtime::MgdPlan::build(m, crate::runtime::MgdPlanConfig::default())
+            .verify()
+            .with_context(|| format!("static plan audit for matrix {key:?}"))?;
         Ok((program, metrics, solver))
     }
 
@@ -625,5 +635,75 @@ mod tests {
         assert_eq!(reg.num_shards(), 1);
         let m = gen::chain(30, GenSeed(64));
         assert_eq!(reg.register("only", &m).unwrap().shard(), 0);
+    }
+
+    use crate::runtime::sync::{model, thread};
+
+    /// Model-checked: the real [`DrainGate`] protocol never loses a
+    /// wakeup. Across every explored interleaving of two finishing
+    /// requests and a concurrent evict, the evictor terminates (a lost
+    /// wakeup would park it forever — the explorer's stall detector is
+    /// the oracle) and returns only after the drain.
+    #[test]
+    fn model_drain_gate_has_no_lost_wakeup() {
+        let reg = Arc::new(registry(1));
+        let m = gen::chain(30, GenSeed(90));
+        let entry = reg.register("gate", &m).unwrap();
+        reg.evict("gate").unwrap();
+        let out = model::explore(model::ModelConfig::fast(), move || {
+            let stale = reg
+                .inner
+                .write()
+                .unwrap()
+                .insert("gate".to_string(), Arc::clone(&entry));
+            if stale.is_some() {
+                model::flag("previous schedule left the key mapped");
+            }
+            let a = reg.checkout("gate").expect("known key");
+            let b = reg.checkout("gate").expect("known key");
+            let finishers: Vec<_> = [a, b]
+                .into_iter()
+                .map(|e| thread::spawn(move || e.note_done()))
+                .collect();
+            let evicted = reg.evict("gate").expect("key was registered");
+            if evicted.inflight() != 0 {
+                model::flag("evict returned before the drain");
+            }
+            for h in finishers {
+                h.join().unwrap();
+            }
+        });
+        out.assert_ok();
+        assert!(out.schedules > 1, "expected multiple interleavings");
+    }
+
+    /// The seeded protocol mutation the acceptance gate demands: a
+    /// replica of [`DrainGate`] whose last decrement notifies *without*
+    /// taking the gate lock — reverting the notify-under-lock fix that
+    /// [`RegisteredMatrix::note_done`] carries. The checker must find the
+    /// schedule where the notify fires inside the evictor's
+    /// checked-but-not-yet-waiting window and report the lost wakeup.
+    #[test]
+    fn model_catches_unlocked_drain_notify_mutation() {
+        let out = model::explore(model::ModelConfig::fast(), || {
+            let gate = Arc::new((AtomicU64::new(1), Mutex::new(()), Condvar::new()));
+            let finisher = {
+                let gate = Arc::clone(&gate);
+                thread::spawn(move || {
+                    // The mutant: decrement, then notify with the gate
+                    // lock NOT held.
+                    if gate.0.fetch_sub(1, Ordering::Release) == 1 {
+                        gate.2.notify_all();
+                    }
+                })
+            };
+            let mut guard = gate.1.lock().unwrap();
+            while gate.0.load(Ordering::Acquire) > 0 {
+                guard = gate.2.wait(guard).unwrap();
+            }
+            drop(guard);
+            finisher.join().unwrap();
+        });
+        out.assert_fails_with("lost wakeup");
     }
 }

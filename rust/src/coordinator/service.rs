@@ -68,11 +68,11 @@ use super::metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
 use super::registry::{MatrixRegistry, RegisteredMatrix};
 use crate::compiler::{CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
+use crate::runtime::sync::{mpsc, Arc, Condvar, Mutex};
 use crate::runtime::{create_backend, BackendConfig, RequestClass, SolverBackend};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::str::FromStr;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// What a shard does when a request arrives at a full queue lane (each
@@ -1301,8 +1301,8 @@ mod tests {
     }
 
     use crate::matrix::triangular::solve_serial;
+    use crate::runtime::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
     use crate::runtime::LevelSolver;
-    use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 
     /// Scalar-only backend whose **first** solve blocks until released,
     /// recording the order in which solves run (identified by `b[0]`).
@@ -1544,5 +1544,132 @@ mod tests {
         let entry = svc.evict("m").unwrap();
         assert_eq!(entry.inflight(), 0);
         svc.shutdown();
+    }
+
+    use crate::runtime::sync::atomic::AtomicUsize;
+    use crate::runtime::sync::{model, thread};
+
+    /// One tagged queue job against registry key `key`, its in-flight
+    /// mark checked out for real so the drop guard's check-in stays
+    /// balanced. The reply receiver is dropped up front: queue-protocol
+    /// tests never reply, and [`ShardQueue`] never touches the channel.
+    fn queue_job(reg: &MatrixRegistry, key: &str, tag: f32, class: RequestClass) -> ShardJob {
+        let (reply, _rx) = mpsc::channel();
+        ShardJob {
+            b: vec![tag],
+            reply,
+            guard: InflightGuard(reg.checkout(key).expect("key registered")),
+            class,
+        }
+    }
+
+    /// Model-checked: the admission bound is exact. No interleaving of
+    /// two `Block`-policy submitters with a draining worker ever observes
+    /// a lane deeper than `cap` — the depth check, the enqueue and the
+    /// park on `space` all happen under the lane mutex.
+    #[test]
+    fn model_queue_depth_never_exceeds_cap() {
+        let reg = Arc::new(MatrixRegistry::new(1, CompilerConfig::default()));
+        reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(1))).unwrap();
+        let out = model::explore(model::ModelConfig::fast(), move || {
+            let q = Arc::new(ShardQueue::new(1, AdmissionPolicy::Block));
+            let pushers: Vec<_> = (0..2u32)
+                .map(|i| {
+                    let q = Arc::clone(&q);
+                    let reg = Arc::clone(&reg);
+                    thread::spawn(move || {
+                        let job = queue_job(&reg, "q", i as f32, RequestClass::Bulk);
+                        match q.push(job) {
+                            Enqueue::Admitted { depth } => {
+                                if depth > 1 {
+                                    model::flag("queue cap exceeded");
+                                }
+                            }
+                            _ => model::flag("Block-policy push must admit"),
+                        }
+                    })
+                })
+                .collect();
+            for _ in 0..2 {
+                let jobs = q.pop(1, false).expect("open queue yields jobs");
+                if jobs.len() != 1 {
+                    model::flag("pop(1) returned a drain group");
+                }
+            }
+            for h in pushers {
+                h.join().unwrap();
+            }
+        });
+        out.assert_ok();
+        assert!(out.schedules > 1, "expected multiple interleavings");
+    }
+
+    /// Model-checked: racing [`ShardQueue::close`] against concurrent
+    /// submitters never strands a job. Every job whose push reported
+    /// `Admitted` is still drainable afterwards, and every other job
+    /// comes back as `Closed` for the error-reply contract.
+    #[test]
+    fn model_close_push_race_never_strands_admitted_jobs() {
+        let reg = Arc::new(MatrixRegistry::new(1, CompilerConfig::default()));
+        reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(2))).unwrap();
+        let out = model::explore(model::ModelConfig::fast(), move || {
+            let q = Arc::new(ShardQueue::new(0, AdmissionPolicy::Block));
+            let admitted = Arc::new(AtomicUsize::new(0));
+            let pushers: Vec<_> = (0..2u32)
+                .map(|i| {
+                    let q = Arc::clone(&q);
+                    let reg = Arc::clone(&reg);
+                    let admitted = Arc::clone(&admitted);
+                    thread::spawn(move || {
+                        let job = queue_job(&reg, "q", i as f32, RequestClass::Latency);
+                        match q.push(job) {
+                            Enqueue::Admitted { .. } => {
+                                admitted.fetch_add(1, AtomicOrdering::SeqCst);
+                            }
+                            Enqueue::Closed { .. } => {}
+                            Enqueue::Shed { .. } => model::flag("unbounded lane shed a job"),
+                        }
+                    })
+                })
+                .collect();
+            q.close();
+            for h in pushers {
+                h.join().unwrap();
+            }
+            let mut drained = 0;
+            while q.pop(1, false).is_some() {
+                drained += 1;
+            }
+            if drained != admitted.load(AtomicOrdering::SeqCst) {
+                model::flag("admitted job stranded by close");
+            }
+        });
+        out.assert_ok();
+        assert!(out.schedules > 1, "expected multiple interleavings");
+    }
+
+    /// The latency lane drains strictly before bulk, and a multi-rhs
+    /// drain group extends only over same-entry queue neighbors.
+    #[test]
+    fn queue_pop_orders_latency_first_and_batches_same_entry() {
+        let reg = MatrixRegistry::new(1, CompilerConfig::default());
+        reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(3))).unwrap();
+        let q = ShardQueue::new(0, AdmissionPolicy::Block);
+        for tag in [1.0, 2.0] {
+            let r = q.push(queue_job(&reg, "q", tag, RequestClass::Bulk));
+            assert!(matches!(r, Enqueue::Admitted { .. }));
+        }
+        for tag in [3.0, 4.0] {
+            let r = q.push(queue_job(&reg, "q", tag, RequestClass::Latency));
+            assert!(matches!(r, Enqueue::Admitted { .. }));
+        }
+        let order: Vec<f32> = (0..4).map(|_| q.pop(1, false).unwrap()[0].b[0]).collect();
+        assert_eq!(order, vec![3.0, 4.0, 1.0, 2.0]);
+        for tag in [5.0, 6.0, 7.0] {
+            let r = q.push(queue_job(&reg, "q", tag, RequestClass::Bulk));
+            assert!(matches!(r, Enqueue::Admitted { .. }));
+        }
+        let group = q.pop(4, true).unwrap();
+        assert_eq!(group.len(), 3, "same-entry jobs fold into one group");
     }
 }

@@ -105,6 +105,11 @@
 // `-D warnings`, an undocumented public item or a broken intra-doc link
 // fails the build.
 #![warn(missing_docs)]
+// Every unsafe operation must sit in its own `unsafe {}` block inside an
+// unsafe fn, each carrying the `// SAFETY:` comment `ci/lint_sync.py`
+// enforces — the safety argument is per-operation, never inherited from
+// the enclosing function signature.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod arch;
 pub mod baselines;

@@ -66,10 +66,10 @@
 
 use super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
 use super::pool::{MgdPool, RequestClass};
+use super::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use super::sync::Mutex;
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Counters recorded by one [`execute`] / [`execute_on`] call.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -218,19 +218,24 @@ pub fn execute_on_class<B: AsRef<[f32]> + Sync>(
     for (i, &root) in plan.roots.iter().enumerate() {
         let w = i % nworkers;
         run.deques[w].lock().unwrap().push_back(root);
+        // relaxed: advisory deque-length mirror; the mutex is authoritative.
         run.lens[w].fetch_add(1, Ordering::Relaxed);
     }
     // One pool session: the caller runs slot 0; parked workers claim
     // slots 1..nworkers. `run` lives on this stack — the session-close
     // handshake inside `pool.run_with_class` keeps the borrow sound.
     pool.run_with_class(nworkers - 1, class, &|slot| worker_loop(&run, slot))?;
+    // relaxed: the session-close handshake already ordered every worker's
+    // stores before this point; these are post-join reads.
     ensure!(
         !run.poisoned.load(Ordering::Relaxed),
         "mgd node job panicked"
     );
+    // relaxed: post-join read, ordered by the session close.
     debug_assert_eq!(run.remaining.load(Ordering::Relaxed), 0);
     let stats = MgdExecStats {
         nodes_executed: num_nodes as u64,
+        // relaxed: post-join telemetry read, ordered by the session close.
         steals: run.steals.load(Ordering::Relaxed),
     };
     Ok((unpack(&x, r, n), stats))
@@ -240,6 +245,8 @@ fn unpack(x: &[AtomicU32], r: usize, n: usize) -> Vec<Vec<f32>> {
     (0..r)
         .map(|k| {
             (0..n)
+                // relaxed: runs after the pool session closed, which
+                // ordered every worker's `x` stores before this read.
                 .map(|i| f32::from_bits(x[k * n + i].load(Ordering::Relaxed)))
                 .collect()
         })
@@ -251,6 +258,8 @@ fn worker_loop<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) {
     let mut local: Vec<f32> = Vec::new();
     let mut idle_spins = 0u32;
     loop {
+        // relaxed: advisory early-exit flag; the authoritative error is
+        // re-read after the session joins.
         if run.poisoned.load(Ordering::Relaxed) {
             return;
         }
@@ -290,6 +299,8 @@ fn worker_loop<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) {
         }))
         .is_ok();
         if !ok {
+            // relaxed: flag only; the session close orders it for the
+            // caller's post-join read.
             run.poisoned.store(true, Ordering::Relaxed);
             return;
         }
@@ -311,6 +322,7 @@ fn complete<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize, nid: u32) {
             std::sync::atomic::fence(Ordering::Acquire);
             let mut q = run.deques[w].lock().unwrap();
             q.push_front(s);
+            // relaxed: advisory length mirror; the mutex is authoritative.
             run.lens[w].fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -318,12 +330,14 @@ fn complete<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize, nid: u32) {
 }
 
 fn pop_own<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) -> Option<u32> {
+    // relaxed: advisory emptiness probe; a stale zero only delays the pop.
     if run.lens[w].load(Ordering::Relaxed) == 0 {
         return None;
     }
     let mut q = run.deques[w].lock().unwrap();
     let v = q.pop_front();
     if v.is_some() {
+        // relaxed: advisory length mirror; the mutex is authoritative.
         run.lens[w].fetch_sub(1, Ordering::Relaxed);
     }
     v
@@ -333,11 +347,13 @@ fn steal<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) -> Option<u32> {
     let nw = run.deques.len();
     for off in 1..nw {
         let t = (w + off) % nw;
+        // relaxed: advisory victim probe; a stale zero only skips a victim.
         if run.lens[t].load(Ordering::Relaxed) == 0 {
             continue;
         }
         let mut q = run.deques[t].lock().unwrap();
         if let Some(v) = q.pop_back() {
+            // relaxed: length mirror + telemetry; the mutex is authoritative.
             run.lens[t].fetch_sub(1, Ordering::Relaxed);
             run.steals.fetch_add(1, Ordering::Relaxed);
             return Some(v);
@@ -366,6 +382,8 @@ fn run_node<B: AsRef<[f32]>>(
         scratch.extend(
             node.ext
                 .iter()
+                // relaxed: the Release decrement + Acquire fence on this
+                // node's dependency counter ordered the producers' stores.
                 .map(|&c| f32::from_bits(xk[c as usize].load(Ordering::Relaxed))),
         );
         local.clear();
@@ -384,6 +402,8 @@ fn run_node<B: AsRef<[f32]>>(
             }
             let xi = (b[first + r] - acc) / node.diag[r];
             local.push(xi);
+            // relaxed: published to consumers by the Release decrement of
+            // their dependency counters in `complete`.
             xk[first + r].store(xi.to_bits(), Ordering::Relaxed);
         }
     }

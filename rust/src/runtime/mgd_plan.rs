@@ -82,6 +82,7 @@
 //! ```
 
 use crate::matrix::CsrMatrix;
+use anyhow::{ensure, Result};
 
 /// Tag bit marking an edge operand as node-local (resolved from the
 /// node's own solved-rows buffer instead of the external gather scratch).
@@ -312,6 +313,210 @@ impl MgdPlan {
     pub fn num_dep_edges(&self) -> usize {
         self.nodes.iter().map(|nd| nd.succs.len()).sum()
     }
+
+    /// Statically audit the plan without executing it — the static tier
+    /// of the verification ladder (see ARCHITECTURE.md): partition
+    /// integrity, packed-layout bounds, ICR gather ordering, dependency
+    /// counter/successor mirror consistency, acyclicity and `par_width`.
+    ///
+    /// `MatrixRegistry` registration and swap run this in debug builds,
+    /// and `mgd check` runs it from the CLI; it is linear in plan size,
+    /// so it is also suitable as an acceptance gate for externally
+    /// produced plans (the ROADMAP's JIT tier). Errors name the first
+    /// offending node and the violated invariant. A plan straight out of
+    /// [`MgdPlan::build`] always verifies; a failure means a builder bug
+    /// or a corrupted/hand-constructed plan.
+    pub fn verify(&self) -> Result<()> {
+        ensure!(
+            self.node_of.len() == self.n,
+            "node_of length {} != matrix order {}",
+            self.node_of.len(),
+            self.n
+        );
+        let num_nodes = self.nodes.len();
+        // Partition: contiguous ascending row ranges covering 0..n, each
+        // row owned by exactly one node. Disjointness doubles as the
+        // no-aliasing proof for the per-node SoA slabs: two nodes can
+        // never describe (and the executor never write) the same row.
+        let mut next = 0u32;
+        for (k, nd) in self.nodes.iter().enumerate() {
+            ensure!(nd.rows >= 1, "node {k}: empty row range");
+            ensure!(
+                nd.first_row == next,
+                "node {k}: first_row {} leaves a gap after row {next}",
+                nd.first_row
+            );
+            for r in nd.first_row..nd.first_row + nd.rows {
+                ensure!(
+                    self.node_of[r as usize] == k as u32,
+                    "row {r}: node_of says {} but the partition says {k}",
+                    self.node_of[r as usize]
+                );
+            }
+            next += nd.rows;
+        }
+        ensure!(
+            next as usize == self.n,
+            "partition covers {next} rows of {}",
+            self.n
+        );
+        // Per-node packed layout, diagonals and the ICR gather list.
+        for (k, nd) in self.nodes.iter().enumerate() {
+            let rows = nd.rows as usize;
+            ensure!(
+                nd.edge_ptr.len() == rows + 1,
+                "node {k}: edge_ptr length {} != rows + 1 ({})",
+                nd.edge_ptr.len(),
+                rows + 1
+            );
+            ensure!(nd.edge_ptr[0] == 0, "node {k}: edge_ptr does not start at 0");
+            ensure!(
+                nd.edge_ptr.windows(2).all(|w| w[0] <= w[1]),
+                "node {k}: edge_ptr is not monotone"
+            );
+            ensure!(
+                *nd.edge_ptr.last().unwrap() as usize == nd.edge_slot.len(),
+                "node {k}: edge_ptr end {} != packed edge count {}",
+                nd.edge_ptr.last().unwrap(),
+                nd.edge_slot.len()
+            );
+            ensure!(
+                nd.edge_val.len() == nd.edge_slot.len(),
+                "node {k}: edge_val length {} != edge_slot length {}",
+                nd.edge_val.len(),
+                nd.edge_slot.len()
+            );
+            ensure!(
+                nd.diag.len() == rows,
+                "node {k}: diag length {} != rows {rows}",
+                nd.diag.len()
+            );
+            for (r, &d) in nd.diag.iter().enumerate() {
+                ensure!(
+                    d.is_finite() && d != 0.0,
+                    "node {k} row {}: diagonal {d} must be finite and nonzero",
+                    nd.first_row as usize + r
+                );
+            }
+            // The ICR gather list is deduplicated in ascending address
+            // order (strictly ascending == sorted + deduped) and strictly
+            // external: every source precedes the node's own rows.
+            ensure!(
+                nd.ext.windows(2).all(|w| w[0] < w[1]),
+                "node {k}: ext gather list is not strictly ascending (ICR dedup broken)"
+            );
+            if let Some(&last) = nd.ext.last() {
+                ensure!(
+                    last < nd.first_row,
+                    "node {k}: ext source {last} is not external (first_row {})",
+                    nd.first_row
+                );
+            }
+            // Slots: in bounds, and each row's reconstructed operand
+            // columns ascend in CSR order strictly below the row itself
+            // (strictly lower-triangular, no forward references).
+            for r in 0..rows {
+                let lo = nd.edge_ptr[r] as usize;
+                let hi = nd.edge_ptr[r + 1] as usize;
+                let row = nd.first_row + r as u32;
+                let mut min_col = 0u32;
+                for &slot in &nd.edge_slot[lo..hi] {
+                    let col = if slot & LOCAL_BIT != 0 {
+                        let off = slot & !LOCAL_BIT;
+                        ensure!(
+                            (off as usize) < r,
+                            "node {k} row {row}: local slot {off} is not an earlier row"
+                        );
+                        nd.first_row + off
+                    } else {
+                        ensure!(
+                            (slot as usize) < nd.ext.len(),
+                            "node {k} row {row}: ext slot {slot} is out of bounds"
+                        );
+                        nd.ext[slot as usize]
+                    };
+                    ensure!(
+                        col < row,
+                        "node {k} row {row}: operand column {col} is not strictly lower"
+                    );
+                    ensure!(
+                        col >= min_col,
+                        "node {k} row {row}: operand columns are out of CSR order"
+                    );
+                    min_col = col + 1;
+                }
+            }
+        }
+        // Dependency links: recompute each node's distinct predecessors
+        // from its gather list. `init_deps` (the readiness counter seed)
+        // must equal exactly that count, and the `succs` lists must be
+        // their exact mirror. Every recomputed edge points at a strictly
+        // earlier node, so mirror equality also proves the node DAG is
+        // acyclic (node ids are a topological order).
+        let mut succ_of: Vec<Vec<u32>> = vec![Vec::new(); num_nodes];
+        for (k, nd) in self.nodes.iter().enumerate() {
+            let mut deps = 0u32;
+            let mut prev = u32::MAX;
+            for &src in &nd.ext {
+                let p = self.node_of[src as usize];
+                ensure!(
+                    (p as usize) < k,
+                    "node {k}: external source {src} maps to non-preceding node {p}"
+                );
+                if p != prev {
+                    prev = p;
+                    deps += 1;
+                    succ_of[p as usize].push(k as u32);
+                }
+            }
+            ensure!(
+                nd.init_deps == deps,
+                "node {k}: init_deps {} != distinct predecessor count {deps}",
+                nd.init_deps
+            );
+        }
+        for (k, nd) in self.nodes.iter().enumerate() {
+            ensure!(
+                nd.succs == succ_of[k],
+                "node {k}: succs {:?} do not mirror the dependency edges {:?}",
+                nd.succs,
+                succ_of[k]
+            );
+        }
+        // Roots are exactly the zero-dependency nodes, ascending.
+        let want_roots: Vec<u32> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, nd)| nd.init_deps == 0)
+            .map(|(k, _)| k as u32)
+            .collect();
+        ensure!(
+            self.roots == want_roots,
+            "roots {:?} != the zero-dependency nodes {:?}",
+            self.roots,
+            want_roots
+        );
+        // par_width is consistent with the node DAG: it equals the max
+        // width of the longest-path level decomposition.
+        let mut level = vec![0u32; num_nodes];
+        let mut width = vec![0usize; num_nodes + 1];
+        for (k, nd) in self.nodes.iter().enumerate() {
+            let mut l = 0u32;
+            for &src in &nd.ext {
+                l = l.max(level[self.node_of[src as usize] as usize] + 1);
+            }
+            level[k] = l;
+            width[l as usize] += 1;
+        }
+        let want_width = width.into_iter().max().unwrap_or(0);
+        ensure!(
+            self.par_width == want_width,
+            "par_width {} != node-DAG max level width {want_width}",
+            self.par_width
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -531,5 +736,60 @@ mod tests {
         let wide = MgdPlanConfig::auto(10_000, 10, 8);
         assert!(wide.max_node_rows <= 10_000 / 32 + 1);
         assert!(wide.max_node_rows >= 8);
+    }
+
+    #[test]
+    fn verify_accepts_every_built_plan() {
+        for (_, m) in gen::test_suite() {
+            for cfg in [
+                MgdPlanConfig::default(),
+                MgdPlanConfig {
+                    max_node_rows: 3,
+                    max_node_edges: 17,
+                },
+            ] {
+                MgdPlan::build(&m, cfg).verify().unwrap();
+            }
+        }
+    }
+
+    /// Seeds one corruption into an otherwise valid plan and requires
+    /// `verify` to reject it with an error naming the invariant.
+    fn expect_reject(mut p: MgdPlan, what: &str, corrupt: impl FnOnce(&mut MgdPlan)) {
+        corrupt(&mut p);
+        let err = p.verify().expect_err(what);
+        let msg = format!("{err:#}");
+        assert!(msg.contains(what), "{what}: got {msg}");
+    }
+
+    #[test]
+    fn verify_rejects_corrupted_plans() {
+        let m = gen::banded(200, 4, 0.7, GenSeed(33));
+        let base = MgdPlan::build(
+            &m,
+            MgdPlanConfig {
+                max_node_rows: 8,
+                max_node_edges: 64,
+            },
+        );
+        base.verify().unwrap();
+        // A node with two gathered sources (so reversing its gather list
+        // is a real, order-only corruption) and at least one successor
+        // (so clearing `succs` breaks the mirror).
+        let k = base
+            .nodes
+            .iter()
+            .position(|nd| nd.ext.len() >= 2 && !nd.succs.is_empty())
+            .expect("banded plan must have an interior node with two external sources");
+        expect_reject(base.clone(), "init_deps", |p| p.nodes[k].init_deps += 1);
+        expect_reject(base.clone(), "mirror", |p| p.nodes[k].succs.clear());
+        expect_reject(base.clone(), "ascending", |p| p.nodes[k].ext.reverse());
+        expect_reject(base.clone(), "par_width", |p| p.par_width += 1);
+        expect_reject(base.clone(), "gap", |p| p.nodes[k].first_row += 1);
+        expect_reject(base.clone(), "finite", |p| p.nodes[k].diag[0] = 0.0);
+        expect_reject(base.clone(), "out of bounds", |p| {
+            p.nodes[k].edge_slot[0] = 9999;
+        });
+        expect_reject(base.clone(), "zero-dependency", |p| p.roots.clear());
     }
 }

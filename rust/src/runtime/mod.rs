@@ -45,6 +45,7 @@ pub mod mgd_exec;
 pub mod mgd_plan;
 pub mod native;
 pub mod pool;
+pub mod sync;
 #[cfg(feature = "pjrt")]
 pub(crate) mod xla_shim;
 

@@ -35,11 +35,11 @@ use super::level_exec::{LevelPlan, LevelSolver};
 use super::mgd_exec;
 use super::mgd_plan::MgdPlanConfig;
 use super::pool::{MgdPool, MgdPoolStats, RequestClass};
+use super::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use super::sync::{mpsc, Arc};
 use crate::matrix::CsrMatrix;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::str::FromStr;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Which native scheduler executes the plan.
@@ -193,6 +193,7 @@ impl WorkerPool {
                     while let Ok(job) = rx.recv() {
                         // Count before running so the ack a job sends on
                         // completion happens-after the increment.
+                        // relaxed: telemetry counter; the channel orders it.
                         counts[w].fetch_add(1, Ordering::Relaxed);
                         job();
                     }
@@ -210,6 +211,7 @@ impl WorkerPool {
     }
 
     fn spawn(&self, job: Job) -> Result<()> {
+        // relaxed: round-robin cursor, no data published under it.
         let w = self.next.fetch_add(1, Ordering::Relaxed) % self.senders.len();
         self.senders[w]
             .send(job)
@@ -217,6 +219,7 @@ impl WorkerPool {
     }
 
     fn workers_engaged(&self) -> usize {
+        // relaxed: telemetry read (see runtime/atomics.md).
         self.jobs_run
             .iter()
             .filter(|c| c.load(Ordering::Relaxed) > 0)
@@ -355,6 +358,7 @@ impl NativeBackend {
     /// Level-scheduler execution counters since construction.
     pub fn stats(&self) -> NativeStats {
         NativeStats {
+            // relaxed: monotonic telemetry counters (runtime/atomics.md).
             parallel_levels: self.parallel_levels.load(Ordering::Relaxed),
             chunks_dispatched: self.chunks_dispatched.load(Ordering::Relaxed),
             workers_engaged: self.pool.get().map_or(0, WorkerPool::workers_engaged),
@@ -364,6 +368,7 @@ impl NativeBackend {
     /// MGD-scheduler execution counters since construction.
     pub fn mgd_stats(&self) -> MgdStats {
         MgdStats {
+            // relaxed: monotonic telemetry counters (runtime/atomics.md).
             solves: self.mgd_solves.load(Ordering::Relaxed),
             nodes_executed: self.mgd_nodes.load(Ordering::Relaxed),
             steals: self.mgd_steals.load(Ordering::Relaxed),
@@ -392,6 +397,7 @@ impl NativeBackend {
             Some(pool) => mgd_exec::execute_on_class(&mgd, bs, pool, self.threads, class)?,
             None => mgd_exec::execute(&mgd, bs, 1)?,
         };
+        // relaxed: monotonic telemetry counters, read only by mgd_stats.
         self.mgd_solves.fetch_add(1, Ordering::Relaxed);
         self.mgd_nodes.fetch_add(stats.nodes_executed, Ordering::Relaxed);
         self.mgd_steals.fetch_add(stats.steals, Ordering::Relaxed);
@@ -470,10 +476,13 @@ impl NativeBackend {
                     .map_err(|_| anyhow!("native worker pool stalled in level {li}"))?;
             }
             ensure!(!panicked, "native chunk job panicked in level {li}");
+            // relaxed: monotonic telemetry counters, read only by stats.
             self.parallel_levels.fetch_add(1, Ordering::Relaxed);
             self.chunks_dispatched
                 .fetch_add(nchunks as u64, Ordering::Relaxed);
         }
+        // relaxed: every writer's ack was collected through the channel
+        // above, which is the happens-before edge (runtime/atomics.md).
         Ok((0..r)
             .map(|k| {
                 (0..n)
@@ -505,14 +514,18 @@ fn run_chunk(
         for (k, b) in bs.iter().enumerate() {
             let xk = &x[k * n..(k + 1) * n];
             let mut acc = 0f32;
+            // relaxed: operand rows live in earlier levels; the level
+            // barrier (channel ack + recv) is the happens-before edge.
             for e in 0..fit {
                 acc += vals[e] * f32::from_bits(xk[cols[e] as usize].load(Ordering::Relaxed));
             }
             let mut carry = 0f32;
+            // relaxed: same level-barrier edge as the budgeted loop.
             for e in fit..cols.len() {
                 carry += vals[e] * f32::from_bits(xk[cols[e] as usize].load(Ordering::Relaxed));
             }
             let xi = ((b[i] - carry) - acc) * dinv;
+            // relaxed: published to dependents by the level barrier.
             xk[i].store(xi.to_bits(), Ordering::Relaxed);
         }
     }
@@ -864,7 +877,7 @@ mod tests {
     #[test]
     fn concurrent_mgd_solves_overlap_in_one_pool() {
         use crate::matrix::triangular::solve_serial;
-        use std::sync::Barrier;
+        use crate::runtime::sync::Barrier;
         let nb = Arc::new(NativeBackend::new(NativeConfig {
             threads: 4,
             scheduler: SchedulerKind::Mgd,

@@ -72,9 +72,9 @@
 //! solve is the executor's counter protocol, documented in
 //! `runtime/atomics.md`.
 
+use super::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use super::sync::{thread, Arc, Condvar, Mutex};
 use anyhow::{ensure, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 
 /// Scheduling class of one request (and of the pool session that serves
 /// it). The class travels from the serving front end
@@ -183,7 +183,7 @@ struct Shared {
 /// workers (see the module docs).
 pub struct MgdPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
     live: Arc<AtomicUsize>,
     /// Workers reserved for `Latency` sessions (worker indices
     /// `0..reserved` skip `Bulk` jobs in their slab scan).
@@ -226,7 +226,7 @@ impl MgdPool {
             let shared = Arc::clone(&shared);
             let live = Arc::clone(&live);
             handles.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("mgd-pool-{w}"))
                     .spawn(move || {
                         worker_loop(&shared, w, w < reserved);
@@ -276,6 +276,8 @@ impl MgdPool {
         MgdPoolStats {
             workers: self.workers(),
             live: self.live_workers(),
+            // relaxed: monotonic telemetry counter, no data is published
+            // under it (see runtime/atomics.md).
             sessions: self.sessions.load(Ordering::Relaxed),
             concurrent_sessions: self.concurrent.load(Ordering::SeqCst),
             peak_concurrency: self.peak.load(Ordering::SeqCst),
@@ -314,6 +316,7 @@ impl MgdPool {
         class: RequestClass,
         f: &F,
     ) -> Result<()> {
+        // relaxed: monotonic telemetry counter, read only by `stats`.
         self.sessions.fetch_add(1, Ordering::Relaxed);
         let cur = self.concurrent.fetch_add(1, Ordering::SeqCst) + 1;
         self.peak.fetch_max(cur, Ordering::SeqCst);
@@ -503,7 +506,8 @@ fn worker_loop(shared: &Shared, w: usize, latency_only: bool) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use crate::runtime::sync::atomic::AtomicBool;
+    use crate::runtime::sync::model;
 
     #[test]
     fn caller_and_workers_all_participate() {
@@ -798,5 +802,79 @@ mod tests {
         pool.run(3, &|_| {}).unwrap();
         drop(pool);
         assert_eq!(live.load(Ordering::SeqCst), 0, "shutdown leaked a thread");
+    }
+
+    /// Model-checked lease protocol (the in-tree replacement for the
+    /// out-of-tree thread simulation this protocol used to rely on):
+    /// across every explored interleaving of worker wakeup, slot claim,
+    /// session close and pool shutdown, the session closure is never
+    /// invoked after [`MgdPool::run`] returned (no dangling borrow of the
+    /// caller's stack) and the caller's slot 0 always runs.
+    #[test]
+    fn model_session_close_never_leaves_dangling_invocations() {
+        let out = model::explore(model::ModelConfig::fast(), || {
+            let alive = Arc::new(AtomicBool::new(true));
+            let hits = Arc::new(AtomicUsize::new(0));
+            let pool = MgdPool::new(1);
+            {
+                let alive = Arc::clone(&alive);
+                let hits = Arc::clone(&hits);
+                pool.run(1, &move |_slot| {
+                    if !alive.load(Ordering::SeqCst) {
+                        model::flag("session closure invoked after close");
+                    }
+                    hits.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            }
+            // `run` has returned: the borrow it erased is dead from here
+            // on, and any late invocation is a protocol bug.
+            alive.store(false, Ordering::SeqCst);
+            if hits.load(Ordering::SeqCst) == 0 {
+                model::flag("caller slot 0 never ran");
+            }
+            drop(pool);
+        });
+        out.assert_ok();
+        assert!(out.schedules > 1, "explorer found only one interleaving");
+    }
+
+    /// Seeded-mutation coverage for the model checker itself: a replica
+    /// of the session protocol whose closer forgets the `closing`
+    /// handshake (it uninstalls the job while a worker may still claim
+    /// it) must be caught as a dangling invocation.
+    #[test]
+    fn model_catches_a_close_without_handshake_mutation() {
+        let out = model::explore(model::ModelConfig::fast(), || {
+            let shared = Arc::new((Mutex::new(false), Condvar::new()));
+            let alive = Arc::new(AtomicBool::new(true));
+            let worker = {
+                let shared = Arc::clone(&shared);
+                let alive = Arc::clone(&alive);
+                thread::spawn(move || {
+                    let (job, work) = &*shared;
+                    let mut installed = job.lock().unwrap();
+                    while !*installed {
+                        installed = work.wait(installed).unwrap();
+                    }
+                    drop(installed);
+                    // Mutant: the "claim" happens after the closer already
+                    // gave up — exactly the use-after-close the real
+                    // protocol's closing/active handshake forbids.
+                    if !alive.load(Ordering::SeqCst) {
+                        model::flag("dangling session invocation");
+                    }
+                })
+            };
+            {
+                let (job, work) = &*shared;
+                *job.lock().unwrap() = true;
+                work.notify_all();
+            }
+            // Buggy closer: no wait for the worker to drain.
+            alive.store(false, Ordering::SeqCst);
+            worker.join().unwrap();
+        });
+        out.assert_fails_with("dangling session invocation");
     }
 }

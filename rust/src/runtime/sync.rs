@@ -1,0 +1,1040 @@
+//! Synchronization facade of the runtime and coordinator layers.
+//!
+//! Every lock, condvar, atomic and thread spawn that takes part in a
+//! cross-thread protocol (`runtime/pool.rs`, `runtime/mgd_exec.rs`,
+//! `coordinator/service.rs`, `coordinator/registry.rs`, ...) is imported
+//! from this module instead of `std::sync` directly — `ci/lint_sync.py`
+//! enforces the discipline. The payoff is that the protocols become
+//! *model-checkable in-tree*:
+//!
+//! - Outside a model run the facade is a zero-cost passthrough: atomics,
+//!   `Arc`, `RwLock`, `Barrier`, `mpsc` and `OnceLock` are plain std
+//!   re-exports, and the wrapped [`Mutex`]/[`Condvar`] delegate to their
+//!   std counterparts after one thread-local lookup.
+//! - Inside [`model::explore`] the calling thread is a *virtual thread*
+//!   of a mini-loom explorer: every `lock`, unlock, `wait`, `notify` and
+//!   spawn becomes a scheduling point, and the explorer enumerates
+//!   interleavings (bounded exhaustive DFS over the recorded choice
+//!   points, then seeded-random schedules) looking for deadlocks, lost
+//!   wakeups and property violations flagged via [`model::flag`]. Runs
+//!   are deterministic: no wall clock, no OS randomness — only the
+//!   schedule choices vary, so plain `cargo test` explores a bounded,
+//!   reproducible set of schedules (deepened by the `model-check` cargo
+//!   feature).
+//!
+//! Atomics are deliberately *not* instrumented: the three protocols
+//! checked here (pool session lease, `ShardQueue` admission, `DrainGate`
+//! drain) synchronize through the mutex/condvar pairs, and the atomic
+//! fences are covered by the nightly Miri/TSan CI jobs instead. Spurious
+//! condvar wakeups are not modeled; all in-tree waits sit in predicate
+//! loops, which the model checker exercises via real notify races.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::Condvar as StdCondvar;
+use std::sync::Mutex as StdMutex;
+
+pub use std::sync::atomic;
+pub use std::sync::{mpsc, Arc, Barrier, OnceLock, RwLock, Weak};
+pub use std::sync::{LockResult, PoisonError, TryLockError};
+
+/// Mutual exclusion with the `std::sync::Mutex` surface (the subset the
+/// crate uses: `new`, `lock`, `into_inner`).
+///
+/// On a normal thread this is the std mutex plus one thread-local check.
+/// On a virtual thread of [`model::explore`] the acquisition is arbitrated
+/// by the explorer: the lock entry is a scheduling point, contention
+/// blocks the virtual thread, and the real (uncontended) std lock is only
+/// taken once the explorer grants logical ownership.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Creates a new unlocked mutex.
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex {
+            inner: StdMutex::new(t),
+        }
+    }
+
+    /// Consumes the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T> Mutex<T> {
+    fn key(&self) -> usize {
+        self as *const Mutex<T> as *const () as usize
+    }
+
+    fn wrap<'a>(
+        &'a self,
+        logical: bool,
+        res: LockResult<std::sync::MutexGuard<'a, T>>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        match res {
+            Ok(g) => Ok(MutexGuard {
+                lock: self,
+                logical,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                lock: self,
+                logical,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    /// Takes the real lock after the explorer granted logical ownership;
+    /// the std lock is uncontended at this point (`WouldBlock` is only a
+    /// defensive fallback against non-virtual interference).
+    fn relock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match self.inner.try_lock() {
+            Ok(g) => self.wrap(true, Ok(g)),
+            Err(TryLockError::Poisoned(p)) => self.wrap(true, Err(p)),
+            Err(TryLockError::WouldBlock) => self.wrap(true, self.inner.lock()),
+        }
+    }
+
+    /// Acquires the mutex, blocking until it is available. A scheduling
+    /// point under a model run.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match model::current() {
+            None => self.wrap(false, self.inner.lock()),
+            Some(vt) => {
+                vt.yield_point();
+                vt.acquire_mutex(self.key());
+                self.relock()
+            }
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard returned by [`Mutex::lock`]; releases the lock on drop (a
+/// scheduling point under a model run).
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    logical: bool,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("mutex guard already released")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("mutex guard already released")
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for MutexGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.inner.take());
+        if self.logical {
+            if let Some(vt) = model::current() {
+                vt.release_mutex(self.lock.key());
+                vt.yield_point();
+            }
+        }
+    }
+}
+
+/// Condition variable with the `std::sync::Condvar` surface (the subset
+/// the crate uses: `new`, `wait`, `notify_one`, `notify_all`),
+/// model-instrumented like [`Mutex`].
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    /// Creates a new condition variable.
+    pub fn new() -> Condvar {
+        Condvar {
+            inner: StdCondvar::new(),
+        }
+    }
+
+    fn key(&self) -> usize {
+        self as *const Condvar as *const () as usize
+    }
+
+    /// Releases the guard, waits for a notification, reacquires the lock.
+    ///
+    /// Under a model run there is a scheduling point *before* the waiter
+    /// registers (still holding the lock) — exactly the window a
+    /// notify-outside-the-lock protocol needs to lose a wakeup, which is
+    /// how the explorer catches that bug class.
+    pub fn wait<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        match model::current() {
+            None => {
+                let lock = guard.lock;
+                let g = guard.inner.take().expect("mutex guard already released");
+                lock.wrap(false, self.inner.wait(g))
+            }
+            Some(vt) => {
+                vt.yield_point();
+                let lock = guard.lock;
+                guard.logical = false;
+                drop(guard.inner.take());
+                drop(guard);
+                vt.condvar_wait(self.key(), lock.key());
+                vt.acquire_mutex(lock.key());
+                lock.relock()
+            }
+        }
+    }
+
+    /// Wakes one waiter (FIFO under a model run). A scheduling point.
+    pub fn notify_one(&self) {
+        if let Some(vt) = model::current() {
+            vt.notify(self.key(), false);
+        }
+        self.inner.notify_one();
+    }
+
+    /// Wakes all waiters. A scheduling point under a model run.
+    pub fn notify_all(&self) {
+        if let Some(vt) = model::current() {
+            vt.notify(self.key(), true);
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+pub mod thread {
+    //! Facade over `std::thread` spawn/join (the subset the runtime
+    //! uses), so worker pools spawned inside a [`super::model::explore`]
+    //! scenario become virtual threads of the explorer instead of free
+    //! running OS threads.
+
+    use super::model;
+
+    /// Mirror of `std::thread::Builder` (subset: `name` + `spawn`).
+    pub struct Builder {
+        inner: std::thread::Builder,
+        name: Option<String>,
+    }
+
+    impl Builder {
+        /// New builder with default settings.
+        pub fn new() -> Builder {
+            Builder {
+                inner: std::thread::Builder::new(),
+                name: None,
+            }
+        }
+
+        /// Names the thread (OS name and the model's thread label).
+        pub fn name(self, name: String) -> Builder {
+            Builder {
+                inner: self.inner.name(name.clone()),
+                name: Some(name),
+            }
+        }
+
+        /// Spawns the thread. Inside a model run the child registers as a
+        /// virtual thread and only runs when the explorer schedules it;
+        /// the spawn itself is a scheduling point.
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match model::current() {
+                None => Ok(JoinHandle {
+                    inner: self.inner.spawn(f)?,
+                    vt: None,
+                }),
+                Some(vt) => {
+                    let label = self.name.unwrap_or_else(|| "vthread".to_string());
+                    let tid = vt.register_child(label);
+                    let ctl = std::sync::Arc::clone(&vt.ctl);
+                    let h = self.inner.spawn(move || model::run_virtual(ctl, tid, f))?;
+                    vt.yield_point();
+                    Ok(JoinHandle {
+                        inner: h,
+                        vt: Some(model::Vt {
+                            ctl: std::sync::Arc::clone(&vt.ctl),
+                            tid,
+                        }),
+                    })
+                }
+            }
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Builder {
+            Builder::new()
+        }
+    }
+
+    /// Mirror of `std::thread::JoinHandle`. Joining from a virtual thread
+    /// first waits for the child's virtual exit (a scheduling point), then
+    /// joins the real thread.
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<T>,
+        vt: Option<model::Vt>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Waits for the thread to finish and returns its result.
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some(child) = &self.vt {
+                if let Some(me) = model::current() {
+                    me.block_on_join(child.tid);
+                }
+            }
+            self.inner.join()
+        }
+    }
+
+    /// Mirror of `std::thread::spawn` (panics if the OS refuses).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+}
+
+pub mod model {
+    //! The mini-loom explorer behind the facade.
+    //!
+    //! [`explore`] runs a scenario closure once per schedule as the root
+    //! *virtual thread*. Virtual threads are real OS threads serialized by
+    //! a token: exactly one runs at a time, and at every facade operation
+    //! (lock, unlock, wait, notify, spawn, join) the running thread hands
+    //! the token back and the explorer picks who continues. Choice points
+    //! are recorded, so the explorer can replay a prefix and branch — a
+    //! bounded exhaustive DFS over the interleaving tree — and a
+    //! seeded-xorshift tail samples deeper schedules. All decisions are
+    //! functions of the recorded schedule: no wall clock, no OS
+    //! randomness, deterministic across runs.
+    //!
+    //! Detected failures: deadlock (no virtual thread runnable), lost
+    //! wakeup (stall with a condvar waiter), scenario panics, scheduling
+    //! step-bound overruns, and explicit [`flag`] calls. On failure the
+    //! run is abandoned: parked virtual threads stay parked and their OS
+    //! threads are detached (a handful of leaked parked threads per
+    //! *failing* test is the price of never unwinding through foreign
+    //! lock guards).
+
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+    const MAX_THREADS: usize = 64;
+
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    enum VtState {
+        Runnable,
+        Running,
+        BlockedMutex(usize),
+        BlockedCondvar(usize),
+        BlockedJoin(usize),
+        Exited,
+    }
+
+    struct SchedState {
+        threads: Vec<VtState>,
+        names: Vec<String>,
+        mutexes: HashMap<usize, Option<usize>>,
+        waiters: HashMap<usize, Vec<usize>>,
+        running: Option<usize>,
+        prefix: Vec<usize>,
+        pos: usize,
+        trace: Vec<(usize, usize)>,
+        rng: u64,
+        steps: usize,
+        max_steps: usize,
+        live: usize,
+        failure: Option<String>,
+    }
+
+    pub(super) struct Ctl {
+        st: Mutex<SchedState>,
+        cv: Condvar,
+    }
+
+    /// Handle of one virtual thread (thread-local; cloned per facade op).
+    #[derive(Clone)]
+    pub(super) struct Vt {
+        pub(super) ctl: Arc<Ctl>,
+        pub(super) tid: usize,
+    }
+
+    thread_local! {
+        static CURRENT: RefCell<Option<Vt>> = RefCell::new(None);
+    }
+
+    pub(super) fn current() -> Option<Vt> {
+        CURRENT.with(|c| c.borrow().clone())
+    }
+
+    fn lock_ctl(ctl: &Ctl) -> MutexGuard<'_, SchedState> {
+        ctl.st.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn xorshift(s: &mut u64) -> u64 {
+        *s ^= *s << 13;
+        *s ^= *s >> 7;
+        *s ^= *s << 17;
+        *s
+    }
+
+    fn fail(st: &mut SchedState, msg: String) {
+        if st.failure.is_none() {
+            st.failure = Some(msg);
+        }
+        st.running = None;
+    }
+
+    fn describe_stall(st: &SchedState) -> String {
+        let mut parts = Vec::new();
+        let mut cv_wait = false;
+        for (i, s) in st.threads.iter().enumerate() {
+            let d = match s {
+                VtState::BlockedMutex(k) => {
+                    format!("'{}' blocked on mutex #{k:x}", st.names[i])
+                }
+                VtState::BlockedCondvar(k) => {
+                    cv_wait = true;
+                    format!("'{}' waiting on condvar #{k:x}", st.names[i])
+                }
+                VtState::BlockedJoin(t) => {
+                    format!("'{}' joining '{}'", st.names[i], st.names[*t])
+                }
+                _ => continue,
+            };
+            parts.push(d);
+        }
+        if cv_wait {
+            format!("lost wakeup or deadlock: {}", parts.join("; "))
+        } else {
+            format!("deadlock: {}", parts.join("; "))
+        }
+    }
+
+    /// Picks the next runnable thread per the schedule. The caller must
+    /// already have parked/retired the previously running thread.
+    fn reschedule(st: &mut SchedState) {
+        if st.failure.is_some() || st.live == 0 {
+            return;
+        }
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, VtState::Runnable))
+            .map(|(i, _)| i)
+            .collect();
+        if runnable.is_empty() {
+            let msg = describe_stall(st);
+            fail(st, msg);
+            return;
+        }
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            let msg = format!("step bound exceeded ({} scheduling points)", st.max_steps);
+            fail(st, msg);
+            return;
+        }
+        let n = runnable.len();
+        let idx = if st.pos < st.prefix.len() {
+            st.prefix[st.pos].min(n - 1)
+        } else if st.rng != 0 {
+            (xorshift(&mut st.rng) % n as u64) as usize
+        } else {
+            0
+        };
+        st.pos += 1;
+        st.trace.push((idx, n));
+        let t = runnable[idx];
+        st.threads[t] = VtState::Running;
+        st.running = Some(t);
+    }
+
+    /// Parks until the explorer hands this thread the token. After a
+    /// failure `running` stays `None` forever, so parked threads never
+    /// resume — the runner detaches them.
+    fn wait_for_token<'a>(
+        ctl: &'a Ctl,
+        mut st: MutexGuard<'a, SchedState>,
+        tid: usize,
+    ) -> MutexGuard<'a, SchedState> {
+        loop {
+            if st.running == Some(tid) {
+                return st;
+            }
+            st = ctl.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    impl Vt {
+        /// One scheduling point: hand the token back, let the explorer
+        /// pick (possibly this thread again), resume when granted.
+        pub(super) fn yield_point(&self) {
+            let mut st = lock_ctl(&self.ctl);
+            st.threads[self.tid] = VtState::Runnable;
+            st.running = None;
+            reschedule(&mut st);
+            self.ctl.cv.notify_all();
+            let st = wait_for_token(&self.ctl, st, self.tid);
+            drop(st);
+        }
+
+        pub(super) fn acquire_mutex(&self, key: usize) {
+            let mut st = lock_ctl(&self.ctl);
+            loop {
+                let slot = st.mutexes.entry(key).or_insert(None);
+                if slot.is_none() {
+                    *slot = Some(self.tid);
+                    drop(st);
+                    return;
+                }
+                st.threads[self.tid] = VtState::BlockedMutex(key);
+                st.running = None;
+                reschedule(&mut st);
+                self.ctl.cv.notify_all();
+                st = wait_for_token(&self.ctl, st, self.tid);
+            }
+        }
+
+        pub(super) fn release_mutex(&self, key: usize) {
+            let mut st = lock_ctl(&self.ctl);
+            st.mutexes.insert(key, None);
+            for s in st.threads.iter_mut() {
+                if *s == VtState::BlockedMutex(key) {
+                    *s = VtState::Runnable;
+                }
+            }
+        }
+
+        /// Atomically releases `mutex_key`, registers as a waiter on
+        /// `cv_key` and parks; returns (running, *not* holding the mutex)
+        /// once notified and scheduled.
+        pub(super) fn condvar_wait(&self, cv_key: usize, mutex_key: usize) {
+            let mut st = lock_ctl(&self.ctl);
+            st.mutexes.insert(mutex_key, None);
+            for s in st.threads.iter_mut() {
+                if *s == VtState::BlockedMutex(mutex_key) {
+                    *s = VtState::Runnable;
+                }
+            }
+            st.waiters.entry(cv_key).or_default().push(self.tid);
+            st.threads[self.tid] = VtState::BlockedCondvar(cv_key);
+            st.running = None;
+            reschedule(&mut st);
+            self.ctl.cv.notify_all();
+            let st = wait_for_token(&self.ctl, st, self.tid);
+            drop(st);
+        }
+
+        pub(super) fn notify(&self, cv_key: usize, all: bool) {
+            self.yield_point();
+            let mut st = lock_ctl(&self.ctl);
+            let woken: Vec<usize> = match st.waiters.get_mut(&cv_key) {
+                Some(q) if all => q.drain(..).collect(),
+                Some(q) if !q.is_empty() => vec![q.remove(0)],
+                _ => Vec::new(),
+            };
+            for t in woken {
+                st.threads[t] = VtState::Runnable;
+            }
+        }
+
+        pub(super) fn register_child(&self, name: String) -> usize {
+            let mut st = lock_ctl(&self.ctl);
+            if st.threads.len() >= MAX_THREADS {
+                let msg = format!("more than {MAX_THREADS} virtual threads spawned");
+                fail(&mut st, msg);
+            }
+            st.threads.push(VtState::Runnable);
+            st.names.push(name);
+            st.live += 1;
+            st.threads.len() - 1
+        }
+
+        pub(super) fn block_on_join(&self, child: usize) {
+            let mut st = lock_ctl(&self.ctl);
+            while st.threads[child] != VtState::Exited {
+                st.threads[self.tid] = VtState::BlockedJoin(child);
+                st.running = None;
+                reschedule(&mut st);
+                self.ctl.cv.notify_all();
+                st = wait_for_token(&self.ctl, st, self.tid);
+            }
+            drop(st);
+        }
+    }
+
+    fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = p.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = p.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    }
+
+    /// Body of every virtual thread: register in the TLS, wait for the
+    /// first token, run, then retire and wake joiners.
+    pub(super) fn run_virtual<F, T>(ctl: Arc<Ctl>, tid: usize, f: F) -> T
+    where
+        F: FnOnce() -> T,
+    {
+        let vt = Vt { ctl, tid };
+        CURRENT.with(|c| *c.borrow_mut() = Some(vt.clone()));
+        {
+            let st = lock_ctl(&vt.ctl);
+            let st = wait_for_token(&vt.ctl, st, tid);
+            drop(st);
+        }
+        let result = catch_unwind(AssertUnwindSafe(f));
+        let mut st = lock_ctl(&vt.ctl);
+        if let Err(p) = &result {
+            let msg = panic_message(p.as_ref());
+            let name = st.names[tid].clone();
+            fail(&mut st, format!("thread '{name}' panicked: {msg}"));
+        }
+        st.threads[tid] = VtState::Exited;
+        st.live -= 1;
+        st.running = None;
+        for s in st.threads.iter_mut() {
+            if *s == VtState::BlockedJoin(tid) {
+                *s = VtState::Runnable;
+            }
+        }
+        reschedule(&mut st);
+        drop(st);
+        vt.ctl.cv.notify_all();
+        CURRENT.with(|c| *c.borrow_mut() = None);
+        match result {
+            Ok(v) => v,
+            Err(p) => resume_unwind(p),
+        }
+    }
+
+    /// Report a protocol/property violation from inside a scenario.
+    ///
+    /// On a virtual thread this records the failure and parks the caller
+    /// (the run is abandoned) instead of panicking, so the violation
+    /// never unwinds through foreign lock guards. Outside a model run it
+    /// panics like a plain assertion.
+    pub fn flag(msg: &str) {
+        match current() {
+            None => panic!("model property violated: {msg}"),
+            Some(vt) => {
+                let mut st = lock_ctl(&vt.ctl);
+                fail(&mut st, format!("property violated: {msg}"));
+                vt.ctl.cv.notify_all();
+                let st = wait_for_token(&vt.ctl, st, vt.tid);
+                drop(st);
+            }
+        }
+    }
+
+    /// Exploration budget of one [`explore`] call. All bounds are
+    /// schedule/step counts — never wall-clock — so runs are
+    /// deterministic.
+    #[derive(Clone, Copy, Debug)]
+    pub struct ModelConfig {
+        /// Bound on exhaustively enumerated schedules (DFS over recorded
+        /// choice points; the tree is truncated past this many runs).
+        pub max_schedules: usize,
+        /// Seeded-random schedules run after the exhaustive phase, to
+        /// sample branches the truncated DFS never reached.
+        pub random_schedules: usize,
+        /// Seed of the xorshift generator driving the random phase.
+        pub seed: u64,
+        /// Bound on scheduling points within one schedule (runaway and
+        /// livelock guard).
+        pub max_steps: usize,
+    }
+
+    impl ModelConfig {
+        /// Budget sized for plain `cargo test` (a few hundred schedules);
+        /// the `model-check` cargo feature deepens it 8x for the nightly
+        /// deep-exploration CI job.
+        pub fn fast() -> ModelConfig {
+            let deep = if cfg!(feature = "model-check") { 8 } else { 1 };
+            ModelConfig {
+                max_schedules: 256 * deep,
+                random_schedules: 32 * deep,
+                seed: 0x9e37_79b9_7f4a_7c15,
+                max_steps: 50_000,
+            }
+        }
+    }
+
+    impl Default for ModelConfig {
+        fn default() -> ModelConfig {
+            ModelConfig::fast()
+        }
+    }
+
+    /// Result of exploring one scenario.
+    #[derive(Clone, Debug)]
+    pub struct Outcome {
+        /// Schedules actually executed.
+        pub schedules: usize,
+        /// True if the exhaustive phase hit `max_schedules` with branches
+        /// left unexplored.
+        pub truncated: bool,
+        /// First violation found, if any (deadlock, lost wakeup, panic,
+        /// [`flag`], step-bound overrun).
+        pub failure: Option<String>,
+    }
+
+    impl Outcome {
+        /// Panics if any schedule failed.
+        pub fn assert_ok(&self) {
+            if let Some(f) = &self.failure {
+                panic!("model check failed after {} schedules: {f}", self.schedules);
+            }
+        }
+
+        /// Panics unless some schedule failed with a message containing
+        /// `needle` (used by the seeded-mutation tests that prove the
+        /// checker has teeth).
+        pub fn assert_fails_with(&self, needle: &str) {
+            match &self.failure {
+                None => panic!("model check passed all {} schedules", self.schedules),
+                Some(f) => {
+                    if !f.contains(needle) {
+                        panic!("model failure {f:?} does not mention {needle:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    fn next_prefix(trace: &[(usize, usize)]) -> Option<Vec<usize>> {
+        for (i, &(idx, n)) in trace.iter().enumerate().rev() {
+            if idx + 1 < n {
+                let mut p: Vec<usize> = trace[..i].iter().map(|&(c, _)| c).collect();
+                p.push(idx + 1);
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    fn run_one<F>(
+        cfg: &ModelConfig,
+        prefix: Vec<usize>,
+        rng: u64,
+        scenario: Arc<F>,
+    ) -> (Vec<(usize, usize)>, Option<String>)
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let ctl = Arc::new(Ctl {
+            st: Mutex::new(SchedState {
+                threads: vec![VtState::Runnable],
+                names: vec!["root".to_string()],
+                mutexes: HashMap::new(),
+                waiters: HashMap::new(),
+                running: None,
+                prefix,
+                pos: 0,
+                trace: Vec::new(),
+                rng,
+                steps: 0,
+                max_steps: cfg.max_steps,
+                live: 1,
+                failure: None,
+            }),
+            cv: Condvar::new(),
+        });
+        let ctl2 = Arc::clone(&ctl);
+        let root = std::thread::Builder::new()
+            .name("model-root".to_string())
+            .spawn(move || run_virtual(ctl2, 0, move || scenario()))
+            .expect("failed to spawn model root thread");
+        {
+            let mut st = lock_ctl(&ctl);
+            reschedule(&mut st);
+            drop(st);
+            ctl.cv.notify_all();
+        }
+        let mut st = lock_ctl(&ctl);
+        loop {
+            if let Some(f) = st.failure.clone() {
+                let trace = st.trace.clone();
+                drop(st);
+                drop(root);
+                return (trace, Some(f));
+            }
+            if st.live == 0 {
+                break;
+            }
+            st = ctl.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        let trace = st.trace.clone();
+        drop(st);
+        let _ = root.join();
+        (trace, None)
+    }
+
+    /// Explores interleavings of `scenario`, which runs once per schedule
+    /// as the root virtual thread (spawn more via
+    /// [`crate::runtime::sync::thread`]). The scenario must be
+    /// deterministic given the schedule: same facade-op sequence per
+    /// thread, no wall-clock branches. Returns after the first failing
+    /// schedule or once the budget is spent.
+    pub fn explore<F>(cfg: ModelConfig, scenario: F) -> Outcome
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let scenario = Arc::new(scenario);
+        let mut out = Outcome {
+            schedules: 0,
+            truncated: false,
+            failure: None,
+        };
+        let mut prefix = Some(Vec::new());
+        while let Some(p) = prefix.take() {
+            if out.schedules >= cfg.max_schedules {
+                out.truncated = true;
+                break;
+            }
+            let (trace, failure) = run_one(&cfg, p, 0, Arc::clone(&scenario));
+            out.schedules += 1;
+            if failure.is_some() {
+                out.failure = failure;
+                return out;
+            }
+            prefix = next_prefix(&trace);
+        }
+        for i in 0..cfg.random_schedules {
+            let salt = (i as u64).wrapping_mul(0x2545_f491_4f6c_dd1d);
+            let seed = cfg.seed.wrapping_add(salt) | 1;
+            let (_, failure) = run_one(&cfg, Vec::new(), seed, Arc::clone(&scenario));
+            out.schedules += 1;
+            if failure.is_some() {
+                out.failure = failure;
+                return out;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::model::{self, ModelConfig};
+    use super::{thread, Arc, Condvar, Mutex};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            max_schedules: 200,
+            random_schedules: 16,
+            seed: 7,
+            max_steps: 10_000,
+        }
+    }
+
+    #[test]
+    fn passthrough_outside_model_runs() {
+        let m = Arc::new(Mutex::new(0usize));
+        let cv = Arc::new(Condvar::new());
+        let m2 = Arc::clone(&m);
+        let cv2 = Arc::clone(&cv);
+        let h = thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 1;
+            cv2.notify_all();
+        });
+        let mut g = m.lock().unwrap();
+        while *g == 0 {
+            g = cv.wait(g).unwrap();
+        }
+        assert_eq!(*g, 1);
+        drop(g);
+        h.join().unwrap();
+        assert_eq!(m.lock().map(|g| *g).unwrap(), 1);
+    }
+
+    #[test]
+    fn model_correct_handshake_passes_all_schedules() {
+        let out = model::explore(tiny(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let setter = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let mut ready = m.lock().unwrap();
+            while !*ready {
+                ready = cv.wait(ready).unwrap();
+            }
+            drop(ready);
+            setter.join().unwrap();
+        });
+        out.assert_ok();
+        assert!(out.schedules > 1, "explorer found only one interleaving");
+    }
+
+    #[test]
+    fn model_is_deterministic() {
+        let run = || {
+            model::explore(tiny(), || {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let p2 = Arc::clone(&pair);
+                let setter = thread::spawn(move || {
+                    let (m, cv) = &*p2;
+                    *m.lock().unwrap() = true;
+                    cv.notify_all();
+                });
+                let (m, cv) = &*pair;
+                let mut ready = m.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+                drop(ready);
+                setter.join().unwrap();
+            })
+        };
+        let a = run();
+        let b = run();
+        a.assert_ok();
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.truncated, b.truncated);
+    }
+
+    #[test]
+    fn model_detects_lost_wakeup_of_unlocked_notify() {
+        // Seeded protocol mutation: the setter publishes the flag and
+        // notifies WITHOUT taking the lock — the classic lost-wakeup bug
+        // the DrainGate fix closed. Some schedule must park the waiter
+        // forever, and the explorer must say so.
+        let out = model::explore(tiny(), || {
+            let flagged = Arc::new(AtomicUsize::new(0));
+            let pair = Arc::new((Mutex::new(()), Condvar::new()));
+            let f2 = Arc::clone(&flagged);
+            let p2 = Arc::clone(&pair);
+            let setter = thread::spawn(move || {
+                f2.store(1, Ordering::SeqCst);
+                p2.1.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock().unwrap();
+            while flagged.load(Ordering::SeqCst) == 0 {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            setter.join().unwrap();
+        });
+        out.assert_fails_with("lost wakeup");
+    }
+
+    #[test]
+    fn model_detects_abba_deadlock() {
+        let out = model::explore(tiny(), || {
+            let a = Arc::new(Mutex::new(0usize));
+            let b = Arc::new(Mutex::new(0usize));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = thread::spawn(move || {
+                let _gb = b2.lock().unwrap();
+                let _ga = a2.lock().unwrap();
+            });
+            {
+                let _ga = a.lock().unwrap();
+                let _gb = b.lock().unwrap();
+            }
+            t.join().unwrap();
+        });
+        out.assert_fails_with("deadlock");
+    }
+
+    #[test]
+    fn model_detects_cap_overshoot_of_unlocked_check() {
+        // Seeded protocol mutation: a bounded counter that checks the cap
+        // OUTSIDE the lock before incrementing inside it — two threads can
+        // both pass the check and overshoot. `flag` must catch it.
+        const CAP: usize = 1;
+        let out = model::explore(tiny(), || {
+            let depth = Arc::new(Mutex::new(0usize));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let d = Arc::clone(&depth);
+                handles.push(thread::spawn(move || {
+                    let full = *d.lock().unwrap() >= CAP;
+                    if !full {
+                        let mut g = d.lock().unwrap();
+                        *g += 1;
+                        if *g > CAP {
+                            model::flag("queue depth exceeds cap");
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        out.assert_fails_with("depth exceeds cap");
+    }
+
+    #[test]
+    fn model_reports_scenario_panics_as_failures() {
+        let out = model::explore(
+            ModelConfig {
+                max_schedules: 4,
+                random_schedules: 0,
+                seed: 1,
+                max_steps: 1_000,
+            },
+            || {
+                let m = Mutex::new(7usize);
+                let g = m.lock().unwrap();
+                assert_eq!(*g, 8, "deliberate scenario failure");
+            },
+        );
+        out.assert_fails_with("panicked");
+    }
+}
