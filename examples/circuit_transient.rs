@@ -6,7 +6,9 @@
 //!
 //! 1. L3 compiles the matrix into an accelerator program, runs the
 //!    cycle-accurate simulator once, and verifies the double-entry check;
-//! 2. the solve service batches 500 time-step requests over worker threads;
+//! 2. the solve service batches 500 time-step requests over worker threads,
+//!    then re-streams the same sequence through a pipelined `SolveSession`
+//!    with a bounded in-flight window;
 //! 3. every numeric solve runs on the selected `SolverBackend` — the
 //!    native parallel level executor by default, or the AOT-compiled
 //!    JAX/Pallas kernels through PJRT when built with `--features pjrt`
@@ -118,6 +120,43 @@ fn main() -> anyhow::Result<()> {
         STEPS as f64 / wall2,
         wall / wall2,
     );
+    // Phase 3: the same stream through a pipelined `SolveSession` — a
+    // bounded window of replies stays in flight so the worker queue never
+    // runs dry between time steps, without buffering all 500 handles.
+    let t3 = Instant::now();
+    let mut session = svc.open_session(8)?;
+    let mut bs3 = Vec::with_capacity(STEPS);
+    let mut replies = Vec::with_capacity(STEPS);
+    for step in 0..STEPS {
+        let b: Vec<f32> = (0..m.n)
+            .map(|i| 1.0 + 0.3 * ((i + step) as f32 * 0.02).cos())
+            .collect();
+        session.submit(b.clone())?;
+        bs3.push(b);
+        while let Some(reply) = session.try_next() {
+            replies.push(reply?);
+        }
+    }
+    for reply in session.drain() {
+        replies.push(reply?);
+    }
+    assert_eq!(replies.len(), STEPS, "one reply per streamed time step");
+    for (step, resp) in replies.iter().enumerate() {
+        if step % 100 == 0 {
+            let want = solve_serial(&m, &bs3[step]);
+            for i in 0..m.n {
+                assert!((resp.x[i] - want[i]).abs() <= 1e-3 * want[i].abs().max(1.0));
+            }
+        }
+    }
+    let wall3 = t3.elapsed().as_secs_f64();
+    println!(
+        "session phase: {STEPS} RHS through one depth-{} session in {:.2}s ({:.1} solves/s)",
+        session.depth(),
+        wall3,
+        STEPS as f64 / wall3,
+    );
+    drop(session);
     let backend = svc.backend_name();
     svc.shutdown();
     println!("E2E OK: all layers composed (compiler -> sim verify -> {backend} numeric path)");

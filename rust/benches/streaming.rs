@@ -1,0 +1,20 @@
+//! `cargo bench --bench streaming` — pipelined solve sessions vs
+//! call-per-solve on the circuit-transient workload (emits
+//! BENCH_streaming.json). Scale via MGD_BENCH_SCALE=small|full (default
+//! small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("streaming", &scale) {
+        Ok(out) => {
+            println!("==== streaming (scale={scale}) ====");
+            println!("{out}");
+            println!("[streaming completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("streaming failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -2,7 +2,8 @@
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
 use super::{
-    admission, backends, concurrency, fig10, fig11, fig9, schedulers, serving, tables, workloads,
+    admission, backends, concurrency, fig10, fig11, fig9, schedulers, serving, streaming, tables,
+    workloads,
 };
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
@@ -83,6 +84,21 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
                 json_path.display(),
             )
         }
+        "streaming" => {
+            let stream_suite = streaming::streaming_suite(scale);
+            let steps = if scale == "small" { 64 } else { 256 };
+            let (t, rows) =
+                streaming::streaming_compare(&stream_suite, steps, streaming::SESSION_DEPTH)?;
+            let json_path = std::path::Path::new("BENCH_streaming.json");
+            streaming::write_json(json_path, &rows)?;
+            format!(
+                "{}\npipelined-session geomean speedup (streaming session over call-per-solve): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                streaming::pipelined_speedup(&rows),
+                json_path.display(),
+            )
+        }
         "table2" => tables::table2(&suite, &arch)?.render(),
         "table3" => tables::table3(&suite, &arch)?.render(),
         "table4" => {
@@ -121,6 +137,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "serving",
     "concurrency",
     "admission",
+    "streaming",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,335 @@
+//! Pipelined-session vs call-per-solve serving (`mgd bench streaming`):
+//! the circuit-transient workload — one factor, a long stream of
+//! time-step RHS — solved through a [`SolveSession`] (admission paid
+//! once, up to `depth` solves in flight) versus one blocking
+//! [`SolveService::solve`] round trip per RHS. Emits the
+//! machine-readable `BENCH_streaming.json` artifact consumed by CI.
+//!
+//! Why the session wins: call-per-solve serializes the full service
+//! round trip — enqueue, worker wake, scalar solve, reply, caller wake —
+//! so the queue is empty every time a worker looks at it. A session
+//! keeps the next RHS already queued, which lets [`ShardQueue::pop`]'s
+//! group extension batch same-matrix neighbors through the backend's
+//! multi-RHS path and overlap solve N's reply/epilogue with N+1's
+//! gather. The headline `pipelined_speedup` is the geometric mean over
+//! the suite.
+//!
+//! Every configuration is verified **bitwise** against [`solve_serial`]
+//! before timing — both modes, every streamed reply — so the table
+//! cannot quietly report a fast-but-wrong pipeline.
+//!
+//! [`ShardQueue::pop`]: crate::coordinator::service
+//! [`SolveSession`]: crate::coordinator::SolveSession
+
+use super::workloads::Workload;
+use crate::coordinator::{ServiceConfig, SolveService};
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::triangular::solve_serial;
+use crate::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
+use crate::util::timing::bench_best;
+use crate::util::Table;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// Pool worker-thread count both modes run with (fixed so the artifact
+/// is comparable across machines with different core counts).
+pub const STREAMING_THREADS: usize = 4;
+
+/// In-session pipeline depth the pipelined mode runs with.
+pub const SESSION_DEPTH: usize = 8;
+
+/// One workload's measurements (milliseconds per solve).
+#[derive(Debug, Clone)]
+pub struct StreamRow {
+    /// Workload name.
+    pub name: &'static str,
+    /// Matrix order.
+    pub n: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Time steps streamed per timed iteration.
+    pub steps: usize,
+    /// Session pipeline depth of the pipelined mode.
+    pub depth: usize,
+    /// Per-solve latency of one blocking call per RHS.
+    pub call_ms: f64,
+    /// Per-solve latency of the pipelined session.
+    pub pipelined_ms: f64,
+}
+
+impl StreamRow {
+    /// Speedup of the pipelined session over call-per-solve
+    /// (> 1 = pipelining wins).
+    pub fn speedup(&self) -> f64 {
+        self.call_ms / self.pipelined_ms.max(1e-12)
+    }
+}
+
+/// Circuit-transient workloads (`gen::circuit`: geometric in-degree,
+/// local wiring — the paper's motivating application). `scale` ∈
+/// {"small", "full"} sizes the matrices.
+pub fn streaming_suite(scale: &str) -> Vec<Workload> {
+    let f = if scale == "small" { 1 } else { 4 };
+    let mk = |name, matrix| Workload { name, matrix };
+    vec![
+        // The example's shape: mid-size, moderately local.
+        mk("transient_mid", gen::circuit(1000 * f, 5, 0.8, GenSeed(401))),
+        // Larger net with sparser coupling: more steps outweigh setup.
+        mk("transient_wide", gen::circuit(2400 * f, 4, 0.7, GenSeed(402))),
+        // Denser coupling: heavier solves, batching has more to amortize.
+        mk("transient_dense", gen::circuit(1500 * f, 8, 0.9, GenSeed(403))),
+    ]
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        batch_size: SESSION_DEPTH,
+        backend: BackendConfig {
+            kind: BackendKind::Native,
+            native: NativeConfig {
+                threads: STREAMING_THREADS,
+                scheduler: SchedulerKind::Mgd,
+                ..NativeConfig::default()
+            },
+            ..BackendConfig::default()
+        },
+        ..ServiceConfig::default()
+    }
+}
+
+/// The transient time-step RHS stream: step `t`'s vector is a smooth
+/// perturbation, deterministic so references can be precomputed.
+fn step_rhs(n: usize, t: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| 1.0 + 0.2 * ((i as f32) * 0.01 + (t as f32) * 0.05).sin())
+        .collect()
+}
+
+/// Bitwise check of one reply stream against the serial references.
+fn verify_stream(name: &str, mode: &str, xs: &[Vec<f32>], want: &[Vec<f32>]) -> Result<()> {
+    ensure!(
+        xs.len() == want.len(),
+        "{mode} on {name}: {} replies for {} steps",
+        xs.len(),
+        want.len(),
+    );
+    for (t, (x, w)) in xs.iter().zip(want).enumerate() {
+        for i in 0..w.len() {
+            ensure!(
+                x[i].to_bits() == w[i].to_bits(),
+                "{mode} not bitwise-serial on {name} step {t} row {i}: {} vs {}",
+                x[i],
+                w[i],
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Measure one suite: `steps` RHS per iteration, call-per-solve vs a
+/// pipelined session of the given `depth`. Both modes are bitwise-
+/// verified against [`solve_serial`] on every step before timing.
+pub fn streaming_compare(
+    suite: &[Workload],
+    steps: usize,
+    depth: usize,
+) -> Result<(Table, Vec<StreamRow>)> {
+    let mut t = Table::new(vec![
+        "workload", "n", "nnz", "steps", "depth", "call ms", "pipelined ms", "speedup",
+    ]);
+    let mut rows = Vec::with_capacity(suite.len());
+    for w in suite {
+        let svc = SolveService::start(&w.matrix, service_cfg())
+            .with_context(|| format!("start service for {}", w.name))?;
+        let bs: Vec<Vec<f32>> = (0..steps).map(|s| step_rhs(w.matrix.n, s)).collect();
+        let want: Vec<Vec<f32>> = bs.iter().map(|b| solve_serial(&w.matrix, b)).collect();
+        // Verification pass: both modes must stream bitwise-serial
+        // replies before either is timed.
+        let xs: Vec<Vec<f32>> = bs
+            .iter()
+            .map(|b| svc.solve(b.clone()).map(|r| r.x))
+            .collect::<Result<_>>()
+            .with_context(|| format!("call-per-solve verify on {}", w.name))?;
+        verify_stream(w.name, "call-per-solve", &xs, &want)?;
+        let mut session = svc.open_session(depth)?;
+        for b in &bs {
+            session.submit(b.clone())?;
+        }
+        let xs: Vec<Vec<f32>> = session
+            .drain()
+            .into_iter()
+            .map(|r| r.map(|resp| resp.x))
+            .collect::<Result<_>>()
+            .with_context(|| format!("pipelined verify on {}", w.name))?;
+        verify_stream(w.name, "pipelined-session", &xs, &want)?;
+        drop(session);
+        // Call-per-solve: one blocking round trip per RHS.
+        let mut err: Option<anyhow::Error> = None;
+        let call_best = bench_best(
+            || {
+                let mut last = 0.0f32;
+                for b in &bs {
+                    match svc.solve(b.clone()) {
+                        Ok(r) => last = r.x[0],
+                        Err(e) => {
+                            err.get_or_insert(e);
+                        }
+                    }
+                }
+                last
+            },
+            2,
+            Duration::from_millis(20),
+        );
+        if let Some(e) = err {
+            return Err(e.context(format!("call-per-solve timing loop failed on {}", w.name)));
+        }
+        // Pipelined: one session per iteration, every RHS submitted
+        // through the bounded pipeline, then drained.
+        let mut err: Option<anyhow::Error> = None;
+        let pipe_best = bench_best(
+            || {
+                let mut last = 0.0f32;
+                let run = || -> Result<f32> {
+                    let mut session = svc.open_session(depth)?;
+                    for b in &bs {
+                        session.submit(b.clone())?;
+                    }
+                    let mut out = 0.0f32;
+                    for reply in session.drain() {
+                        out = reply?.x[0];
+                    }
+                    Ok(out)
+                };
+                match run() {
+                    Ok(x) => last = x,
+                    Err(e) => {
+                        err.get_or_insert(e);
+                    }
+                }
+                last
+            },
+            2,
+            Duration::from_millis(20),
+        );
+        if let Some(e) = err {
+            return Err(e.context(format!("pipelined timing loop failed on {}", w.name)));
+        }
+        let row = StreamRow {
+            name: w.name,
+            n: w.matrix.n,
+            nnz: w.matrix.nnz(),
+            steps,
+            depth,
+            call_ms: call_best.as_secs_f64() * 1e3 / steps as f64,
+            pipelined_ms: pipe_best.as_secs_f64() * 1e3 / steps as f64,
+        };
+        t.row(vec![
+            row.name.to_string(),
+            row.n.to_string(),
+            row.nnz.to_string(),
+            row.steps.to_string(),
+            row.depth.to_string(),
+            format!("{:.4}", row.call_ms),
+            format!("{:.4}", row.pipelined_ms),
+            format!("{:.2}x", row.speedup()),
+        ]);
+        rows.push(row);
+        svc.shutdown();
+    }
+    Ok((t, rows))
+}
+
+/// Geometric-mean pipelined-session speedup over the suite — the
+/// headline ratio CI gates (`ci/bench_baselines/streaming.json`).
+pub fn pipelined_speedup(rows: &[StreamRow]) -> f64 {
+    if rows.is_empty() {
+        return 1.0;
+    }
+    (rows.iter().map(|r| r.speedup().ln()).sum::<f64>() / rows.len() as f64).exp()
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[StreamRow]) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"streaming\",\n");
+    out.push_str(&format!("  \"threads\": {STREAMING_THREADS},\n"));
+    out.push_str(&format!(
+        "  \"pipelined_speedup\": {:.4},\n  \"rows\": [\n",
+        pipelined_speedup(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"n\": {}, \"nnz\": {}, \"steps\": {}, \
+             \"depth\": {}, \"call_ms\": {:.6}, \"pipelined_ms\": {:.6}, \
+             \"speedup\": {:.4}}}{}\n",
+            r.name,
+            r.n,
+            r.nnz,
+            r.steps,
+            r.depth,
+            r.call_ms,
+            r.pipelined_ms,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_streaming.json`).
+pub fn write_json(path: &Path, rows: &[StreamRow]) -> Result<()> {
+    std::fs::write(path, render_json(rows)).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_suite() -> Vec<Workload> {
+        vec![Workload {
+            name: "transient_tiny",
+            matrix: gen::circuit(250, 4, 0.8, GenSeed(411)),
+        }]
+    }
+
+    #[test]
+    fn compare_runs_and_verifies_bitwise() {
+        let (t, rows) = streaming_compare(&tiny_suite(), 8, 4).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(rows.len(), 1);
+        let s = t.render();
+        assert!(s.contains("call ms"));
+        assert!(s.contains("pipelined ms"));
+        for r in &rows {
+            assert!(r.call_ms > 0.0 && r.pipelined_ms > 0.0, "{rows:?}");
+            assert_eq!(r.steps, 8);
+            assert_eq!(r.depth, 4);
+        }
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let (_, rows) = streaming_compare(&tiny_suite(), 6, 2).unwrap();
+        let j = render_json(&rows);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"streaming\""));
+        assert!(j.contains("\"pipelined_speedup\""));
+        assert!(j.contains("\"workload\": \"transient_tiny\""));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn streaming_suite_is_circuit_shaped() {
+        let suite = streaming_suite("small");
+        assert_eq!(suite.len(), 3);
+        for w in &suite {
+            w.matrix.validate().unwrap();
+            assert!(w.name.starts_with("transient_"), "{}", w.name);
+        }
+    }
+}

@@ -11,7 +11,7 @@
 //!                        [--requests N] [--swap-every N] [--backend ...]
 //!                        [--scheduler ...] [--queue-cap N]
 //!                        [--admission block|shed|by-class]
-//!                        [--reserved-latency-workers N]
+//!                        [--reserved-latency-workers N] [--session-depth N]
 //! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|admission|all>
 //!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
@@ -249,6 +249,11 @@ fn run_inner() -> Result<()> {
                 .as_deref()
                 .unwrap_or("block")
                 .parse()?;
+            let session_depth: usize = flag_value(&args, "--session-depth")
+                .as_deref()
+                .unwrap_or("1")
+                .parse()
+                .context("--session-depth")?;
             let cfg = ShardedServiceConfig {
                 shards,
                 workers_per_shard: workers,
@@ -279,11 +284,9 @@ fn run_inner() -> Result<()> {
             // swap of the next matrix (reloaded from its spec) while the
             // stream keeps flowing — the requests straddling the swap are
             // served by whichever fully-formed entry they resolve.
-            let mut rxs = Vec::with_capacity(requests);
-            let mut swaps = 0usize;
-            for i in 0..requests {
+            let maybe_swap = |i: usize, swaps: &mut usize| -> Result<()> {
                 if swap_every > 0 && i > 0 && i % swap_every == 0 {
-                    let (key, _) = &keys[swaps % keys.len()];
+                    let (key, _) = &keys[*swaps % keys.len()];
                     let m = load_matrix(key)?;
                     let entry = svc.swap(key, &m)?;
                     println!(
@@ -291,20 +294,67 @@ fn run_inner() -> Result<()> {
                         entry.shard(),
                         entry.served(),
                     );
-                    swaps += 1;
+                    *swaps += 1;
                 }
-                let (key, n) = &keys[i % keys.len()];
-                // `try_route` so a shed is a structured verdict at submit
-                // time (expected under overload with --admission
-                // shed|by-class) rather than something to fish out of an
-                // error message; admitted replies are awaited strictly.
-                match svc.try_route(key, vec![1.0f32; *n], None)? {
-                    Admission::Admitted(handle) => rxs.push(handle),
-                    Admission::Shed(_) => {}
+                Ok(())
+            };
+            let mut swaps = 0usize;
+            if session_depth > 1 {
+                // Streaming mode: one pipelined `SolveSession` per key.
+                // Admission is checked per submit against the session's
+                // pinned class, up to --session-depth replies stay in
+                // flight per key, and a hot swap surfaces as an epoch
+                // boundary inside the session rather than an error.
+                let mut sessions = Vec::with_capacity(keys.len());
+                for (key, _) in &keys {
+                    sessions.push(svc.open_session(key, session_depth)?);
                 }
-            }
-            for rx in rxs {
-                rx.wait()?;
+                let mut replies = 0usize;
+                for i in 0..requests {
+                    maybe_swap(i, &mut swaps)?;
+                    let idx = i % keys.len();
+                    let n = keys[idx].1;
+                    sessions[idx].submit(vec![1.0f32; n])?;
+                    // Opportunistic harvest keeps per-session backlogs at
+                    // the configured depth instead of buffering the whole
+                    // stream.
+                    for s in &mut sessions {
+                        while let Some(reply) = s.try_next() {
+                            reply?;
+                            replies += 1;
+                        }
+                    }
+                }
+                let mut epochs = 0u64;
+                for s in &mut sessions {
+                    for reply in s.drain() {
+                        reply?;
+                        replies += 1;
+                    }
+                    epochs += s.epoch();
+                }
+                println!(
+                    "streamed {replies} replies through {} sessions (depth {session_depth}); \
+                     {epochs} epoch boundaries observed",
+                    keys.len(),
+                );
+            } else {
+                let mut rxs = Vec::with_capacity(requests);
+                for i in 0..requests {
+                    maybe_swap(i, &mut swaps)?;
+                    let (key, n) = &keys[i % keys.len()];
+                    // `try_route` so a shed is a structured verdict at submit
+                    // time (expected under overload with --admission
+                    // shed|by-class) rather than something to fish out of an
+                    // error message; admitted replies are awaited strictly.
+                    match svc.try_route(key, vec![1.0f32; *n], None)? {
+                        Admission::Admitted(handle) => rxs.push(handle),
+                        Admission::Shed(_) => {}
+                    }
+                }
+                for rx in rxs {
+                    rx.wait()?;
+                }
             }
             let mut t = Table::new(vec!["shard", "served", "errors", "rounds", "solve ms"]);
             for s in svc.shard_stats() {
@@ -386,14 +436,16 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--swap-every N] [--backend ...]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...] [--queue-cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--admission block|shed|by-class]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--reserved-latency-workers N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--reserved-latency-workers N] [--session-depth N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats;\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --swap-every N hot-swaps a matrix every N requests;\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --queue-cap bounds each shard's queue lanes and\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --admission picks the full-lane policy (block parks,\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 shed rejects with a reason reply, by-class sheds bulk\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 only); --reserved-latency-workers keeps pool workers\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 for latency-class solves\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 for latency-class solves; --session-depth > 1 drives\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 the stream through pipelined solve sessions (one per\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 key, that many replies in flight each)\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
@@ -402,7 +454,7 @@ fn print_usage() {
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
          \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
-         \x20 backends schedulers serving concurrency admission"
+         \x20 backends schedulers serving concurrency admission streaming"
     );
 }
 
@@ -509,6 +561,28 @@ mod tests {
             .parse()
             .unwrap();
         assert_eq!(every, 0);
+    }
+
+    #[test]
+    fn session_depth_flag_parses_with_one_default() {
+        let args: Vec<String> = ["serve", "--matrices", "gen:chain:50:1", "--session-depth", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let depth: usize = flag_value(&args, "--session-depth")
+            .as_deref()
+            .unwrap_or("1")
+            .parse()
+            .unwrap();
+        assert_eq!(depth, 4);
+        // Unset means the call-per-solve demo path (no sessions).
+        let none: Vec<String> = vec!["serve".into()];
+        let depth: usize = flag_value(&none, "--session-depth")
+            .as_deref()
+            .unwrap_or("1")
+            .parse()
+            .unwrap();
+        assert_eq!(depth, 1);
     }
 
     #[test]

@@ -30,6 +30,15 @@
 //!   key after draining its in-flight requests, and
 //!   [`ShardedSolveService::swap`] replaces a key's matrix live with an
 //!   atomically published, pre-warmed entry;
+//! - completion is **waker-based**, not thread-per-waiter: replies land
+//!   in one-shot completion cells ([`completion`]) that fire whatever
+//!   readiness the caller registered — blocking waits, `poll`/`on_ready`
+//!   callbacks, or a zero-dependency `Future` adapter — so a parked OS
+//!   thread per in-flight request is no longer the price of waiting;
+//! - streaming clients open a [`SolveSession`]
+//!   ([`ShardedSolveService::open_session`]): key resolution and request
+//!   class pinned once at open, RHS pipelined with bounded in-session
+//!   depth, and a live `swap` observed as a documented epoch boundary;
 //! - per-shard [`ShardCounters`] roll up into service-wide
 //!   [`ServingStats`] (which also surfaces pool-session concurrency);
 //!   per-request accelerator metrics ([`SolveMetrics`]) come from the
@@ -45,13 +54,16 @@
 //! reply, and per-request solver errors are replied to the requester
 //! instead of being dropped.
 
+pub mod completion;
 pub mod metrics;
 pub mod registry;
 pub mod service;
+pub mod session;
 
 pub use metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
 pub use registry::{MatrixRegistry, RegisteredMatrix};
 pub use service::{
     Admission, AdmissionPolicy, ServiceConfig, ShardedServiceConfig, ShardedSolveService,
-    SolveHandle, SolveRequest, SolveResponse, SolveService,
+    SolveFuture, SolveHandle, SolveRequest, SolveResponse, SolveService,
 };
+pub use session::SolveSession;

@@ -6,11 +6,11 @@
 //! [`MatrixRegistry`] (each compiled, simulated and planned exactly once,
 //! then pinned to a shard round-robin), and every
 //! [`SolveRequest`]` { matrix_key, b, reply }` is routed to the shard
-//! that owns its matrix. Each shard drains its own mpsc queue with a
+//! that owns its matrix. Each shard drains its own queue with a
 //! small worker pool, batching same-matrix requests through the
 //! backend's multi-RHS path; responses return through per-request
-//! channels. Per-shard [`ShardCounters`] aggregate into service-wide
-//! [`ServingStats`].
+//! completion cells. Per-shard [`ShardCounters`] aggregate into
+//! service-wide [`ServingStats`].
 //!
 //! The numeric path is a pluggable [`SolverBackend`] chosen at startup by
 //! [`create_backend`] and — by default — **shared across every shard and
@@ -60,15 +60,31 @@
 //! (and its in-flight accounting intact) after a timeout, and the reply
 //! can still be awaited later.
 //!
+//! # Completion without parked threads
+//!
+//! Replies travel through one-shot completion cells
+//! ([`super::completion`]), not a parked mpsc receiver: the shard worker
+//! fires whatever readiness the caller registered. A [`SolveHandle`] can
+//! therefore be consumed four ways — blocking
+//! ([`SolveHandle::wait`]/[`SolveHandle::wait_timeout`], the historical
+//! contract), polled ([`SolveHandle::poll`]/[`SolveHandle::try_wait`]
+//! with a [`completion::Waker`] callback), callback-registered
+//! ([`SolveHandle::on_ready`]), or as a zero-dependency
+//! [`std::future::Future`] ([`SolveHandle::into_future`]). Streaming
+//! clients build on this via [`super::session::SolveSession`]
+//! ([`ShardedSolveService::open_session`]): admission paid once per
+//! session, RHS pipelined with bounded in-session depth.
+//!
 //! [`SolveService`] remains as the single-matrix facade (CLI `mgd solve`,
 //! benches): a 1-shard service with one matrix registered under an
 //! internal key.
 
+use super::completion::{self, Completion, PollState};
 use super::metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
 use super::registry::{MatrixRegistry, RegisteredMatrix};
 use crate::compiler::{CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
-use crate::runtime::sync::{mpsc, Arc, Condvar, Mutex};
+use crate::runtime::sync::{Arc, Condvar, Mutex};
 use crate::runtime::{create_backend, BackendConfig, RequestClass, SolverBackend};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
@@ -197,44 +213,111 @@ pub struct SolveRequest {
     pub matrix_key: String,
     /// Right-hand side (length = the matrix's order).
     pub b: Vec<f32>,
-    /// Response channel.
-    pub reply: mpsc::Sender<Result<SolveResponse>>,
+    /// Producer end of the reply's completion cell
+    /// ([`completion::channel`]); the matching [`Completion`] usually
+    /// lives inside a [`SolveHandle`].
+    pub reply: completion::Completer<Result<SolveResponse>>,
     /// Scheduling class; `None` uses the key's default (itself
     /// [`RequestClass::Bulk`] unless the key was registered or swapped
     /// with an explicit class).
     pub class: Option<RequestClass>,
 }
 
-/// Receiver side of one admitted request: wraps the reply channel with
-/// deadline-aware waits. Obtained from [`ShardedSolveService::submit`],
-/// [`ShardedSolveService::submit_class`] or an [`Admission::Admitted`].
+/// Receiver side of one admitted request: wraps the reply's completion
+/// cell ([`super::completion`]) with blocking waits, waker/poll
+/// readiness, `FnOnce` callbacks and a `Future` adapter. Obtained from
+/// [`ShardedSolveService::submit`], [`ShardedSolveService::submit_class`]
+/// or an [`Admission::Admitted`].
 pub struct SolveHandle {
-    rx: mpsc::Receiver<Result<SolveResponse>>,
+    cell: Completion<Result<SolveResponse>>,
 }
 
 impl SolveHandle {
-    /// Block until the reply arrives. A dropped reply channel (the
-    /// service was torn down around the request — the contract makes
-    /// this unreachable, but the API refuses to hang on it) maps to an
-    /// error.
+    /// Block until the reply arrives. A dropped reply cell (the service
+    /// was torn down around the request — the contract makes this
+    /// unreachable, but the API refuses to hang on it) maps to an error.
     pub fn wait(self) -> Result<SolveResponse> {
-        self.rx
-            .recv()
-            .context("reply channel dropped without a reply")?
+        self.cell
+            .wait()
+            .unwrap_or_else(|| Err(anyhow!("reply channel dropped without a reply")))
     }
 
     /// Wait for the reply with a deadline. `None` means the deadline
     /// passed: the request is **still in flight** (its reply, and its
     /// in-flight accounting toward [`ShardedSolveService::evict`], are
     /// unaffected) and the handle can be waited again — a timeout
-    /// observes slowness, it does not cancel work.
+    /// observes slowness, it does not cancel work. A timed-out handle
+    /// can also re-arm readiness instead: [`SolveHandle::on_ready`] and
+    /// [`SolveHandle::poll`] stay valid after any number of expiries.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<SolveResponse>> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(reply) => Some(reply),
-            Err(mpsc::RecvTimeoutError::Timeout) => None,
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Some(Err(anyhow!("reply channel dropped without a reply")))
-            }
+        match self.cell.wait_timeout(timeout) {
+            PollState::Ready(reply) => Some(reply),
+            PollState::Pending => None,
+            PollState::Gone => Some(Err(anyhow!("reply channel dropped without a reply"))),
+        }
+    }
+
+    /// Non-blocking poll that arms `waker` while the solve is still in
+    /// flight: the waker fires (once, off the completing thread, no
+    /// locks held) when the reply lands, after which the next call
+    /// returns it. Re-polling replaces the previous registration.
+    /// `Some(Err(..))` covers both error replies and a dropped cell.
+    pub fn poll(&self, waker: &completion::Waker) -> Option<Result<SolveResponse>> {
+        match self.cell.poll(waker) {
+            PollState::Ready(reply) => Some(reply),
+            PollState::Pending => None,
+            PollState::Gone => Some(Err(anyhow!("reply channel dropped without a reply"))),
+        }
+    }
+
+    /// Non-blocking look without registering anything: `None` while the
+    /// solve is in flight.
+    pub fn try_wait(&self) -> Option<Result<SolveResponse>> {
+        match self.cell.try_take() {
+            PollState::Ready(reply) => Some(reply),
+            PollState::Pending => None,
+            PollState::Gone => Some(Err(anyhow!("reply channel dropped without a reply"))),
+        }
+    }
+
+    /// Registers a one-shot readiness callback: `f` runs when the reply
+    /// lands (or immediately, on this thread, if it already did). The
+    /// callback only signals readiness — collect the reply itself with
+    /// [`SolveHandle::try_wait`] or a wait.
+    pub fn on_ready<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.cell.on_ready(f)
+    }
+
+    /// Adapts the handle to a [`std::future::Future`] resolving to the
+    /// reply — no async runtime required or provided; bring any executor
+    /// that drives a `std::task::Waker`.
+    pub fn into_future(self) -> SolveFuture {
+        SolveFuture {
+            inner: self.cell.into_future(),
+        }
+    }
+}
+
+/// [`std::future::Future`] adapter over a [`SolveHandle`] (see
+/// [`SolveHandle::into_future`]); a dropped reply cell resolves to the
+/// same error the blocking wait reports.
+pub struct SolveFuture {
+    inner: completion::CompletionFuture<Result<SolveResponse>>,
+}
+
+impl std::future::Future for SolveFuture {
+    type Output = Result<SolveResponse>;
+
+    fn poll(
+        mut self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<Self::Output> {
+        match std::pin::Pin::new(&mut self.inner).poll(cx) {
+            std::task::Poll::Ready(Some(reply)) => std::task::Poll::Ready(reply),
+            std::task::Poll::Ready(None) => std::task::Poll::Ready(Err(anyhow!(
+                "reply channel dropped without a reply"
+            ))),
+            std::task::Poll::Pending => std::task::Poll::Pending,
         }
     }
 }
@@ -289,7 +372,7 @@ impl Drop for InflightGuard {
 /// touch the key map.
 struct ShardJob {
     b: Vec<f32>,
-    reply: mpsc::Sender<Result<SolveResponse>>,
+    reply: completion::Completer<Result<SolveResponse>>,
     /// In-flight mark owning the resolved entry, dropped after the reply
     /// is delivered.
     guard: InflightGuard,
@@ -644,7 +727,7 @@ impl ShardedSolveService {
         b: Vec<f32>,
         class: Option<RequestClass>,
     ) -> Result<Admission> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = completion::channel();
         let outcome = self.admit(SolveRequest {
             matrix_key: key.to_string(),
             b,
@@ -652,7 +735,9 @@ impl ShardedSolveService {
             class,
         })?;
         Ok(match outcome {
-            Admitted::Enqueued | Admitted::Answered => Admission::Admitted(SolveHandle { rx }),
+            Admitted::Enqueued | Admitted::Answered => {
+                Admission::Admitted(SolveHandle { cell: rx })
+            }
             Admitted::Shed(reason) => Admission::Shed(reason),
         })
     }
@@ -732,14 +817,14 @@ impl ShardedSolveService {
         b: Vec<f32>,
         class: Option<RequestClass>,
     ) -> Result<SolveHandle> {
-        let (reply, rx) = mpsc::channel();
+        let (reply, rx) = completion::channel();
         self.admit(SolveRequest {
             matrix_key: key.to_string(),
             b,
             reply,
             class,
         })?;
-        Ok(SolveHandle { rx })
+        Ok(SolveHandle { cell: rx })
     }
 
     /// Solve synchronously against the matrix registered under `key`.
@@ -863,7 +948,7 @@ fn shard_worker(
     }
 }
 
-type Reply = mpsc::Sender<Result<SolveResponse>>;
+type Reply = completion::Completer<Result<SolveResponse>>;
 
 /// Solve one same-matrix, same-class group and reply to every requester.
 /// Errors are propagated to each caller in the group — a worker must
@@ -940,14 +1025,17 @@ fn solve_group(
     }
 }
 
-/// Key the [`SolveService`] facade registers its single matrix under.
-const SINGLE_KEY: &str = "default";
+/// Key the [`SolveService`] facade registers its single matrix under
+/// (shared with [`super::session`] so the facade can open sessions).
+pub(super) const SINGLE_KEY: &str = "default";
 
 /// The single-matrix solve service: a 1-shard [`ShardedSolveService`]
 /// with one matrix registered at startup. This is the compile-once,
 /// serve-many facade used by `mgd solve`, tests and benches.
 pub struct SolveService {
-    inner: ShardedSolveService,
+    /// The wrapped 1-shard service (visible to [`super::session`] so the
+    /// facade can open streaming sessions against [`SINGLE_KEY`]).
+    pub(super) inner: ShardedSolveService,
     /// The compiled accelerator program (public for inspection/benches).
     pub program: Arc<Program>,
     /// Shared per-matrix metrics.
@@ -1024,6 +1112,7 @@ mod tests {
     use crate::arch::ArchConfig;
     use crate::matrix::gen::{self, GenSeed};
     use crate::matrix::triangular::assert_close_to_reference;
+    use crate::runtime::sync::mpsc;
     use crate::runtime::BackendKind;
 
     fn small_cfg() -> ServiceConfig {
@@ -1518,10 +1607,10 @@ mod tests {
         let m = gen::chain(30, GenSeed(141));
         svc.register("m", &m).unwrap();
         svc.close_intake();
-        // The route call errors *and* the reply channel carries a
+        // The route call errors *and* the reply cell carries a
         // descriptive error — the shutdown race can no longer surface as
-        // a bare RecvError on the waiter's side.
-        let (reply, rx) = mpsc::channel();
+        // a bare dropped-cell error on the waiter's side.
+        let (reply, rx) = completion::channel();
         let err = svc
             .route(SolveRequest {
                 matrix_key: "m".to_string(),
@@ -1531,10 +1620,10 @@ mod tests {
             })
             .unwrap_err();
         assert!(format!("{err:#}").contains("service stopped"), "{err:#}");
-        let replied = rx
-            .recv_timeout(std::time::Duration::from_secs(5))
-            .expect("reply contract broken: channel dropped without a reply")
-            .unwrap_err();
+        let replied = match rx.wait_timeout(std::time::Duration::from_secs(5)) {
+            PollState::Ready(reply) => reply.unwrap_err(),
+            other => panic!("reply contract broken: {other:?} instead of an error reply"),
+        };
         assert!(
             format!("{replied:#}").contains("accepts no new requests"),
             "{replied:#}"
@@ -1551,10 +1640,10 @@ mod tests {
 
     /// One tagged queue job against registry key `key`, its in-flight
     /// mark checked out for real so the drop guard's check-in stays
-    /// balanced. The reply receiver is dropped up front: queue-protocol
-    /// tests never reply, and [`ShardQueue`] never touches the channel.
+    /// balanced. The reply consumer is dropped up front: queue-protocol
+    /// tests never reply, and [`ShardQueue`] never touches the cell.
     fn queue_job(reg: &MatrixRegistry, key: &str, tag: f32, class: RequestClass) -> ShardJob {
-        let (reply, _rx) = mpsc::channel();
+        let (reply, _rx) = completion::channel();
         ShardJob {
             b: vec![tag],
             reply,

@@ -1,0 +1,282 @@
+//! Streaming solve sessions: admission paid once, RHS pipelined.
+//!
+//! A [`SolveSession`] is the serving stack's answer to the
+//! transient-simulation pattern (`examples/circuit_transient.rs`): one
+//! factor, thousands of time-step solves. Instead of paying a full
+//! submit/wait round trip per RHS, a client opens a session against a
+//! registered key — resolving the key and pinning the scheduling class
+//! once — and then pipelines RHS after RHS with a bounded number of
+//! solves in flight ([`SolveSession::depth`]). Keeping the next requests
+//! queued while the current one solves lets the shard worker batch
+//! same-matrix neighbors through the backend's multi-RHS path and
+//! overlap solve N's reply/epilogue with N+1's gather, while the bound
+//! keeps a runaway producer from turning the session into an unbounded
+//! queue (the Xie et al. failure mode, PAPERS.md).
+//!
+//! Replies stream back through the waker-based completion layer
+//! ([`super::completion`]) in strict submission order.
+//!
+//! # Epochs: sessions compose with `swap`/`evict`
+//!
+//! Sessions hold no lock on the registry — a key can be hot-swapped or
+//! evicted mid-stream. The session observes a swap as an **epoch
+//! boundary**: before each submit it compares the key's current registry
+//! entry against the lineage it opened on ([`Arc::ptr_eq`] — `swap`
+//! always publishes a fresh entry), and on a mismatch it drains every
+//! in-flight reply (all solved against the old lineage), bumps
+//! [`SolveSession::epoch`], and resumes on the new lineage. Replies
+//! therefore never mix lineages inside one pipeline window: each one is
+//! bitwise-reproducible against `solve_serial` on whichever matrix its
+//! epoch pinned. An *evicted* key ends the stream instead: the next
+//! submit errors, but already-earned replies stay collectable.
+
+use super::registry::RegisteredMatrix;
+use super::service::{
+    Admission, ShardedSolveService, SolveHandle, SolveResponse, SolveService, SINGLE_KEY,
+};
+use crate::runtime::sync::Arc;
+use crate::runtime::RequestClass;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+
+/// A streaming solve session against one registered matrix key; see the
+/// [module docs](self) for the pipelining and epoch model. Created by
+/// [`ShardedSolveService::open_session`]; borrows the service, so drop
+/// the session before shutting the service down.
+pub struct SolveSession<'svc> {
+    svc: &'svc ShardedSolveService,
+    key: String,
+    /// Effective class, pinned at open (explicit or the key's default).
+    class: RequestClass,
+    depth: usize,
+    epoch: u64,
+    /// The registry entry the current epoch solves against.
+    lineage: Arc<RegisteredMatrix>,
+    /// In-flight handles, oldest first (replies harvest in this order).
+    inflight: VecDeque<SolveHandle>,
+    /// Harvested replies not yet handed to the caller, oldest first.
+    ready: VecDeque<Result<SolveResponse>>,
+    submitted: u64,
+}
+
+impl ShardedSolveService {
+    /// Opens a streaming session against `key` under the key's default
+    /// scheduling class, with at most `depth` solves in flight (clamped
+    /// to ≥ 1). Admission state — key resolution, class, lease affinity
+    /// — is pinned here, once, instead of per request.
+    pub fn open_session(&self, key: &str, depth: usize) -> Result<SolveSession<'_>> {
+        self.open_session_class(key, None, depth)
+    }
+
+    /// [`ShardedSolveService::open_session`] with an explicit class
+    /// override (`None` = the key's default).
+    pub fn open_session_class(
+        &self,
+        key: &str,
+        class: Option<RequestClass>,
+        depth: usize,
+    ) -> Result<SolveSession<'_>> {
+        let Some(lineage) = self.registry().get(key) else {
+            bail!(
+                "cannot open session: unknown matrix key {key:?} (registered: [{}])",
+                self.registry().keys().join(", ")
+            );
+        };
+        let class = class.unwrap_or_else(|| lineage.default_class());
+        Ok(SolveSession {
+            svc: self,
+            key: key.to_string(),
+            class,
+            depth: depth.max(1),
+            epoch: 0,
+            lineage,
+            inflight: VecDeque::new(),
+            ready: VecDeque::new(),
+            submitted: 0,
+        })
+    }
+}
+
+impl SolveService {
+    /// Opens a streaming session against the facade's single matrix;
+    /// see [`ShardedSolveService::open_session`].
+    pub fn open_session(&self, depth: usize) -> Result<SolveSession<'_>> {
+        self.inner.open_session(SINGLE_KEY, depth)
+    }
+}
+
+impl SolveSession<'_> {
+    /// Pipelines one more RHS into the session. Blocks only when the
+    /// in-session depth bound is reached (harvesting the oldest reply
+    /// first) or when the shard's admission policy parks the submitter;
+    /// a shed and an evicted key are errors. Replies come back through
+    /// [`SolveSession::next_reply`]/[`SolveSession::try_next`] in
+    /// submission order.
+    pub fn submit(&mut self, b: Vec<f32>) -> Result<()> {
+        self.observe_epoch()?;
+        while self.inflight.len() >= self.depth {
+            self.harvest_oldest();
+        }
+        match self.svc.try_route(&self.key, b, Some(self.class))? {
+            Admission::Admitted(handle) => {
+                self.inflight.push_back(handle);
+                self.submitted += 1;
+                Ok(())
+            }
+            Admission::Shed(reason) => Err(anyhow!(
+                "session submit for {:?} shed: {reason}",
+                self.key
+            )),
+        }
+    }
+
+    /// Epoch maintenance at the submit boundary: a swapped key drains
+    /// the pipeline (old-lineage replies stay collectable, in order)
+    /// and re-pins; an evicted key is an error.
+    fn observe_epoch(&mut self) -> Result<()> {
+        let Some(current) = self.svc.registry().get(&self.key) else {
+            bail!(
+                "session key {:?} was evicted while streaming \
+                 (epoch {}, {} replies still collectable)",
+                self.key,
+                self.epoch,
+                self.inflight.len() + self.ready.len()
+            );
+        };
+        if !Arc::ptr_eq(&current, &self.lineage) {
+            // Epoch boundary: everything in flight was solved against
+            // the old lineage — drain it before the first new-lineage
+            // submit so no pipeline window mixes matrices.
+            while !self.inflight.is_empty() {
+                self.harvest_oldest();
+            }
+            self.lineage = current;
+            self.epoch += 1;
+        }
+        Ok(())
+    }
+
+    /// Blocks on the oldest in-flight handle and buffers its reply.
+    fn harvest_oldest(&mut self) {
+        if let Some(handle) = self.inflight.pop_front() {
+            self.ready.push_back(handle.wait());
+        }
+    }
+
+    /// Next reply in submission order: buffered if available, otherwise
+    /// blocks on the oldest in-flight solve. `None` means the session
+    /// has nothing outstanding (every submit was answered and
+    /// collected).
+    pub fn next_reply(&mut self) -> Option<Result<SolveResponse>> {
+        if self.ready.is_empty() {
+            self.harvest_oldest();
+        }
+        self.ready.pop_front()
+    }
+
+    /// Non-blocking [`SolveSession::next_reply`]: also returns `None`
+    /// when the oldest in-flight solve has not finished yet.
+    pub fn try_next(&mut self) -> Option<Result<SolveResponse>> {
+        if self.ready.is_empty() {
+            if let Some(front) = self.inflight.front() {
+                let reply = front.try_wait()?;
+                self.inflight.pop_front();
+                self.ready.push_back(reply);
+            }
+        }
+        self.ready.pop_front()
+    }
+
+    /// Drains the session: blocks for every outstanding reply and
+    /// returns them (buffered first, then in-flight), in submission
+    /// order.
+    pub fn drain(&mut self) -> Vec<Result<SolveResponse>> {
+        while !self.inflight.is_empty() {
+            self.harvest_oldest();
+        }
+        self.ready.drain(..).collect()
+    }
+
+    /// The registered key this session streams against.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// The in-session pipeline depth bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Epoch counter: 0 at open, +1 per observed swap of the key.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Solves currently in flight plus harvested replies not yet
+    /// collected.
+    pub fn outstanding(&self) -> usize {
+        self.inflight.len() + self.ready.len()
+    }
+
+    /// Total RHS submitted over the session's lifetime.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+}
+
+impl std::fmt::Debug for SolveSession<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveSession")
+            .field("key", &self.key)
+            .field("depth", &self.depth)
+            .field("epoch", &self.epoch)
+            .field("inflight", &self.inflight.len())
+            .field("ready", &self.ready.len())
+            .field("submitted", &self.submitted)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::matrix::gen::{self, GenSeed};
+    use crate::matrix::triangular::solve_serial;
+
+    #[test]
+    fn session_streams_in_order_and_matches_serial_bitwise() {
+        let m = gen::circuit(300, 4, 0.8, GenSeed(9));
+        let svc = SolveService::start(&m, ServiceConfig::default()).unwrap();
+        let mut session = svc.open_session(3).unwrap();
+        let bs: Vec<Vec<f32>> = (0..10)
+            .map(|t| (0..m.n).map(|i| ((i + 3 * t) % 5) as f32 - 2.0).collect())
+            .collect();
+        for b in &bs {
+            session.submit(b.clone()).unwrap();
+        }
+        assert_eq!(session.outstanding(), bs.len(), "nothing collected yet");
+        let replies = session.drain();
+        assert_eq!(replies.len() as u64, session.submitted());
+        assert_eq!(replies.len(), bs.len());
+        for (reply, b) in replies.into_iter().zip(&bs) {
+            let x = reply.unwrap().x;
+            let want = solve_serial(&m, b);
+            for i in 0..m.n {
+                assert_eq!(x[i].to_bits(), want[i].to_bits(), "row {i}");
+            }
+        }
+        assert_eq!(session.epoch(), 0);
+        drop(session);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn open_session_unknown_key_errors() {
+        let m = gen::chain(20, GenSeed(3));
+        let svc = SolveService::start(&m, ServiceConfig::default()).unwrap();
+        let err = svc.inner.open_session("nope", 2).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown matrix key"), "{err:#}");
+        svc.shutdown();
+    }
+}

@@ -54,6 +54,14 @@
 //!   `queue_cap`, an `AdmissionPolicy` (`block|shed|by-class`) decides
 //!   what a full lane does, `try_route` reports the verdict without
 //!   parking, and `SolveHandle::wait_timeout` gives callers deadlines.
+//!   Completion is **waker-based** (`coordinator/completion.rs`): replies
+//!   land in one-shot completion cells, so a `SolveHandle` can block,
+//!   poll with a registered waker, fire an `on_ready` callback, or
+//!   convert to a zero-dependency `Future` — no parked OS thread per
+//!   in-flight request. Streaming clients open a `SolveSession`
+//!   (`coordinator/session.rs`): key lineage and class pinned once, RHS
+//!   pipelined with a bounded in-session depth, hot swaps observed as
+//!   epoch boundaries.
 //!   Per-shard counters aggregate into service-wide `ServingStats`
 //!   (pool-session concurrency, per-class admitted/shed counts, queue
 //!   depth high-water mark). Backend construction failures fail startup,
@@ -67,9 +75,11 @@
 //!   a persistent-pool vs per-solve-spawn serving comparison
 //!   (`mgd bench serving`, emits `BENCH_serving.json`), and an
 //!   overlapped-vs-serialized pool-session comparison
-//!   (`mgd bench concurrency`, emits `BENCH_concurrency.json`), and a
+//!   (`mgd bench concurrency`, emits `BENCH_concurrency.json`), a
 //!   latency-tail-under-bulk-flood admission comparison
-//!   (`mgd bench admission`, emits `BENCH_admission.json`). CI gates
+//!   (`mgd bench admission`, emits `BENCH_admission.json`), and a
+//!   pipelined-session vs call-per-solve streaming comparison
+//!   (`mgd bench streaming`, emits `BENCH_streaming.json`). CI gates
 //!   the headline ratios against `ci/bench_baselines/`.
 //!
 //! ## Cargo features

@@ -33,6 +33,7 @@ use std::fmt;
 use std::ops::{Deref, DerefMut};
 use std::sync::Condvar as StdCondvar;
 use std::sync::Mutex as StdMutex;
+use std::time::Duration;
 
 pub use std::sync::atomic;
 pub use std::sync::{mpsc, Arc, Barrier, OnceLock, RwLock, Weak};
@@ -160,8 +161,8 @@ impl<T> Drop for MutexGuard<'_, T> {
 }
 
 /// Condition variable with the `std::sync::Condvar` surface (the subset
-/// the crate uses: `new`, `wait`, `notify_one`, `notify_all`),
-/// model-instrumented like [`Mutex`].
+/// the crate uses: `new`, `wait`, `wait_timeout`, `notify_one`,
+/// `notify_all`), model-instrumented like [`Mutex`].
 pub struct Condvar {
     inner: StdCondvar,
 }
@@ -207,6 +208,48 @@ impl Condvar {
         }
     }
 
+    /// Like [`Condvar::wait`] but with a deadline: returns after a
+    /// notification *or* once `dur` has elapsed, whichever comes first.
+    ///
+    /// Under a model run there is no wall clock, so the timeout degrades
+    /// to a plain [`Condvar::wait`] (reported as not timed out). Model
+    /// scenarios therefore must not rely on a deadline firing to make
+    /// progress: an unnotified waiter stalls, which the explorer reports
+    /// as a lost wakeup — exactly the signal we want from the checker.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match model::current() {
+            None => {
+                let lock = guard.lock;
+                let g = guard.inner.take().expect("mutex guard already released");
+                match self.inner.wait_timeout(g, dur) {
+                    Ok((g, t)) => {
+                        let timed = WaitTimeoutResult(t.timed_out());
+                        match lock.wrap(false, Ok(g)) {
+                            Ok(g) => Ok((g, timed)),
+                            Err(p) => Err(PoisonError::new((p.into_inner(), timed))),
+                        }
+                    }
+                    Err(p) => {
+                        let (g, t) = p.into_inner();
+                        let timed = WaitTimeoutResult(t.timed_out());
+                        match lock.wrap(false, Err(PoisonError::new(g))) {
+                            Ok(g) => Ok((g, timed)),
+                            Err(p2) => Err(PoisonError::new((p2.into_inner(), timed))),
+                        }
+                    }
+                }
+            }
+            Some(_) => match self.wait(guard) {
+                Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                Err(p) => Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(false)))),
+            },
+        }
+    }
+
     /// Wakes one waiter (FIFO under a model run). A scheduling point.
     pub fn notify_one(&self) {
         if let Some(vt) = model::current() {
@@ -227,6 +270,22 @@ impl Condvar {
 impl Default for Condvar {
     fn default() -> Condvar {
         Condvar::new()
+    }
+}
+
+/// Whether a [`Condvar::wait_timeout`] returned because its deadline
+/// elapsed rather than because of a notification.
+///
+/// Mirrors `std::sync::WaitTimeoutResult` (which has no public
+/// constructor, so the facade's model arm could not fabricate one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// Returns `true` if the wait ended because the deadline elapsed.
+    /// Always `false` under a model run (no wall clock is modeled).
+    pub fn timed_out(&self) -> bool {
+        self.0
     }
 }
 

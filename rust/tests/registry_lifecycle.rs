@@ -10,11 +10,13 @@
 //! - an evicted key can be registered again (and duplicates still
 //!   error while a key is live);
 //! - the reply contract of the admission front end: the shutdown race
-//!   answers with a descriptive error reply (never a bare `RecvError`),
-//!   a shed request's reply names the queue cap, and a `wait_timeout`
-//!   that expires leaves the request — and its in-flight accounting
-//!   toward `evict` — fully intact.
+//!   answers with a descriptive error reply (never a dead completion
+//!   cell), a shed request's reply names the queue cap, and a
+//!   `wait_timeout` that expires leaves the request — and its in-flight
+//!   accounting toward `evict` — fully intact; an expired waiter can
+//!   then re-arm through `on_ready` and still observe the reply.
 
+use mgd_sptrsv::coordinator::completion::{self, PollState};
 use mgd_sptrsv::coordinator::{
     Admission, AdmissionPolicy, ShardedServiceConfig, ShardedSolveService, SolveRequest,
 };
@@ -237,7 +239,7 @@ fn shutdown_race_sends_a_descriptive_error_reply() {
     let m = gen::chain(60, GenSeed(124));
     svc.register("late", &m).unwrap();
     svc.close_intake();
-    let (reply, rx) = mpsc::channel();
+    let (reply, rx) = completion::channel();
     let err = svc
         .route(SolveRequest {
             matrix_key: "late".to_string(),
@@ -247,11 +249,11 @@ fn shutdown_race_sends_a_descriptive_error_reply() {
         })
         .expect_err("routing into a closed service must error");
     assert!(format!("{err:#}").contains("service stopped"), "{err:#}");
-    // The waiter's side: a real reply, not a disconnected channel.
-    let replied = rx
-        .recv_timeout(Duration::from_secs(5))
-        .expect("reply contract broken: channel dropped without a reply")
-        .expect_err("the reply must be the shutdown error");
+    // The waiter's side: a real reply, not an abandoned completion cell.
+    let replied = match rx.wait_timeout(Duration::from_secs(5)) {
+        PollState::Ready(reply) => reply.expect_err("the reply must be the shutdown error"),
+        other => panic!("reply contract broken: {other:?} instead of an error reply"),
+    };
     assert!(
         format!("{replied:#}").contains("accepts no new requests"),
         "{replied:#}"
@@ -370,6 +372,69 @@ fn wait_timeout_expiry_keeps_the_request_and_its_inflight_accounting() {
     assert_eq!(drained.inflight(), 0);
     assert_eq!(drained.served(), 1);
     Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+}
+
+#[test]
+fn wait_timeout_expiry_then_on_ready_rearming_still_completes() {
+    // Regression for the completion layer's rendezvous: a waiter whose
+    // deadline expired must be able to re-arm through `on_ready` and
+    // still observe the reply — the expiry must consume neither the
+    // value nor the registration slot, and the in-flight accounting
+    // toward `evict` stays exact throughout.
+    let (backend, started, release) = GatedBackend::new();
+    let svc = ShardedSolveService::start_with_backend(
+        backend,
+        ShardedServiceConfig {
+            workers_per_shard: 1,
+            ..cfg(1)
+        },
+    );
+    let m = gen::banded(150, 4, 0.6, GenSeed(127));
+    svc.register("rearm", &m).unwrap();
+    let b = vec![1.0f32; m.n];
+    let handle = match svc.try_route("rearm", b.clone(), None).unwrap() {
+        Admission::Admitted(h) => h,
+        Admission::Shed(r) => panic!("nothing should shed on an empty queue: {r}"),
+    };
+    started
+        .recv_timeout(Duration::from_secs(30))
+        .expect("solve never started");
+    // 1. The deadline expires while the backend still holds the solve.
+    assert!(
+        handle.wait_timeout(Duration::from_millis(100)).is_none(),
+        "gated solve finished implausibly fast"
+    );
+    assert_eq!(svc.registry().get("rearm").unwrap().inflight(), 1);
+    // 2. Re-arm through `on_ready`: the registration must stick even
+    // though an earlier waiter already timed out on this cell...
+    let (fired_tx, fired_rx) = mpsc::channel();
+    handle.on_ready(move || {
+        let _ = fired_tx.send(());
+    });
+    // ...and must not fire before the reply exists.
+    assert!(
+        fired_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+        "waker fired before the reply exists"
+    );
+    // 3. Release the gate: the waker fires, and the same handle yields
+    // the bitwise-correct reply.
+    release.send(()).unwrap();
+    fired_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("on_ready waker never fired after an earlier wait_timeout expiry");
+    let resp = handle
+        .wait_timeout(Duration::from_secs(30))
+        .expect("reply must survive the timeout/re-arm sequence")
+        .unwrap();
+    let want = solve_serial(&m, &b);
+    for i in 0..m.n {
+        assert_eq!(resp.x[i].to_bits(), want[i].to_bits(), "row {i}");
+    }
+    // 4. Accounting closed out: evict has nothing left to drain.
+    let entry = svc.evict("rearm").unwrap();
+    assert_eq!(entry.inflight(), 0);
+    assert_eq!(entry.served(), 1);
+    svc.shutdown();
 }
 
 #[test]

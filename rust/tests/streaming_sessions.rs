@@ -1,0 +1,203 @@
+//! Session-level battery for the streaming solve path: interleaved
+//! [`SolveSession`]s across the full generator suite must stream replies
+//! that are **bitwise-identical** to the serial reference, for every
+//! combination of backend thread count and in-session pipeline depth —
+//! including a hot swap landing mid-stream, which a session must absorb
+//! as exactly one epoch boundary (pre-boundary replies match the pre- or
+//! post-swap reference exactly, post-boundary replies the new one).
+//!
+//! [`SolveSession`]: mgd_sptrsv::coordinator::SolveSession
+
+use mgd_sptrsv::coordinator::{ShardedServiceConfig, ShardedSolveService};
+use mgd_sptrsv::matrix::gen::{self, GenSeed};
+use mgd_sptrsv::matrix::triangular::solve_serial;
+use mgd_sptrsv::matrix::CsrMatrix;
+use mgd_sptrsv::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
+
+fn cfg(shards: usize, threads: usize) -> ShardedServiceConfig {
+    ShardedServiceConfig {
+        shards,
+        workers_per_shard: 2,
+        batch_size: 4,
+        backend: BackendConfig {
+            kind: BackendKind::Native,
+            native: NativeConfig {
+                threads,
+                scheduler: SchedulerKind::Mgd,
+                ..NativeConfig::default()
+            },
+            ..BackendConfig::default()
+        },
+        ..ShardedServiceConfig::default()
+    }
+}
+
+/// The eight generator families (`gen::test_suite` is `cfg(test)`-only,
+/// so the parameters are inlined here). Index [`SHALLOW`] is the family
+/// the swap test hot-swaps mid-stream.
+fn families() -> Vec<(&'static str, CsrMatrix)> {
+    vec![
+        ("banded", gen::banded(500, 6, 0.5, GenSeed(1))),
+        ("chain", gen::chain(120, GenSeed(2))),
+        ("circuit", gen::circuit(600, 5, 0.8, GenSeed(3))),
+        ("grid2d", gen::grid2d(20, 20, true, GenSeed(4))),
+        ("shallow", gen::shallow(900, 0.4, GenSeed(5))),
+        ("random_lower", gen::random_lower(400, 2000, GenSeed(6))),
+        ("power_law", gen::power_law(400, 1.1, 120, GenSeed(7))),
+        ("factor_like", gen::factor_like(500, 8, 4, GenSeed(8))),
+    ]
+}
+
+const SHALLOW: usize = 4;
+const STEPS: usize = 6;
+const SWAP_AT: usize = 3;
+
+fn xorshift(state: &mut u64) -> u64 {
+    *state ^= *state << 13;
+    *state ^= *state >> 7;
+    *state ^= *state << 17;
+    *state
+}
+
+/// Deterministic per-(family, depth, step) RHS so every run replays the
+/// same stream.
+fn rhs(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..n)
+        .map(|_| ((xorshift(&mut s) % 9) as f32) - 4.0)
+        .collect()
+}
+
+fn bitwise_eq(x: &[f32], want: &[f32]) -> bool {
+    x.len() == want.len() && x.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+/// One interleaved stream: a session per family, round-robin submits,
+/// the shallow key swapped to `new_shallow` before step [`SWAP_AT`].
+fn run_one_stream(
+    svc: &ShardedSolveService,
+    fams: &[(&'static str, CsrMatrix)],
+    depth: usize,
+    old_shallow: &CsrMatrix,
+    new_shallow: &CsrMatrix,
+) {
+    let mut sessions: Vec<_> = fams
+        .iter()
+        .map(|(key, _)| svc.open_session(key, depth).unwrap())
+        .collect();
+    let mut bs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); fams.len()];
+    for step in 0..STEPS {
+        if step == SWAP_AT {
+            svc.swap("shallow", new_shallow).unwrap();
+        }
+        for (f, (_, m)) in fams.iter().enumerate() {
+            let seed = ((depth as u64) << 32) | ((f as u64) << 8) | (step as u64);
+            let b = rhs(m.n, seed);
+            sessions[f].submit(b.clone()).unwrap();
+            bs[f].push(b);
+        }
+    }
+    for (f, (key, m)) in fams.iter().enumerate() {
+        let replies = sessions[f].drain();
+        assert_eq!(replies.len(), STEPS, "{key} depth {depth}");
+        assert_eq!(sessions[f].submitted(), STEPS as u64);
+        if f == SHALLOW {
+            assert_eq!(
+                sessions[f].epoch(),
+                1,
+                "one swap must land as exactly one epoch boundary (depth {depth})"
+            );
+            for (step, reply) in replies.into_iter().enumerate() {
+                let x = reply.unwrap().x;
+                let is_old = bitwise_eq(&x, &solve_serial(old_shallow, &bs[f][step]));
+                let is_new = bitwise_eq(&x, &solve_serial(new_shallow, &bs[f][step]));
+                if step >= SWAP_AT {
+                    assert!(
+                        is_new,
+                        "step {step} was submitted after the swap published, so it must \
+                         resolve the new matrix exactly (depth {depth})"
+                    );
+                } else {
+                    assert!(
+                        is_old || is_new,
+                        "step {step} reply matches neither lineage bitwise — torn \
+                         epoch boundary? (depth {depth})"
+                    );
+                }
+            }
+        } else {
+            for (step, reply) in replies.into_iter().enumerate() {
+                let x = reply.unwrap().x;
+                assert!(
+                    bitwise_eq(&x, &solve_serial(m, &bs[f][step])),
+                    "{key} step {step} depth {depth} diverged from the serial reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_sessions_match_reference() {
+    let shallow_b = gen::shallow(900, 0.4, GenSeed(55));
+    for threads in [1usize, 2, 8] {
+        let svc = ShardedSolveService::start(cfg(2, threads)).unwrap();
+        let mut fams = families();
+        let shallow_a = fams[SHALLOW].1.clone();
+        for (key, m) in &fams {
+            svc.register(key, m).unwrap();
+        }
+        // Alternate the swap target across depth runs so the old and new
+        // lineages always hold *different* matrices (same sparsity
+        // order, different values — a torn mix matches neither).
+        for (run, depth) in [1usize, 2, 8].into_iter().enumerate() {
+            let old_shallow = fams[SHALLOW].1.clone();
+            let new_shallow = if run % 2 == 0 {
+                shallow_b.clone()
+            } else {
+                shallow_a.clone()
+            };
+            run_one_stream(&svc, &fams, depth, &old_shallow, &new_shallow);
+            fams[SHALLOW].1 = new_shallow;
+        }
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn session_submit_after_evict_errors_cleanly() {
+    let svc = ShardedSolveService::start(cfg(1, 2)).unwrap();
+    let m = gen::chain(80, GenSeed(21));
+    svc.register("gone", &m).unwrap();
+    let mut session = svc.open_session("gone", 2).unwrap();
+    let b = vec![1.0f32; m.n];
+    session.submit(b.clone()).unwrap();
+    // Evict drains the in-flight solve, then unmaps the key.
+    svc.evict("gone").unwrap();
+    let err = session.submit(b.clone()).unwrap_err();
+    assert!(format!("{err:#}").contains("evicted"), "{err:#}");
+    // The reply earned before the evict stays collectable and correct.
+    let x = session
+        .next_reply()
+        .expect("pre-evict reply must survive")
+        .unwrap()
+        .x;
+    assert!(bitwise_eq(&x, &solve_serial(&m, &b)));
+    assert!(session.next_reply().is_none(), "nothing else outstanding");
+    drop(session);
+    svc.shutdown();
+}
+
+#[test]
+fn open_session_unknown_key_lists_registered_keys() {
+    let svc = ShardedSolveService::start(cfg(1, 2)).unwrap();
+    let m = gen::chain(40, GenSeed(22));
+    svc.register("only", &m).unwrap();
+    let err = svc.open_session("nope", 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unknown matrix key") && msg.contains("only"),
+        "{msg}"
+    );
+    svc.shutdown();
+}
