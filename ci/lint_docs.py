@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Docs lint: keep the operator documentation honest.
+
+Usage:
+    python3 ci/lint_docs.py             # lint the tree (exit 1 on violations)
+    python3 ci/lint_docs.py --selftest  # run against ci/fixtures/lint_docs/
+
+Two rules:
+
+A. Links. Every relative markdown link target in the repo's *.md files
+   must resolve to an existing file or directory (fragments are stripped
+   first; absolute http(s)/mailto targets and pure #anchors are skipped).
+   Vendored trees and the lint fixtures themselves are excluded.
+
+B. Flags. Every standalone backticked `--flag` token in the operator
+   docs (README.md and docs/**/*.md) must exist in the CLI source
+   (rust/src/cli.rs) — so a renamed or removed serve/bench flag cannot
+   linger in the knobs tables. Backticked snippets that are whole
+   commands (spaces before the flag) are not matched; a short allowlist
+   covers cargo/python flags the docs legitimately mention.
+
+The lint is intentionally line-based and dependency-free: it runs on the
+stock python3 of the CI image, before any cargo build.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "ci" / "fixtures" / "lint_docs"
+CLI = REPO / "rust" / "src" / "cli.rs"
+
+# Directories never scanned (vendored code, VCS internals, build output,
+# and the deliberately-broken lint fixtures).
+EXCLUDE_PARTS = {".git", "vendor", "target", "fixtures", ".claude"}
+
+# Inline markdown link: [text](target). Images share the syntax.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# A backticked token that *is* a flag: `--name` or `--name VALUE`. A
+# flag buried inside a longer backticked command (preceded by a space)
+# deliberately does not match.
+BACKTICKED_FLAG = re.compile(r"`(--[a-z][a-z0-9-]*)(?: [^`]*)?`")
+
+# Flag-shaped tokens in the CLI source (usage strings, flag_value calls,
+# tests) — the ground truth rule B checks against.
+CLI_FLAG = re.compile(r"--[a-z][a-z0-9-]*")
+
+# Cargo/python flags the docs legitimately mention outside the CLI.
+EXTERNAL_FLAGS = {
+    "--all-targets",
+    "--bench",
+    "--bin",
+    "--check",
+    "--example",
+    "--features",
+    "--help",
+    "--lib",
+    "--no-deps",
+    "--release",
+    "--selftest",
+    "--workspace",
+}
+
+
+def rel(path):
+    return path.relative_to(REPO).as_posix()
+
+
+def cli_flags():
+    return set(CLI_FLAG.findall(CLI.read_text(encoding="utf-8")))
+
+
+def check_flags(path, known, violations):
+    """Rule B on one operator-docs file."""
+    relpath = rel(path) if path.is_relative_to(REPO) else path.name
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines()):
+        for m in BACKTICKED_FLAG.finditer(line):
+            flag = m.group(1)
+            if flag not in known and flag not in EXTERNAL_FLAGS:
+                violations.append(
+                    f"{relpath}:{i + 1}: [flag] documented flag {flag} does "
+                    f"not exist in rust/src/cli.rs"
+                )
+
+
+def check_links(path, violations):
+    """Rule A on one markdown file."""
+    relpath = rel(path) if path.is_relative_to(REPO) else path.name
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines()):
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            plain = target.split("#", 1)[0]
+            if not plain:
+                continue
+            resolved = (path.parent / plain).resolve()
+            if not resolved.exists():
+                violations.append(
+                    f"{relpath}:{i + 1}: [link] relative link target "
+                    f"{target!r} does not resolve"
+                )
+
+
+def operator_docs():
+    docs = [REPO / "README.md"]
+    docs_dir = REPO / "docs"
+    if docs_dir.is_dir():
+        docs.extend(sorted(docs_dir.rglob("*.md")))
+    return [d for d in docs if d.is_file()]
+
+
+def lint_tree():
+    violations = []
+    known = cli_flags()
+    for path in sorted(REPO.rglob("*.md")):
+        if EXCLUDE_PARTS.intersection(path.relative_to(REPO).parts):
+            continue
+        check_links(path, violations)
+    for path in operator_docs():
+        check_flags(path, known, violations)
+    return violations
+
+
+def selftest():
+    """The fixture contract: fail.md trips every rule, pass.md none."""
+    known = cli_flags()
+    failures = []
+    check_links(FIXTURES / "fail.md", failures)
+    check_flags(FIXTURES / "fail.md", known, failures)
+    tags = {v.split("[", 1)[1].split("]", 1)[0] for v in failures}
+    want = {"link", "flag"}
+    if tags != want:
+        print(f"selftest FAILED: fail.md tripped {sorted(tags)}, want {sorted(want)}")
+        for v in failures:
+            print(" ", v)
+        return 1
+    passes = []
+    check_links(FIXTURES / "pass.md", passes)
+    check_flags(FIXTURES / "pass.md", known, passes)
+    if passes:
+        print("selftest FAILED: pass.md tripped rules:")
+        for v in passes:
+            print(" ", v)
+        return 1
+    print(f"selftest OK: fail.md tripped {sorted(want)}; pass.md is clean")
+    return 0
+
+
+def main():
+    if "--selftest" in sys.argv[1:]:
+        return selftest()
+    violations = lint_tree()
+    if violations:
+        print(f"lint_docs: {len(violations)} violation(s)")
+        for v in violations:
+            print(" ", v)
+        return 1
+    print("lint_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+//! `cargo bench --bench skew` — cold-key tail latency under a skewed
+//! hot/cold key mix, cost-model placement vs round-robin (emits
+//! BENCH_skew.json). Scale via MGD_BENCH_SCALE=small|full (default
+//! small).
+
+fn main() {
+    let scale = std::env::var("MGD_BENCH_SCALE").unwrap_or_else(|_| "small".into());
+    let t0 = std::time::Instant::now();
+    match mgd_sptrsv::bench_harness::report::run_experiment("skew", &scale) {
+        Ok(out) => {
+            println!("==== skew (scale={scale}) ====");
+            println!("{out}");
+            println!("[skew completed in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("skew failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

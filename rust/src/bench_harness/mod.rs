@@ -15,6 +15,7 @@ pub mod fig9;
 pub mod report;
 pub mod schedulers;
 pub mod serving;
+pub mod skew;
 pub mod streaming;
 pub mod tables;
 pub mod workloads;

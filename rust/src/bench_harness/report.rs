@@ -2,8 +2,8 @@
 //! experiment id (DESIGN.md §3) to its harness and prints the rows.
 
 use super::{
-    admission, backends, concurrency, fig10, fig11, fig9, schedulers, serving, streaming, tables,
-    workloads,
+    admission, backends, concurrency, fig10, fig11, fig9, schedulers, serving, skew, streaming,
+    tables, workloads,
 };
 use crate::arch::ArchConfig;
 use anyhow::{bail, Result};
@@ -84,6 +84,18 @@ pub fn run_experiment(id: &str, scale: &str) -> Result<String> {
                 json_path.display(),
             )
         }
+        "skew" => {
+            let (t, rows) = skew::skew_compare(scale)?;
+            let json_path = std::path::Path::new("BENCH_skew.json");
+            skew::write_json(json_path, &rows)?;
+            format!(
+                "{}\ncold-probe p99 ratio (round-robin over cost placement): {:.2}x\n\
+                 wrote {}",
+                t.render(),
+                skew::cold_p99_ratio(&rows),
+                json_path.display(),
+            )
+        }
         "streaming" => {
             let stream_suite = streaming::streaming_suite(scale);
             let steps = if scale == "small" { 64 } else { 256 };
@@ -138,6 +150,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "concurrency",
     "admission",
     "streaming",
+    "skew",
 ];
 
 #[cfg(test)]

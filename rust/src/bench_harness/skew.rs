@@ -1,0 +1,411 @@
+//! Cold-key tail latency under a skewed key mix (`mgd bench skew`):
+//! p50/p99 of requests to many cheap **cold** matrices while a flooder
+//! keeps one expensive **hot** matrix backlogged, measured twice on the
+//! same traffic shape — once with the legacy **round-robin** shard
+//! placement (keys land by registration order, blind to their cost, so
+//! some cold keys share the hot key's shard and queue behind its
+//! backlog) and once with the **cost-model** least-loaded placement
+//! (the hot key's registration-time cost weight claims its shard, so
+//! every cold key is placed on the other shard and never waits behind
+//! hot work). Emits the machine-readable `BENCH_skew.json` artifact
+//! consumed by CI's bench-regression gate; the headline is the
+//! round-robin-over-cost cold-probe p99 ratio (> 1 = cost placement
+//! protects the cold tail).
+//!
+//! Every reply — hot and cold, warmup and measured — is verified
+//! **bitwise** against [`solve_serial`] (the MGD contract), so the
+//! comparison cannot quietly trade correctness for placement wins. The
+//! bench also asserts the structural claim directly: under cost
+//! placement no cold key may share the hot key's shard.
+
+use crate::coordinator::{PlacementPolicy, ShardedServiceConfig, ShardedSolveService};
+use crate::matrix::gen::{self, GenSeed};
+use crate::matrix::triangular::solve_serial;
+use crate::matrix::CsrMatrix;
+use crate::runtime::sync::atomic::{AtomicBool, Ordering};
+use crate::runtime::{BackendConfig, BackendKind, NativeConfig, SchedulerKind};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Worker-thread count of the shared native backend (fixed so the
+/// artifact is comparable across machines with different core counts).
+pub const SKEW_THREADS: usize = 4;
+
+/// Shards the skewed service runs with. Two is the minimal shape that
+/// exposes the placement decision: the hot key either owns one shard
+/// (cost) or shares it with half the cold keys (round-robin).
+pub const SKEW_SHARDS: usize = 2;
+
+/// Hot requests the flooder keeps outstanding (in queue or in service),
+/// enough to keep the hot shard's single worker permanently busy.
+const FLOOD_WINDOW: usize = 6;
+
+/// One placement mode's measurements.
+#[derive(Debug, Clone)]
+pub struct SkewRow {
+    /// `"round_robin"` (registration-order placement, the baseline) or
+    /// `"cost"` (least-loaded by registration-time cost weight).
+    pub mode: &'static str,
+    /// Cold-key probe requests measured.
+    pub probes: u64,
+    /// Median cold-probe latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile cold-probe latency, milliseconds.
+    pub p99_ms: f64,
+    /// Hot-key requests served to completion during the run (the
+    /// throughput side of the headline: placement must not starve the
+    /// hot key to buy its tail).
+    pub hot_served: u64,
+    /// Cold keys that landed on the hot key's shard (0 under cost
+    /// placement — asserted, not just reported).
+    pub colds_with_hot: u64,
+}
+
+/// The skewed suite: one expensive hot matrix plus several cheap cold
+/// ones. All shallow scattered-dependency DAGs, so every solve opens a
+/// real multi-worker MGD pool session and the hot solves are long
+/// enough for a backlog to hurt anything queued behind them. `"tiny"`
+/// is the unit-test scale (seconds of `cargo test` budget, not a
+/// measurement); CI and the CLI use `"small"`/`"full"`.
+fn suite(scale: &str) -> (CsrMatrix, Vec<CsrMatrix>) {
+    let (hot_n, cold_n) = match scale {
+        "tiny" => (1000, 300),
+        "small" => (2800, 500),
+        _ => (5600, 700),
+    };
+    let hot = gen::shallow(hot_n, 0.4, GenSeed(601));
+    let colds = (0..4)
+        .map(|k| gen::shallow(cold_n, 0.4, GenSeed(610 + k)))
+        .collect();
+    (hot, colds)
+}
+
+/// Cold probe count per mode.
+fn probe_count(scale: &str) -> usize {
+    match scale {
+        "tiny" => 12,
+        "small" => 40,
+        _ => 100,
+    }
+}
+
+fn service_config(placement: PlacementPolicy) -> ShardedServiceConfig {
+    ShardedServiceConfig {
+        shards: SKEW_SHARDS,
+        // One worker per shard: a shard occupied by a hot solve makes
+        // every co-located cold request wait, which is exactly the
+        // contention placement is supposed to avoid.
+        workers_per_shard: 1,
+        batch_size: 4,
+        backend: BackendConfig {
+            kind: BackendKind::Native,
+            native: NativeConfig {
+                threads: SKEW_THREADS,
+                scheduler: SchedulerKind::Mgd,
+                ..NativeConfig::default()
+            },
+            ..BackendConfig::default()
+        },
+        placement,
+        ..ShardedServiceConfig::default()
+    }
+}
+
+/// A fixed cycle of RHS vectors with their precomputed bitwise
+/// references, so the flooder and the probes can verify every reply
+/// cheaply.
+struct VerifiedRhs {
+    bs: Vec<Vec<f32>>,
+    refs: Vec<Vec<f32>>,
+}
+
+impl VerifiedRhs {
+    fn new(m: &CsrMatrix, variants: usize, salt: usize) -> Self {
+        let bs: Vec<Vec<f32>> = (0..variants)
+            .map(|k| {
+                (0..m.n)
+                    .map(|i| ((i + 3 * k + salt) % 9) as f32 - 4.0)
+                    .collect()
+            })
+            .collect();
+        let refs = bs.iter().map(|b| solve_serial(m, b)).collect();
+        Self { bs, refs }
+    }
+
+    fn verify(&self, k: usize, x: &[f32], what: &str) -> Result<()> {
+        let want = &self.refs[k % self.refs.len()];
+        ensure!(x.len() == want.len(), "{what}: wrong solution length");
+        for i in 0..want.len() {
+            ensure!(
+                x[i].to_bits() == want[i].to_bits(),
+                "{what}: reply not bitwise-serial at row {i}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Run one placement mode: register hot-then-colds, flood the hot key
+/// from a background thread, and time sequential cold probes cycled over
+/// the cold keys in a seeded shuffle. Every reply is verified bitwise.
+fn run_mode(placement: PlacementPolicy, scale: &str) -> Result<SkewRow> {
+    let (hot_m, cold_ms) = suite(scale);
+    let svc = Arc::new(
+        ShardedSolveService::start(service_config(placement)).context("start skew service")?,
+    );
+    // Registration order is the round-robin baseline's whole story: hot
+    // first, then the colds, alternating shards blindly. The cost mode
+    // sees the same order but places by accumulated weight.
+    let hot_entry = svc.register("hot", &hot_m)?;
+    let mut colds_with_hot = 0u64;
+    let mut cold_keys = Vec::with_capacity(cold_ms.len());
+    for (k, m) in cold_ms.iter().enumerate() {
+        let key = format!("cold{k}");
+        let entry = svc.register(&key, m)?;
+        if entry.shard() == hot_entry.shard() {
+            colds_with_hot += 1;
+        }
+        cold_keys.push(key);
+    }
+    if placement == PlacementPolicy::Cost {
+        ensure!(
+            colds_with_hot == 0,
+            "cost placement co-located {colds_with_hot} cold keys with the hot key"
+        );
+    }
+    let hot_rhs = Arc::new(VerifiedRhs::new(&hot_m, 4, 0));
+    let cold_rhs: Vec<VerifiedRhs> = cold_ms.iter().map(|m| VerifiedRhs::new(m, 4, 1)).collect();
+
+    // Warm every path (plans, pool, caches) and verify once before any
+    // timing.
+    let warm = svc.solve("hot", hot_rhs.bs[0].clone())?;
+    hot_rhs.verify(0, &warm.x, "hot warmup")?;
+    for (key, rhs) in cold_keys.iter().zip(&cold_rhs) {
+        let warm = svc.solve(key, rhs.bs[0].clone())?;
+        rhs.verify(0, &warm.x, "cold warmup")?;
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let flooder = {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        let hot_rhs = Arc::clone(&hot_rhs);
+        std::thread::spawn(move || -> Result<u64> {
+            let mut pending = VecDeque::new();
+            let mut served = 0u64;
+            let mut k = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                pending
+                    .push_back((k, svc.submit("hot", hot_rhs.bs[k % hot_rhs.bs.len()].clone())?));
+                if pending.len() >= FLOOD_WINDOW {
+                    let (kk, handle) = pending.pop_front().expect("window is non-empty");
+                    hot_rhs.verify(kk, &handle.wait()?.x, "hot reply")?;
+                    served += 1;
+                }
+                k += 1;
+            }
+            for (kk, handle) in pending {
+                hot_rhs.verify(kk, &handle.wait()?.x, "hot drain")?;
+                served += 1;
+            }
+            Ok(served)
+        })
+    };
+
+    // Let the flood build a steady hot backlog before probing.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+
+    // Sequential cold probes in a seeded shuffle across the cold keys —
+    // the "many cold keys" side of the skewed mix. Under round-robin the
+    // probes to co-located keys queue behind the hot backlog; under cost
+    // placement no cold key shares that shard.
+    let mut rng = crate::util::XorShift64::new(0x5EED_5EE7);
+    let mut latencies_ms = Vec::with_capacity(probe_count(scale));
+    for p in 0..probe_count(scale) {
+        let which = rng.range(0, cold_keys.len());
+        let b = cold_rhs[which].bs[p % cold_rhs[which].bs.len()].clone();
+        let t0 = Instant::now();
+        let resp = svc.solve(&cold_keys[which], b)?;
+        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        cold_rhs[which].verify(p, &resp.x, "cold reply")?;
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    let hot_served = flooder.join().expect("flooder thread panicked")?;
+    let row = SkewRow {
+        mode: match placement {
+            PlacementPolicy::Cost => "cost",
+            PlacementPolicy::RoundRobin => "round_robin",
+        },
+        probes: latencies_ms.len() as u64,
+        p50_ms: percentile(&mut latencies_ms.clone(), 0.50),
+        p99_ms: percentile(&mut latencies_ms, 0.99),
+        hot_served,
+        colds_with_hot,
+    };
+    Arc::try_unwrap(svc)
+        .ok()
+        .expect("flooder joined; sole owner")
+        .shutdown();
+    Ok(row)
+}
+
+/// Nearest-rank percentile (q in [0, 1]) of `values`; sorts in place.
+fn percentile(values: &mut [f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let idx = ((values.len() - 1) as f64 * q).ceil() as usize;
+    values[idx.min(values.len() - 1)]
+}
+
+/// Run both placement modes and render the comparison. Round-robin runs
+/// first (the baseline), each mode on a fresh service.
+pub fn skew_compare(scale: &str) -> Result<(crate::util::Table, Vec<SkewRow>)> {
+    let rows = vec![
+        run_mode(PlacementPolicy::RoundRobin, scale)?,
+        run_mode(PlacementPolicy::Cost, scale)?,
+    ];
+    let mut t = crate::util::Table::new(vec![
+        "placement",
+        "cold probes",
+        "p50 ms",
+        "p99 ms",
+        "hot served",
+        "colds w/ hot",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.mode.to_string(),
+            r.probes.to_string(),
+            format!("{:.4}", r.p50_ms),
+            format!("{:.4}", r.p99_ms),
+            r.hot_served.to_string(),
+            r.colds_with_hot.to_string(),
+        ]);
+    }
+    Ok((t, rows))
+}
+
+/// Headline ratio the CI bench-regression gate watches: round-robin cold
+/// p99 over cost-placement cold p99 (> 1 = cost placement protects the
+/// cold tail under a skewed mix).
+pub fn cold_p99_ratio(rows: &[SkewRow]) -> f64 {
+    let rr = rows.iter().find(|r| r.mode == "round_robin");
+    let cost = rows.iter().find(|r| r.mode == "cost");
+    match (rr, cost) {
+        (Some(r), Some(c)) => r.p99_ms / c.p99_ms.max(1e-9),
+        _ => 1.0,
+    }
+}
+
+/// Render the rows as a self-describing JSON document.
+pub fn render_json(rows: &[SkewRow]) -> String {
+    let mut out = String::from("{\n  \"experiment\": \"skew\",\n");
+    out.push_str(&format!("  \"threads\": {SKEW_THREADS},\n"));
+    out.push_str(&format!("  \"shards\": {SKEW_SHARDS},\n"));
+    out.push_str(&format!(
+        "  \"skew_p99_ratio\": {:.4},\n  \"rows\": [\n",
+        cold_p99_ratio(rows)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"probes\": {}, \"p50_ms\": {:.6}, \"p99_ms\": {:.6}, \
+             \"hot_served\": {}, \"colds_with_hot\": {}}}{}\n",
+            r.mode,
+            r.probes,
+            r.p50_ms,
+            r.p99_ms,
+            r.hot_served,
+            r.colds_with_hot,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON artifact (the CI-consumed `BENCH_skew.json`).
+pub fn write_json(path: &Path, rows: &[SkewRow]) -> Result<()> {
+    std::fs::write(path, render_json(rows)).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let mut v = vec![5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&mut v.clone(), 0.0), 1.0);
+        assert_eq!(percentile(&mut v.clone(), 0.5), 3.0);
+        assert_eq!(percentile(&mut v, 0.99), 5.0);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let rows = vec![
+            SkewRow {
+                mode: "round_robin",
+                probes: 40,
+                p50_ms: 1.0,
+                p99_ms: 8.0,
+                hot_served: 120,
+                colds_with_hot: 2,
+            },
+            SkewRow {
+                mode: "cost",
+                probes: 40,
+                p50_ms: 0.5,
+                p99_ms: 2.0,
+                hot_served: 115,
+                colds_with_hot: 0,
+            },
+        ];
+        let j = render_json(&rows);
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'));
+        assert!(j.contains("\"experiment\": \"skew\""));
+        assert!(j.contains("\"skew_p99_ratio\": 4.0000"));
+        assert!(j.contains("\"colds_with_hot\": 0"));
+        // Balanced braces/brackets (hand-rolled writer smoke check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        let r = cold_p99_ratio(&rows);
+        assert!((r - 4.0).abs() < 1e-9, "{r}");
+        assert_eq!(cold_p99_ratio(&rows[..1]), 1.0, "missing mode = neutral");
+    }
+
+    /// End-to-end smoke at the dedicated `"tiny"` test scale: both
+    /// placement modes run, every reply verifies bitwise (inside
+    /// `run_mode`), cost placement provably keeps every cold key off the
+    /// hot shard while round-robin provably co-locates some, and the
+    /// ratio is a positive finite number. The *size* of the ratio is
+    /// asserted by the CI gate against the pinned baseline, not here —
+    /// unit tests on loaded machines would flake.
+    #[test]
+    fn skew_compare_smoke() {
+        let (t, rows) = skew_compare("tiny").unwrap();
+        assert_eq!(rows.len(), 2);
+        let s = t.render();
+        assert!(s.contains("round_robin") && s.contains("cost"));
+        for r in &rows {
+            assert!(r.probes > 0);
+            assert!(r.p50_ms >= 0.0 && r.p99_ms >= r.p50_ms);
+            assert!(r.hot_served > 0, "flood never completed a hot solve");
+        }
+        let rr = &rows[0];
+        let cost = &rows[1];
+        assert!(
+            rr.colds_with_hot > 0,
+            "round-robin placed no cold key with the hot key — the baseline lost its contention"
+        );
+        assert_eq!(cost.colds_with_hot, 0);
+        let ratio = cold_p99_ratio(&rows);
+        assert!(ratio.is_finite() && ratio > 0.0, "{ratio}");
+    }
+}

@@ -12,7 +12,8 @@
 //!                        [--scheduler ...] [--queue-cap N]
 //!                        [--admission block|shed|by-class]
 //!                        [--reserved-latency-workers N] [--session-depth N]
-//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|admission|all>
+//!                        [--placement cost|round-robin] [--bulk-aging-ms N]
+//! mgd bench    <fig9a|fig9bc|fig9def|fig10|fig11|fig12|table2|table3|table4|backends|schedulers|serving|concurrency|admission|streaming|skew|all>
 //!                        [--scale small|full]
 //! mgd stats    <matrix>                                 — Table III row for one matrix
 //! ```
@@ -21,8 +22,8 @@ use crate::arch::ArchConfig;
 use crate::bench_harness::report;
 use crate::compiler::{compile, CompilerConfig};
 use crate::coordinator::{
-    Admission, AdmissionPolicy, ServiceConfig, ShardedServiceConfig, ShardedSolveService,
-    SolveService,
+    Admission, AdmissionPolicy, PlacementPolicy, ServiceConfig, ShardedServiceConfig,
+    ShardedSolveService, SolveService,
 };
 use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
@@ -254,12 +255,23 @@ fn run_inner() -> Result<()> {
                 .unwrap_or("1")
                 .parse()
                 .context("--session-depth")?;
+            let placement: PlacementPolicy = flag_value(&args, "--placement")
+                .as_deref()
+                .unwrap_or("cost")
+                .parse()?;
+            let bulk_aging_ms: u64 = flag_value(&args, "--bulk-aging-ms")
+                .as_deref()
+                .unwrap_or("0")
+                .parse()
+                .context("--bulk-aging-ms")?;
             let cfg = ShardedServiceConfig {
                 shards,
                 workers_per_shard: workers,
                 backend: backend_config(&args)?,
                 queue_cap,
                 admission,
+                placement,
+                bulk_aging_ms,
                 ..ShardedServiceConfig::default()
             };
             let svc = ShardedSolveService::start(cfg)?;
@@ -267,11 +279,17 @@ fn run_inner() -> Result<()> {
             for spec in specs.split(',').filter(|s| !s.is_empty()) {
                 let m = load_matrix(spec)?;
                 let entry = svc.register(spec, &m)?;
+                let sched = entry
+                    .scheduler_choice()
+                    .map(|k| k.to_string())
+                    .unwrap_or_else(|| "backend-default".into());
                 println!(
-                    "registered {spec:?} (n={}, nnz={}) on shard {}",
+                    "registered {spec:?} (n={}, nnz={}, cost weight {}) on shard {} \
+                     ({placement} placement, scheduler {sched})",
                     m.n,
                     m.nnz(),
-                    entry.shard()
+                    entry.cost().weight(),
+                    entry.shard(),
                 );
                 keys.push((spec.to_string(), m.n));
             }
@@ -381,13 +399,14 @@ fn run_inner() -> Result<()> {
                 agg.peak_concurrency,
             );
             println!(
-                "admission {admission} (queue cap {queue_cap}): \
+                "admission {admission} (queue cap {queue_cap}, bulk aging {bulk_aging_ms} ms): \
                  {} latency + {} bulk admitted, {} latency + {} bulk shed, \
-                 peak queue depth {}",
+                 {} bulk aged past latency, peak queue depth {}",
                 agg.admitted_latency,
                 agg.admitted_bulk,
                 agg.shed_latency,
                 agg.shed_bulk,
+                agg.aged_bulk,
                 agg.peak_queue_depth,
             );
             svc.shutdown();
@@ -437,6 +456,7 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...] [--queue-cap N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--admission block|shed|by-class]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--reserved-latency-workers N] [--session-depth N]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--placement cost|round-robin] [--bulk-aging-ms N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 sharded multi-matrix service demo + per-shard stats;\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --swap-every N hot-swaps a matrix every N requests;\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 --queue-cap bounds each shard's queue lanes and\n\
@@ -445,16 +465,21 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 only); --reserved-latency-workers keeps pool workers\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 for latency-class solves; --session-depth > 1 drives\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 the stream through pipelined solve sessions (one per\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 key, that many replies in flight each)\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 key, that many replies in flight each); --placement\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 picks cost-model least-loaded (default) or legacy\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 round-robin shard assignment; --bulk-aging-ms bounds\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 how long by-class can hold a bulk job behind latency\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 work before promoting it (0 = never promote)\n\
          \x20 mgd bench   <experiment|all> [--scale small|full]\n\
          \x20 mgd stats   <matrix>             Table III characteristics\n\
          matrix: path to MatrixMarket file or gen:<family>:<n>:<seed>\n\
          families: circuit banded grid powerlaw shallow chain\n\
          backend: native (default serve path), pjrt (needs --features pjrt + artifacts), auto\n\
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
-         \x20 medium-granularity dataflow), auto (per-matrix by level-width stats)\n\
+         \x20 medium-granularity dataflow), auto (per-matrix cost model: barriered vs\n\
+         \x20 barrier-free cycle comparison over the level-width profile)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
-         \x20 backends schedulers serving concurrency admission streaming"
+         \x20 backends schedulers serving concurrency admission streaming skew"
     );
 }
 
@@ -633,6 +658,57 @@ mod tests {
         assert_eq!(backend_config(&none).unwrap().native.reserved_latency_workers, 0);
         // Unknown policies error with the accepted set.
         assert!("drop".parse::<AdmissionPolicy>().is_err());
+    }
+
+    #[test]
+    fn placement_flag_parses_with_cost_default() {
+        let args: Vec<String> = [
+            "serve",
+            "--matrices",
+            "gen:chain:50:1",
+            "--placement",
+            "round-robin",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let placement: PlacementPolicy = flag_value(&args, "--placement")
+            .as_deref()
+            .unwrap_or("cost")
+            .parse()
+            .unwrap();
+        assert_eq!(placement, PlacementPolicy::RoundRobin);
+        // Unset means cost-model least-loaded placement.
+        let none: Vec<String> = vec!["serve".into()];
+        let placement: PlacementPolicy = flag_value(&none, "--placement")
+            .as_deref()
+            .unwrap_or("cost")
+            .parse()
+            .unwrap();
+        assert_eq!(placement, PlacementPolicy::Cost);
+        assert!("hash".parse::<PlacementPolicy>().is_err());
+    }
+
+    #[test]
+    fn bulk_aging_flag_parses_with_zero_default() {
+        let args: Vec<String> = ["serve", "--matrices", "gen:chain:50:1", "--bulk-aging-ms", "25"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let aging: u64 = flag_value(&args, "--bulk-aging-ms")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(aging, 25);
+        // Unset means strict latency-before-bulk draining (no promotion).
+        let none: Vec<String> = vec!["serve".into()];
+        let aging: u64 = flag_value(&none, "--bulk-aging-ms")
+            .as_deref()
+            .unwrap_or("0")
+            .parse()
+            .unwrap();
+        assert_eq!(aging, 0);
     }
 
     #[test]

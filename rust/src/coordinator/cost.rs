@@ -1,0 +1,259 @@
+//! Per-matrix cost model of the serving runtime.
+//!
+//! Registration already produces everything a placement or scheduling
+//! decision could want — the level plan (depth, per-level widths), the
+//! matrix shape (order, nonzeros) and a cycle-accurate simulator run —
+//! and until now all of it sat unused in the registry entry while shard
+//! assignment stayed round-robin and the `auto` scheduler used one
+//! global width heuristic. [`MatrixCost`] condenses those inputs into a
+//! small, cheaply clonable profile that drives three decisions:
+//!
+//! - **Placement** — [`MatrixCost::weight`] is the expected per-solve
+//!   cost a key adds to its shard; the registry's least-loaded placement
+//!   ([`PlacementPolicy::Cost`]) and its `rebalance()` migrations
+//!   accumulate these weights per shard.
+//! - **Scheduling** — [`MatrixCost::scheduler_for`] applies the same
+//!   barriered-vs-barrier-free cost comparison the native backend's
+//!   `auto` resolution uses ([`recommend_scheduler`]), from the stored
+//!   parallelism profile.
+//! - **Capacity** — [`MatrixCost::memory_bytes`] estimates the resident
+//!   footprint of serving the key (matrix + plan + solve slabs).
+//!
+//! # Example
+//!
+//! A deep, narrow band is barrier-dominated and cheap; a wide, shallow
+//! DAG amortizes its few barriers and carries more work per solve. The
+//! cost model separates them on both axes — and a least-loaded placement
+//! loop over the weights spreads them across shards:
+//!
+//! ```
+//! use mgd_sptrsv::coordinator::MatrixCost;
+//! use mgd_sptrsv::matrix::gen::{self, GenSeed};
+//! use mgd_sptrsv::runtime::{LevelSolver, SchedulerKind};
+//!
+//! // A pure chain: one row per level — deep and narrow.
+//! let narrow = MatrixCost::from_plan(&LevelSolver::new(&gen::chain(400, GenSeed(1))));
+//! // A shallow DAG: a handful of very wide levels.
+//! let wide = MatrixCost::from_plan(&LevelSolver::new(&gen::shallow(2000, 0.4, GenSeed(2))));
+//!
+//! // The parallelism profile drives the per-matrix scheduler choice:
+//! assert_eq!(narrow.scheduler_for(4), SchedulerKind::Mgd);
+//! assert_eq!(wide.scheduler_for(4), SchedulerKind::Level);
+//! assert!(narrow.critical_path() > wide.critical_path());
+//!
+//! // ...and the weight drives placement. Least-loaded: each key lands
+//! // on the shard with the smallest accumulated cost, so the two keys
+//! // end up on different shards instead of wherever round-robin points.
+//! let mut loads = [0u64; 2];
+//! for cost in [&wide, &narrow] {
+//!     let shard = if loads[0] <= loads[1] { 0 } else { 1 };
+//!     loads[shard] += cost.weight();
+//! }
+//! assert!(loads[0] > 0 && loads[1] > 0);
+//! assert!(wide.weight() > narrow.weight());
+//! ```
+
+use crate::runtime::{recommend_scheduler, LevelSolver, SchedulerKind};
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+/// How the registry assigns a freshly registered key to a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Least-loaded by accumulated [`MatrixCost::weight`] (ties go to the
+    /// lowest shard index). The default.
+    #[default]
+    Cost,
+    /// Registration-order round-robin, blind to the request mix — the
+    /// pre-cost-model behavior, kept as an opt-out and as the bench
+    /// baseline (`mgd bench skew` measures the difference).
+    RoundRobin,
+}
+
+impl FromStr for PlacementPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "cost" => Ok(Self::Cost),
+            "round-robin" | "rr" => Ok(Self::RoundRobin),
+            other => bail!("unknown placement {other:?} (expected cost|round-robin)"),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Cost => "cost",
+            Self::RoundRobin => "round-robin",
+        })
+    }
+}
+
+/// Cost profile of one registered matrix, derived at registration time
+/// from the level plan and (when available) the registration-time
+/// simulator run. Cheap to clone; a swap or migration carries it along.
+#[derive(Debug, Clone)]
+pub struct MatrixCost {
+    n: usize,
+    nnz: usize,
+    /// Per-level row counts of the level decomposition, in dependency
+    /// order — the parallelism profile everything else derives from.
+    level_widths: Vec<u32>,
+    /// Estimated cycles per solve: the cycle-accurate simulator's count
+    /// when the matrix went through registration
+    /// ([`MatrixCost::with_measured_cycles`]), an analytic work estimate
+    /// otherwise. Never zero.
+    est_cycles: u64,
+}
+
+impl MatrixCost {
+    /// Build the profile from a prepared plan alone, with an analytic
+    /// cycle estimate (each row costs its solve, each off-diagonal edge
+    /// a multiply-accumulate). Registration refines the estimate with
+    /// the measured simulator run via
+    /// [`MatrixCost::with_measured_cycles`].
+    pub fn from_plan(solver: &LevelSolver) -> Self {
+        let m = solver.matrix();
+        let est_cycles = (m.n as u64 + 2 * m.off_diag_nnz() as u64).max(1);
+        Self {
+            n: m.n,
+            nnz: m.nnz(),
+            level_widths: solver.plans().iter().map(|p| p.rows.len() as u32).collect(),
+            est_cycles,
+        }
+    }
+
+    /// Replace the analytic cycle estimate with a measured count (the
+    /// registration-time cycle-accurate simulation). Zero is clamped to
+    /// one so a weight can never vanish from the placement accounting.
+    pub fn with_measured_cycles(mut self, cycles: u64) -> Self {
+        self.est_cycles = cycles.max(1);
+        self
+    }
+
+    /// Matrix order.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored nonzeros (diagonal included).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Length of the critical path: the level count — no schedule on any
+    /// number of workers can finish in fewer dependent steps.
+    pub fn critical_path(&self) -> usize {
+        self.level_widths.len()
+    }
+
+    /// Widest level of the decomposition — the peak useful parallelism.
+    pub fn max_width(&self) -> usize {
+        self.level_widths.iter().map(|&w| w as usize).max().unwrap_or(0)
+    }
+
+    /// Average level width (rows per dependent step), rounded down.
+    pub fn avg_width(&self) -> usize {
+        self.n / self.level_widths.len().max(1)
+    }
+
+    /// Estimated cycles per solve (measured by the registration-time
+    /// simulation when available). Always ≥ 1.
+    pub fn cycles(&self) -> u64 {
+        self.est_cycles
+    }
+
+    /// The load this key adds to its shard, in placement units: the
+    /// per-solve cycle estimate. Always ≥ 1, so even a trivial key
+    /// occupies its shard in the least-loaded accounting.
+    pub fn weight(&self) -> u64 {
+        self.est_cycles
+    }
+
+    /// Estimated resident footprint of serving this key: CSR storage
+    /// (values + column ids + row pointers) plus the per-solve x/b slabs.
+    pub fn memory_bytes(&self) -> u64 {
+        let nnz = self.nnz as u64;
+        let n = self.n as u64;
+        nnz * 8 + (n + 1) * 8 + 2 * n * 4
+    }
+
+    /// The scheduler the cost model picks for this matrix on `threads`
+    /// workers — the same barriered-vs-barrier-free comparison the
+    /// native backend's `auto` resolution runs
+    /// ([`recommend_scheduler`]): deep/narrow profiles go barrier-free
+    /// (`Mgd`), wide/shallow ones take the `Level` path.
+    pub fn scheduler_for(&self, threads: usize) -> SchedulerKind {
+        recommend_scheduler(self.level_widths.iter().map(|&w| w as usize), threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen::{self, GenSeed};
+
+    #[test]
+    fn placement_policy_parses_and_displays() {
+        assert_eq!("cost".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Cost);
+        assert_eq!(
+            "round-robin".parse::<PlacementPolicy>().unwrap(),
+            PlacementPolicy::RoundRobin
+        );
+        assert_eq!("rr".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::RoundRobin);
+        assert!("hash".parse::<PlacementPolicy>().is_err());
+        for p in [PlacementPolicy::Cost, PlacementPolicy::RoundRobin] {
+            assert_eq!(p.to_string().parse::<PlacementPolicy>().unwrap(), p);
+        }
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::Cost);
+    }
+
+    #[test]
+    fn profile_reflects_the_dag_shape() {
+        let chain = MatrixCost::from_plan(&LevelSolver::new(&gen::chain(300, GenSeed(5))));
+        assert_eq!(chain.n(), 300);
+        assert_eq!(chain.critical_path(), 300);
+        assert_eq!(chain.max_width(), 1);
+        assert_eq!(chain.avg_width(), 1);
+        let wide = MatrixCost::from_plan(&LevelSolver::new(&gen::shallow(2000, 0.4, GenSeed(6))));
+        assert!(wide.critical_path() < 30, "{}", wide.critical_path());
+        assert!(wide.max_width() > 100);
+        assert!(wide.memory_bytes() > chain.memory_bytes());
+    }
+
+    #[test]
+    fn weight_prefers_measured_cycles_and_never_vanishes() {
+        let cost = MatrixCost::from_plan(&LevelSolver::new(&gen::chain(100, GenSeed(7))));
+        let analytic = cost.weight();
+        assert!(analytic >= 100);
+        let measured = cost.clone().with_measured_cycles(12_345);
+        assert_eq!(measured.weight(), 12_345);
+        let clamped = cost.with_measured_cycles(0);
+        assert_eq!(clamped.weight(), 1, "zero cycles must clamp, not vanish");
+    }
+
+    #[test]
+    fn scheduler_choice_matches_the_backend_rule() {
+        use crate::runtime::{NativeBackend, NativeConfig};
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            ..NativeConfig::default()
+        });
+        for m in [
+            gen::chain(200, GenSeed(31)),
+            gen::shallow(2000, 0.4, GenSeed(32)),
+            gen::banded(400, 5, 0.6, GenSeed(33)),
+            gen::circuit(600, 5, 0.8, GenSeed(34)),
+        ] {
+            let solver = LevelSolver::new(&m);
+            let cost = MatrixCost::from_plan(&solver);
+            assert_eq!(
+                cost.scheduler_for(4),
+                nb.resolve_scheduler(&solver),
+                "cost model and backend must agree on the auto pick"
+            );
+        }
+    }
+}

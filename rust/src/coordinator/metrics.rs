@@ -113,6 +113,7 @@ impl ShardCounters {
             shed_latency: self.shed_latency.load(Ordering::Relaxed),
             shed_bulk: self.shed_bulk.load(Ordering::Relaxed),
             peak_queue_depth: self.peak_queue_depth.load(Ordering::Relaxed),
+            aged_bulk: 0,
         }
     }
 }
@@ -144,6 +145,10 @@ pub struct ShardStats {
     /// High-water mark of this shard's queue-lane depth; bounded by the
     /// service's `queue_cap` whenever one is set.
     pub peak_queue_depth: u64,
+    /// Bulk jobs promoted ahead of waiting latency work by the bulk
+    /// lane's aging bound (`bulk_aging_ms`). Filled in by the service
+    /// from its shard queues; [`ShardCounters::snapshot`] reports zero.
+    pub aged_bulk: u64,
 }
 
 /// Aggregate serving statistics across every shard of a service.
@@ -181,6 +186,9 @@ pub struct ServingStats {
     /// Deepest queue lane observed on any shard (≤ the configured
     /// `queue_cap` whenever one is set).
     pub peak_queue_depth: u64,
+    /// Total bulk jobs promoted past waiting latency work by the aging
+    /// bound, summed over shards.
+    pub aged_bulk: u64,
 }
 
 impl ServingStats {
@@ -202,6 +210,7 @@ impl ServingStats {
             shed_latency: per_shard.iter().map(|s| s.shed_latency).sum(),
             shed_bulk: per_shard.iter().map(|s| s.shed_bulk).sum(),
             peak_queue_depth: per_shard.iter().map(|s| s.peak_queue_depth).max().unwrap_or(0),
+            aged_bulk: per_shard.iter().map(|s| s.aged_bulk).sum(),
         }
     }
 }
@@ -221,7 +230,12 @@ mod tests {
         let b = ShardCounters::default();
         b.record_round(5, 0, Duration::from_millis(4));
         b.note_admitted(RequestClass::Bulk, 5);
-        let snaps = [a.snapshot(0), b.snapshot(1)];
+        let mut snaps = [a.snapshot(0), b.snapshot(1)];
+        assert_eq!(snaps[0].aged_bulk, 0, "snapshot leaves aged_bulk to the service");
+        // The service fills aged_bulk from its shard queues; the
+        // aggregate must sum it like the other totals.
+        snaps[0].aged_bulk = 2;
+        snaps[1].aged_bulk = 1;
         assert_eq!(snaps[0].served, 4);
         assert_eq!(snaps[0].errors, 1);
         assert_eq!(snaps[0].batched_rounds, 2);
@@ -240,6 +254,7 @@ mod tests {
         assert_eq!(agg.admitted_bulk, 2);
         assert_eq!(agg.shed_bulk, 1);
         assert_eq!(agg.peak_queue_depth, 5, "aggregate takes the max depth");
+        assert_eq!(agg.aged_bulk, 3);
         assert!((agg.solve_seconds - 0.007).abs() < 1e-6);
     }
 

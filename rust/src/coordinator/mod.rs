@@ -9,8 +9,11 @@
 //!
 //! - [`MatrixRegistry`] compiles each registered matrix once (accelerator
 //!   program + cycle-accurate simulation for the shared cost model +
-//!   [`crate::runtime::LevelSolver`] plan with its cached MGD plan) and
-//!   pins it to a shard round-robin;
+//!   [`crate::runtime::LevelSolver`] plan with its cached MGD plan),
+//!   condenses the results into a [`MatrixCost`] profile, and places the
+//!   key on the **least-loaded shard** by accumulated cost weight
+//!   ([`PlacementPolicy`]; `rebalance` live-migrates keys after evict
+//!   churn with lineage-exact counters);
 //! - [`ShardedSolveService`] routes each [`SolveRequest`] by `matrix_key`
 //!   to the owning shard, whose workers batch same-matrix requests
 //!   through the configured [`crate::runtime::SolverBackend`] — shared
@@ -18,9 +21,11 @@
 //!   worker pool** is spawned once and reused across every solve and
 //!   matrix, with independent solves overlapping as concurrent pool
 //!   sessions;
-//! - admission is **bounded and class-aware**: each shard holds two
-//!   queue lanes ([`crate::runtime::RequestClass::Latency`] drained
-//!   before `Bulk`) capped by `queue_cap`, an [`AdmissionPolicy`]
+//! - admission is **bounded, class-aware and aging-fair**: each shard
+//!   holds two queue lanes ([`crate::runtime::RequestClass::Latency`]
+//!   drained before `Bulk`, except that a bulk job older than the
+//!   configured aging bound is promoted — a latency flood cannot starve
+//!   bulk indefinitely) capped by `queue_cap`, an [`AdmissionPolicy`]
 //!   decides whether a full lane blocks or sheds
 //!   ([`ShardedSolveService::try_route`] → [`Admission`]), and
 //!   [`SolveHandle::wait_timeout`] gives callers deadlines; the class
@@ -55,13 +60,15 @@
 //! instead of being dropped.
 
 pub mod completion;
+pub mod cost;
 pub mod metrics;
 pub mod registry;
 pub mod service;
 pub mod session;
 
+pub use cost::{MatrixCost, PlacementPolicy};
 pub use metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
-pub use registry::{MatrixRegistry, RegisteredMatrix};
+pub use registry::{MatrixRegistry, Migration, RegisteredMatrix};
 pub use service::{
     Admission, AdmissionPolicy, ServiceConfig, ShardedServiceConfig, ShardedSolveService,
     SolveFuture, SolveHandle, SolveRequest, SolveResponse, SolveService,

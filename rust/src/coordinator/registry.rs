@@ -24,21 +24,32 @@
 //!   never a torn mix. In-flight requests against the old entry finish
 //!   on the plan they resolved (their `Arc` keeps it alive).
 //!
-//! Shard assignment is round-robin in registration order, which spreads
-//! matrices evenly across the service's shards without any knowledge of
-//! the request mix; the entry records its shard so routing is a single
-//! map lookup. A swap keeps the old entry's shard, so a key never
-//! migrates between request queues mid-stream.
+//! Shard assignment is **cost-model-driven** by default
+//! ([`PlacementPolicy::Cost`]): registration derives a [`MatrixCost`]
+//! from the plan and the simulator run, and the key lands on the shard
+//! with the least accumulated weight (ties go to the lowest index, so an
+//! empty registry fills shards in order). The entry records its shard,
+//! so routing stays a single map lookup; a swap keeps the old entry's
+//! shard, so a key never migrates between request queues mid-swap.
+//! Removal and eviction give the weight back to the shard, and
+//! [`MatrixRegistry::rebalance_plan`] / [`MatrixRegistry::migrate`]
+//! live-migrate keys off overloaded shards after evict churn — a
+//! migration clones the entry with a new shard index but **shares** the
+//! lineage counters exactly like a swap, so served/in-flight accounting
+//! stays exact across the move. [`PlacementPolicy::RoundRobin`] keeps
+//! the old registration-order behavior as an opt-out.
 
+use super::cost::{MatrixCost, PlacementPolicy};
 use super::metrics::SolveMetrics;
 use crate::compiler::{compile, CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
 use crate::runtime::sync::atomic::{AtomicU64, Ordering};
 use crate::runtime::sync::{Arc, Condvar, Mutex, RwLock};
-use crate::runtime::{LevelSolver, RequestClass};
+use crate::runtime::{LevelSolver, RequestClass, SchedulerKind};
 use crate::sim::Accelerator;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 /// Parking spot for [`MatrixRegistry::evict`]: the evictor waits here for
 /// the lineage's in-flight count to drain instead of burning a core in a
@@ -74,6 +85,15 @@ pub struct RegisteredMatrix {
     /// The class a request for this key runs under when it carries no
     /// class of its own.
     default_class: RequestClass,
+    /// Cost profile derived at registration (plan stats + the measured
+    /// simulator cycles); drives placement weight and the per-matrix
+    /// scheduler recommendation.
+    cost: MatrixCost,
+    /// The scheduler the serving backend actually resolved for this
+    /// matrix, recorded once after the registration-time
+    /// [`prepare`](crate::runtime::SolverBackend::prepare) warmup so
+    /// `mgd serve` can report the choice.
+    scheduler_choice: OnceLock<SchedulerKind>,
 }
 
 impl RegisteredMatrix {
@@ -118,6 +138,26 @@ impl RegisteredMatrix {
         self.inflight.load(Ordering::Acquire)
     }
 
+    /// The cost profile derived at registration: placement weight,
+    /// parallelism profile, memory estimate (see [`MatrixCost`]).
+    pub fn cost(&self) -> &MatrixCost {
+        &self.cost
+    }
+
+    /// The scheduler the serving backend resolved for this matrix, if
+    /// the backend reported one (the native backend always does; PJRT
+    /// has no scheduler seam). Recorded by the service after the
+    /// registration/swap warmup.
+    pub fn scheduler_choice(&self) -> Option<SchedulerKind> {
+        self.scheduler_choice.get().copied()
+    }
+
+    /// Record the backend's resolved scheduler (first write wins — the
+    /// choice is a per-entry constant).
+    pub(crate) fn note_scheduler(&self, kind: SchedulerKind) {
+        let _ = self.scheduler_choice.set(kind);
+    }
+
     /// The scheduling class a request for this key runs under when it
     /// carries no class of its own — set at
     /// [`MatrixRegistry::register_with_class`] /
@@ -157,25 +197,72 @@ impl std::fmt::Debug for RegisteredMatrix {
     }
 }
 
-/// Key → prepared-matrix map with round-robin shard assignment, live
-/// eviction and atomic hot swap.
+/// One planned key move from an overloaded shard to an underloaded one,
+/// produced by [`MatrixRegistry::rebalance_plan`] and applied by
+/// [`MatrixRegistry::migrate`]. Holds the entry observed at plan time so
+/// the apply step can detect (and refuse) a stale plan, and so the
+/// service can warm the destination backend before publishing.
+#[derive(Debug)]
+pub struct Migration {
+    /// The key being moved.
+    pub key: String,
+    /// Source shard (the most loaded at plan time).
+    pub from: usize,
+    /// Destination shard (the least loaded at plan time).
+    pub to: usize,
+    entry: Arc<RegisteredMatrix>,
+}
+
+impl Migration {
+    /// The entry as observed at plan time — what the destination
+    /// backend should warm ([`SolverBackend::prepare`](crate::runtime::SolverBackend::prepare))
+    /// before the move is applied.
+    pub fn entry(&self) -> &Arc<RegisteredMatrix> {
+        &self.entry
+    }
+}
+
+/// Key → prepared-matrix map with cost-model shard placement, live
+/// eviction, atomic hot swap and load-rebalancing migration.
 ///
 /// Lookups are lock-cheap (`RwLock` read); registration and swap take the
 /// write lock only to publish — the compile/simulate work happens outside
-/// it.
+/// it. The per-shard load accounting (`loads`) is mutated only under the
+/// write lock; the relaxed atomics exist so [`MatrixRegistry::shard_loads`]
+/// can read it under the read lock.
 pub struct MatrixRegistry {
     shards: usize,
     compiler: CompilerConfig,
+    placement: PlacementPolicy,
+    /// Accumulated [`MatrixCost::weight`] per shard — the least-loaded
+    /// placement input. Incremented at register, adjusted at swap, and
+    /// decremented at remove/evict and on a migration's source shard, so
+    /// post-churn placement never skews toward shards that only *look*
+    /// loaded.
+    loads: Vec<AtomicU64>,
     inner: RwLock<HashMap<String, Arc<RegisteredMatrix>>>,
 }
 
 impl MatrixRegistry {
     /// An empty registry assigning matrices across `shards` shards
-    /// (clamped to ≥ 1) and compiling with `compiler`.
+    /// (clamped to ≥ 1) and compiling with `compiler`, placing by cost
+    /// ([`PlacementPolicy::Cost`]).
     pub fn new(shards: usize, compiler: CompilerConfig) -> Self {
+        Self::with_placement(shards, compiler, PlacementPolicy::Cost)
+    }
+
+    /// [`MatrixRegistry::new`] with an explicit [`PlacementPolicy`].
+    pub fn with_placement(
+        shards: usize,
+        compiler: CompilerConfig,
+        placement: PlacementPolicy,
+    ) -> Self {
+        let shards = shards.max(1);
         Self {
-            shards: shards.max(1),
+            shards,
             compiler,
+            placement,
+            loads: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             inner: RwLock::new(HashMap::new()),
         }
     }
@@ -183,6 +270,51 @@ impl MatrixRegistry {
     /// Shards this registry assigns across.
     pub fn num_shards(&self) -> usize {
         self.shards
+    }
+
+    /// The active placement policy.
+    pub fn placement(&self) -> PlacementPolicy {
+        self.placement
+    }
+
+    /// Accumulated placement weight per shard (placement units — the
+    /// registered keys' estimated solve cycles).
+    pub fn shard_loads(&self) -> Vec<u64> {
+        // relaxed: monotonic-per-publish accounting, only mutated under
+        // the write lock; this is an observational read.
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Add to a shard's accumulated load (caller holds the write lock —
+    /// the load/store pair cannot interleave with another mutation;
+    /// saturation guards the accounting against drift).
+    fn add_load(&self, shard: usize, weight: u64) {
+        let cur = self.loads[shard].load(Ordering::Relaxed);
+        self.loads[shard].store(cur.saturating_add(weight), Ordering::Relaxed);
+    }
+
+    /// Give a departing key's weight back to its shard (write lock held,
+    /// like [`MatrixRegistry::add_load`]).
+    fn sub_load(&self, shard: usize, weight: u64) {
+        let cur = self.loads[shard].load(Ordering::Relaxed);
+        self.loads[shard].store(cur.saturating_sub(weight), Ordering::Relaxed);
+    }
+
+    /// Pick the shard for a fresh key, given the map size at publish
+    /// time: least-loaded under [`PlacementPolicy::Cost`] (ties to the
+    /// lowest index), registration-order round-robin under
+    /// [`PlacementPolicy::RoundRobin`].
+    fn place(&self, registered: usize) -> usize {
+        match self.placement {
+            PlacementPolicy::RoundRobin => registered % self.shards,
+            PlacementPolicy::Cost => self
+                .shard_loads()
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &l)| l)
+                .map(|(s, _)| s)
+                .unwrap_or(0),
+        }
     }
 
     /// Compile, simulate (double-entry verification + shared cost model)
@@ -194,7 +326,7 @@ impl MatrixRegistry {
         &self,
         key: &str,
         m: &CsrMatrix,
-    ) -> Result<(Arc<Program>, SolveMetrics, Arc<LevelSolver>)> {
+    ) -> Result<(Arc<Program>, SolveMetrics, Arc<LevelSolver>, MatrixCost)> {
         let program = Arc::new(
             compile(m, &self.compiler).with_context(|| format!("compile matrix {key:?}"))?,
         );
@@ -218,7 +350,8 @@ impl MatrixRegistry {
         crate::runtime::MgdPlan::build(m, crate::runtime::MgdPlanConfig::default())
             .verify()
             .with_context(|| format!("static plan audit for matrix {key:?}"))?;
-        Ok((program, metrics, solver))
+        let cost = MatrixCost::from_plan(&solver).with_measured_cycles(metrics.cycles);
+        Ok((program, metrics, solver, cost))
     }
 
     /// Register `m` under `key`: compile, simulate once, build the solve
@@ -243,18 +376,21 @@ impl MatrixRegistry {
         if self.inner.read().unwrap().contains_key(key) {
             bail!("matrix key {key:?} is already registered");
         }
-        let (program, metrics, solver) = self.prepare_parts(key, m)?;
+        let (program, metrics, solver, cost) = self.prepare_parts(key, m)?;
         let mut map = self.inner.write().unwrap();
         // Re-check under the write lock: a concurrent register of the
         // same key must not be silently clobbered.
         if map.contains_key(key) {
             bail!("matrix key {key:?} is already registered");
         }
-        // Shard assignment and the fresh lineage counters are decided
-        // here, under the write lock — the single derivation point.
+        // Shard assignment (least-loaded by cost weight, or round-robin)
+        // and the fresh lineage counters are decided here, under the
+        // write lock — the single derivation point.
+        let shard = self.place(map.len());
+        let weight = cost.weight();
         let entry = Arc::new(RegisteredMatrix {
             key: key.to_string(),
-            shard: map.len() % self.shards,
+            shard,
             solver,
             program,
             metrics,
@@ -262,8 +398,11 @@ impl MatrixRegistry {
             inflight: Arc::new(AtomicU64::new(0)),
             drain: Arc::new(DrainGate::default()),
             default_class: class,
+            cost,
+            scheduler_choice: OnceLock::new(),
         });
         map.insert(key.to_string(), Arc::clone(&entry));
+        self.add_load(shard, weight);
         Ok(entry)
     }
 
@@ -307,7 +446,7 @@ impl MatrixRegistry {
         let Some(old) = self.get(key) else {
             bail!("swap: matrix key {key:?} is not registered");
         };
-        let (program, metrics, solver) = self.prepare_parts(key, m)?;
+        let (program, metrics, solver, cost) = self.prepare_parts(key, m)?;
         let entry = Arc::new(RegisteredMatrix {
             key: key.to_string(),
             shard: old.shard(),
@@ -318,6 +457,8 @@ impl MatrixRegistry {
             inflight: Arc::clone(&old.inflight),
             drain: Arc::clone(&old.drain),
             default_class: class.unwrap_or(old.default_class),
+            cost,
+            scheduler_choice: OnceLock::new(),
         });
         warm(&entry)?;
         let mut map = self.inner.write().unwrap();
@@ -328,14 +469,18 @@ impl MatrixRegistry {
         // the retired lineage's counters — miscounting served requests
         // and letting a later evict return before draining. A racing swap
         // of the same lineage still wins normally.
-        match map.get(key) {
-            Some(current) if Arc::ptr_eq(&current.inflight, &entry.inflight) => {}
+        let replaced = match map.get(key) {
+            Some(current) if Arc::ptr_eq(&current.inflight, &entry.inflight) => Arc::clone(current),
             _ => bail!(
                 "swap: matrix key {key:?} was evicted (or evicted and re-registered) \
                  while the replacement was being built"
             ),
-        }
+        };
         map.insert(key.to_string(), Arc::clone(&entry));
+        // The new matrix may weigh differently: re-base the shard's load
+        // on the replacement's cost (same shard, so one adjustment).
+        self.sub_load(replaced.shard, replaced.cost.weight());
+        self.add_load(entry.shard, entry.cost.weight());
         Ok(entry)
     }
 
@@ -365,11 +510,14 @@ impl MatrixRegistry {
     /// (registration rollback; [`MatrixRegistry::evict`] is the draining
     /// form). Requests already routed hold their own `Arc` and complete
     /// normally; later submits for the key get the unknown-key error
-    /// reply, and the key may be registered again. Future shard
-    /// assignment derives from the current map size, so removal can skew
-    /// balance slightly — acceptable for these cases.
+    /// reply, and the key may be registered again. The departing key's
+    /// weight is given back to its shard, so post-churn placement keeps
+    /// seeing the real load — not a ghost of evicted keys.
     pub fn remove(&self, key: &str) -> Option<Arc<RegisteredMatrix>> {
-        self.inner.write().unwrap().remove(key)
+        let mut map = self.inner.write().unwrap();
+        let entry = map.remove(key)?;
+        self.sub_load(entry.shard, entry.cost.weight());
+        Some(entry)
     }
 
     /// Evict `key`: unmap it (new submits immediately get the
@@ -395,6 +543,122 @@ impl MatrixRegistry {
         }
         drop(guard);
         Some(entry)
+    }
+
+    /// Plan a set of key migrations that evens out the per-shard load —
+    /// the repair step after evict churn concentrates weight. Greedy:
+    /// repeatedly move, from the most-loaded to the least-loaded shard,
+    /// the key whose weight lands closest to half the gap, until no move
+    /// shrinks the spread. Read-only — nothing migrates until each
+    /// [`Migration`] is applied with [`MatrixRegistry::migrate`] (the
+    /// two-phase split lets the service warm the destination backend
+    /// between planning and publishing).
+    pub fn rebalance_plan(&self) -> Vec<Migration> {
+        let map = self.inner.read().unwrap();
+        let mut loads = self.shard_loads();
+        let mut weights: Vec<(String, usize, u64, Arc<RegisteredMatrix>)> = map
+            .iter()
+            .map(|(k, e)| (k.clone(), e.shard, e.cost.weight(), Arc::clone(e)))
+            .collect();
+        weights.sort_by(|a, b| a.0.cmp(&b.0)); // deterministic plan order
+        let mut moves = Vec::new();
+        for _ in 0..map.len() {
+            let (max_s, &max_l) = match loads.iter().enumerate().max_by_key(|&(_, &l)| l) {
+                Some(m) => m,
+                None => break,
+            };
+            let (min_s, &min_l) = match loads.iter().enumerate().min_by_key(|&(_, &l)| l) {
+                Some(m) => m,
+                None => break,
+            };
+            let gap = max_l - min_l;
+            if gap == 0 {
+                break;
+            }
+            // A move only helps when the key's whole weight fits inside
+            // the gap; the best candidate halves it.
+            let candidate = weights
+                .iter()
+                .filter(|(_, shard, w, _)| *shard == max_s && *w > 0 && *w < gap)
+                .min_by_key(|(_, _, w, _)| (gap / 2).abs_diff(*w));
+            let Some((key, _, w, entry)) = candidate else {
+                break;
+            };
+            loads[max_s] -= *w;
+            loads[min_s] += *w;
+            moves.push(Migration {
+                key: key.clone(),
+                from: max_s,
+                to: min_s,
+                entry: Arc::clone(entry),
+            });
+            let moved_key = key.clone();
+            if let Some(slot) = weights.iter_mut().find(|(k, ..)| *k == moved_key) {
+                slot.1 = min_s;
+            }
+        }
+        moves
+    }
+
+    /// Apply one planned [`Migration`]: republish the key under its new
+    /// shard. The republished entry **shares** the lineage counters
+    /// (served / in-flight / drain gate) with the entry it replaces —
+    /// exactly like [`MatrixRegistry::swap`] — so per-key accounting
+    /// stays exact across the move; requests already queued on the old
+    /// shard finish there on the `Arc` they hold, while new submits route
+    /// to the new shard. Errors if the key was evicted or re-registered
+    /// (a fresh lineage) since the plan was made — a stale plan must not
+    /// clobber live state.
+    pub fn migrate(&self, mv: &Migration) -> Result<Arc<RegisteredMatrix>> {
+        ensure!(
+            mv.to < self.shards,
+            "migrate: destination shard {} out of range ({} shards)",
+            mv.to,
+            self.shards
+        );
+        let mut map = self.inner.write().unwrap();
+        let current = match map.get(&mv.key) {
+            Some(cur) if Arc::ptr_eq(&cur.inflight, &mv.entry.inflight) => Arc::clone(cur),
+            _ => bail!(
+                "migrate: matrix key {:?} was evicted or re-registered since the rebalance plan",
+                mv.key
+            ),
+        };
+        let moved = Arc::new(RegisteredMatrix {
+            key: current.key.clone(),
+            shard: mv.to,
+            solver: Arc::clone(&current.solver),
+            program: Arc::clone(&current.program),
+            metrics: current.metrics.clone(),
+            served: Arc::clone(&current.served),
+            inflight: Arc::clone(&current.inflight),
+            drain: Arc::clone(&current.drain),
+            default_class: current.default_class,
+            cost: current.cost.clone(),
+            scheduler_choice: OnceLock::new(),
+        });
+        if let Some(k) = current.scheduler_choice.get() {
+            let _ = moved.scheduler_choice.set(*k);
+        }
+        map.insert(mv.key.clone(), Arc::clone(&moved));
+        self.sub_load(current.shard, current.cost.weight());
+        self.add_load(mv.to, moved.cost.weight());
+        Ok(moved)
+    }
+
+    /// Plan and apply a rebalance in one call (no destination warmup
+    /// between the phases — the sharded service's `rebalance` wraps the
+    /// two-phase form to warm backends first). Keys that were evicted or
+    /// re-registered between plan and apply are skipped, not errors.
+    pub fn rebalance(&self) -> Result<Vec<Migration>> {
+        let moves = self.rebalance_plan();
+        let mut applied = Vec::new();
+        for mv in moves {
+            if self.migrate(&mv).is_ok() {
+                applied.push(mv);
+            }
+        }
+        Ok(applied)
     }
 
     /// Registered matrix count.
@@ -441,7 +705,10 @@ mod tests {
     }
 
     #[test]
-    fn shard_assignment_is_round_robin() {
+    fn shard_assignment_rotates_for_growing_keys() {
+        // Monotonically growing matrices: least-loaded placement fills
+        // shards in rotation (each new key lands where the least weight
+        // has accumulated) — the same footprint round-robin used to give.
         let reg = registry(3);
         let mut shards = Vec::new();
         for k in 0..5 {
@@ -450,6 +717,128 @@ mod tests {
         }
         assert_eq!(shards, vec![0, 1, 2, 0, 1]);
         assert_eq!(reg.keys(), vec!["m0", "m1", "m2", "m3", "m4"]);
+    }
+
+    #[test]
+    fn cost_placement_is_least_loaded() {
+        // One heavy key then several light ones: round-robin would bounce
+        // the light keys across both shards; least-loaded parks them all
+        // opposite the heavy key until the loads cross.
+        let reg = registry(2);
+        let heavy = gen::banded(400, 8, 0.8, GenSeed(91));
+        let light = gen::chain(40, GenSeed(92));
+        assert_eq!(reg.register("heavy", &heavy).unwrap().shard(), 0);
+        let heavy_w = reg.get("heavy").unwrap().cost().weight();
+        let light_w = reg.register("l0", &light).unwrap().cost().weight();
+        assert!(
+            heavy_w > 3 * light_w,
+            "premise: heavy must outweigh light ({heavy_w} vs {light_w})"
+        );
+        for k in 1..3 {
+            let e = reg.register(&format!("l{k}"), &light).unwrap();
+            assert_eq!(e.shard(), 1, "light keys stack on the light shard");
+        }
+        let loads = reg.shard_loads();
+        assert_eq!(loads[0], heavy_w);
+        assert_eq!(loads[1], 3 * light_w);
+        assert!(loads[0] > loads[1]);
+    }
+
+    #[test]
+    fn round_robin_placement_opt_out() {
+        let reg = MatrixRegistry::with_placement(
+            2,
+            CompilerConfig::default(),
+            PlacementPolicy::RoundRobin,
+        );
+        assert_eq!(reg.placement(), PlacementPolicy::RoundRobin);
+        let heavy = gen::banded(300, 6, 0.8, GenSeed(93));
+        let light = gen::chain(40, GenSeed(94));
+        // Registration order alone decides — the heavy key's weight is
+        // ignored and the third key returns to the heavy shard.
+        assert_eq!(reg.register("heavy", &heavy).unwrap().shard(), 0);
+        assert_eq!(reg.register("l0", &light).unwrap().shard(), 1);
+        assert_eq!(reg.register("l1", &light).unwrap().shard(), 0);
+    }
+
+    #[test]
+    fn evict_decrements_the_shards_load() {
+        // The post-churn skew bug: without the decrement, an evicted
+        // key's weight would haunt its shard and push every later
+        // registration onto the other one.
+        let reg = registry(2);
+        let heavy = gen::banded(400, 8, 0.8, GenSeed(95));
+        let light = gen::chain(40, GenSeed(96));
+        reg.register("heavy", &heavy).unwrap();
+        reg.register("l0", &light).unwrap();
+        assert!(reg.shard_loads()[0] > 0);
+        reg.evict("heavy").unwrap();
+        assert_eq!(reg.shard_loads()[0], 0, "evict must give the weight back");
+        // Shard 0 is now the least loaded again.
+        assert_eq!(reg.register("l1", &light).unwrap().shard(), 0);
+    }
+
+    #[test]
+    fn rebalance_migrates_and_keeps_lineage_exact() {
+        let reg = registry(2);
+        for (k, n) in [40usize, 41, 42, 43].iter().enumerate() {
+            let m = gen::chain(*n, GenSeed(100 + k as u64));
+            reg.register(&format!("c{k}"), &m).unwrap();
+        }
+        // Rotation placed [0, 1, 0, 1]; evicting shard 0's keys leaves it
+        // empty while shard 1 still carries two.
+        reg.evict("c0").unwrap();
+        reg.evict("c2").unwrap();
+        assert_eq!(reg.shard_loads()[0], 0);
+        // Live traffic state that must survive the move exactly.
+        reg.get("c1").unwrap().note_served(5);
+        let checked_out = reg.checkout("c1").unwrap();
+        assert_eq!(checked_out.inflight(), 1);
+
+        let moved = reg.rebalance().unwrap();
+        assert_eq!(moved.len(), 1, "one move evens two keys across two shards");
+        assert_eq!(moved[0].from, 1);
+        assert_eq!(moved[0].to, 0);
+        let migrated = reg.get(&moved[0].key).unwrap();
+        assert_eq!(migrated.shard(), 0);
+        if moved[0].key == "c1" {
+            assert_eq!(migrated.served(), 5, "served is lineage-shared across the move");
+            assert_eq!(migrated.inflight(), 1, "in-flight is lineage-shared too");
+        }
+        let loads = reg.shard_loads();
+        assert!(loads[0] > 0 && loads[1] > 0, "both shards carry load: {loads:?}");
+        // The pre-move Arc still settles the shared lineage counters.
+        checked_out.note_done();
+        assert_eq!(reg.get("c1").unwrap().inflight(), 0);
+        // Balanced now: another plan finds nothing to move.
+        assert!(reg.rebalance_plan().is_empty());
+    }
+
+    #[test]
+    fn migrate_refuses_a_stale_plan() {
+        // Stack three light keys opposite one heavy key, then evict the
+        // heavy one: the plan moves a light key into the emptied shard.
+        let reg = registry(2);
+        let heavy = gen::banded(400, 8, 0.8, GenSeed(110));
+        let light = gen::chain(40, GenSeed(111));
+        reg.register("heavy", &heavy).unwrap();
+        for k in 0..3 {
+            reg.register(&format!("l{k}"), &light).unwrap();
+        }
+        reg.evict("heavy").unwrap();
+        let plan = reg.rebalance_plan();
+        assert_eq!(plan.len(), 1, "one light key evens 3-vs-0");
+        assert_eq!((plan[0].from, plan[0].to), (1, 0));
+        // The key leaves (or is re-registered) between plan and apply:
+        // the stale move must refuse to publish.
+        reg.evict(&plan[0].key).unwrap();
+        let err = reg.migrate(&plan[0]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("since the rebalance plan"),
+            "{err:#}"
+        );
+        // And the skipping convenience wrapper tolerates it.
+        assert!(reg.rebalance().is_ok());
     }
 
     #[test]

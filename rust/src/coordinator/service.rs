@@ -4,7 +4,9 @@
 //! The serving runtime is **sharded and multi-matrix**
 //! ([`ShardedSolveService`]): N matrices are registered by key into a
 //! [`MatrixRegistry`] (each compiled, simulated and planned exactly once,
-//! then pinned to a shard round-robin), and every
+//! then placed on the least-loaded shard by its cost-model weight — see
+//! [`super::cost::MatrixCost`] and
+//! [`ShardedServiceConfig::placement`]), and every
 //! [`SolveRequest`]` { matrix_key, b, reply }` is routed to the shard
 //! that owns its matrix. Each shard drains its own queue with a
 //! small worker pool, batching same-matrix requests through the
@@ -32,8 +34,11 @@
 //! # Admission control and priority lanes
 //!
 //! The front end is **admission-controlled**: each shard holds two
-//! bounded queue lanes — [`RequestClass::Latency`] drained strictly
-//! before [`RequestClass::Bulk`] — and
+//! bounded queue lanes — [`RequestClass::Latency`] drained before
+//! [`RequestClass::Bulk`], except that a bulk job older than
+//! [`ShardedServiceConfig::bulk_aging_ms`] is promoted ahead of the
+//! latency lane, so a sustained latency flood cannot starve bulk
+//! indefinitely — and
 //! [`ShardedServiceConfig::queue_cap`] bounds each lane's depth. What
 //! happens at a full lane is the [`AdmissionPolicy`]: `Block` parks the
 //! submitter until space frees (bounded first-come), `Shed` rejects with
@@ -80,10 +85,12 @@
 //! internal key.
 
 use super::completion::{self, Completion, PollState};
+use super::cost::PlacementPolicy;
 use super::metrics::{ServingStats, ShardCounters, ShardStats, SolveMetrics};
-use super::registry::{MatrixRegistry, RegisteredMatrix};
+use super::registry::{MatrixRegistry, Migration, RegisteredMatrix};
 use crate::compiler::{CompilerConfig, Program};
 use crate::matrix::CsrMatrix;
+use crate::runtime::sync::atomic::{AtomicU64, Ordering};
 use crate::runtime::sync::{Arc, Condvar, Mutex};
 use crate::runtime::{create_backend, BackendConfig, RequestClass, SolverBackend};
 use anyhow::{anyhow, bail, Context, Result};
@@ -140,8 +147,9 @@ impl std::fmt::Display for AdmissionPolicy {
 pub struct ShardedServiceConfig {
     /// Compiler/architecture options used at registration.
     pub compiler: CompilerConfig,
-    /// Number of shards (request queues); matrices are assigned to shards
-    /// round-robin at registration. Clamped to ≥ 1.
+    /// Number of shards (request queues); registration places each
+    /// matrix by the [`placement`](ShardedServiceConfig::placement)
+    /// policy. Clamped to ≥ 1.
     pub shards: usize,
     /// Worker threads draining each shard's queue.
     pub workers_per_shard: usize,
@@ -165,6 +173,15 @@ pub struct ShardedServiceConfig {
     /// Full-lane behavior (see [`AdmissionPolicy`]); irrelevant while
     /// `queue_cap == 0`.
     pub admission: AdmissionPolicy,
+    /// How registration assigns keys to shards: least-loaded by
+    /// cost-model weight ([`PlacementPolicy::Cost`], the default) or
+    /// registration-order round-robin ([`PlacementPolicy::RoundRobin`]).
+    pub placement: PlacementPolicy,
+    /// Aging bound of the bulk lane in milliseconds: a queued bulk job
+    /// older than this is drained ahead of the latency lane, so a
+    /// sustained latency flood cannot starve bulk indefinitely. `0`
+    /// (default) disables aging — latency drains strictly first.
+    pub bulk_aging_ms: u64,
 }
 
 impl Default for ShardedServiceConfig {
@@ -178,6 +195,8 @@ impl Default for ShardedServiceConfig {
             backend_per_shard: false,
             queue_cap: 0,
             admission: AdmissionPolicy::Block,
+            placement: PlacementPolicy::Cost,
+            bulk_aging_ms: 0,
         }
     }
 }
@@ -379,6 +398,9 @@ struct ShardJob {
     /// Effective class (request override or key default), fixed at
     /// admission.
     class: RequestClass,
+    /// When the job entered admission — what the bulk lane's aging bound
+    /// measures against.
+    enqueued_at: Instant,
 }
 
 /// Internal admission outcome (`admit` already delivered any error
@@ -406,13 +428,26 @@ enum Enqueue {
 }
 
 /// One shard's bounded two-lane queue. The latency lane is drained
-/// strictly before the bulk lane; each lane's depth is bounded by `cap`
-/// (0 = unbounded) **under the mutex**, so the bound is exact — there is
-/// no window where a lane overshoots. `Block`-policy submitters park on
-/// `space`; workers park on `ready`.
+/// before the bulk lane — except that a bulk job older than the `aging`
+/// window is promoted ahead of it (the aging bound: a latency flood
+/// cannot starve bulk indefinitely). Each lane's depth is bounded by
+/// `cap` (0 = unbounded) **under the mutex**, so the bound is exact —
+/// there is no window where a lane overshoots. `Block`-policy submitters
+/// park on `space`; workers park on `ready`.
+///
+/// Aging needs no timed waits: a worker only parks when **both** lanes
+/// are empty, in which case there is no bulk job to age — so promotion
+/// is purely an ordering decision made at each dequeue against the
+/// oldest bulk job's enqueue time.
 struct ShardQueue {
     cap: usize,
     policy: AdmissionPolicy,
+    /// Bulk-lane aging bound; `None` disables promotion (latency drains
+    /// strictly first).
+    aging: Option<Duration>,
+    /// Bulk jobs promoted ahead of waiting latency jobs by the aging
+    /// bound (feeds [`ShardStats::aged_bulk`]).
+    aged: AtomicU64,
     state: Mutex<LaneState>,
     /// Signaled on every enqueue and on close (workers wait here).
     ready: Condvar,
@@ -429,14 +464,22 @@ struct LaneState {
 }
 
 impl ShardQueue {
-    fn new(cap: usize, policy: AdmissionPolicy) -> Self {
+    fn new(cap: usize, policy: AdmissionPolicy, aging: Option<Duration>) -> Self {
         Self {
             cap,
             policy,
+            aging,
+            aged: AtomicU64::new(0),
             state: Mutex::new(LaneState::default()),
             ready: Condvar::new(),
             space: Condvar::new(),
         }
+    }
+
+    /// Bulk jobs the aging bound promoted past waiting latency jobs.
+    fn aged_count(&self) -> u64 {
+        // relaxed: monotonic stats counter, read for reporting only.
+        self.aged.load(Ordering::Relaxed)
     }
 
     /// Admit `job` into its class's lane, applying the admission policy
@@ -481,9 +524,11 @@ impl ShardQueue {
         Enqueue::Admitted { depth }
     }
 
-    /// Dequeue the next drain group: latency-lane jobs strictly first.
-    /// Returns `None` only when the queue is closed **and** both lanes
-    /// are empty (workers drain before exiting).
+    /// Dequeue the next drain group: latency-lane jobs first, unless the
+    /// oldest bulk job has waited past the aging window — then it is
+    /// promoted (and counted) ahead of the latency lane. Returns `None`
+    /// only when the queue is closed **and** both lanes are empty
+    /// (workers drain before exiting).
     ///
     /// The group is extended past the first job only while batching is
     /// actually exploitable: the backend must batch (`multi_rhs`) and the
@@ -495,14 +540,26 @@ impl ShardQueue {
     fn pop(&self, batch: usize, multi_rhs: bool) -> Option<Vec<ShardJob>> {
         let mut st = self.state.lock().unwrap();
         let (first, from_latency) = loop {
-            let from_latency = !st.latency.is_empty();
+            let aged = match (self.aging, st.bulk.front()) {
+                (Some(window), Some(oldest)) => oldest.enqueued_at.elapsed() >= window,
+                _ => false,
+            };
+            let from_latency = !aged && !st.latency.is_empty();
             let job = if from_latency {
                 st.latency.pop_front()
             } else {
                 st.bulk.pop_front()
             };
             match job {
-                Some(j) => break (j, from_latency),
+                Some(j) => {
+                    if aged && !st.latency.is_empty() {
+                        // An actual promotion: the bulk job jumped ahead
+                        // of waiting latency work.
+                        // relaxed: monotonic stats counter.
+                        self.aged.fetch_add(1, Ordering::Relaxed);
+                    }
+                    break (j, from_latency);
+                }
                 None if st.closed => return None,
                 None => st = self.ready.wait(st).unwrap(),
             }
@@ -590,12 +647,17 @@ impl ShardedSolveService {
 
     fn start_shards(backends: Vec<Arc<dyn SolverBackend>>, cfg: &ShardedServiceConfig) -> Self {
         let backend_name = backends[0].name();
-        let registry = Arc::new(MatrixRegistry::new(backends.len(), cfg.compiler.clone()));
+        let registry = Arc::new(MatrixRegistry::with_placement(
+            backends.len(),
+            cfg.compiler.clone(),
+            cfg.placement,
+        ));
         let batch = cfg.batch_size.max(1);
+        let aging = (cfg.bulk_aging_ms > 0).then(|| Duration::from_millis(cfg.bulk_aging_ms));
         let shards = backends
             .into_iter()
             .map(|backend| {
-                let queue = Arc::new(ShardQueue::new(cfg.queue_cap, cfg.admission));
+                let queue = Arc::new(ShardQueue::new(cfg.queue_cap, cfg.admission, aging));
                 let counters = Arc::new(ShardCounters::default());
                 let workers = (0..cfg.workers_per_shard.max(1))
                     .map(|_| {
@@ -644,12 +706,16 @@ impl ShardedSolveService {
         class: RequestClass,
     ) -> Result<Arc<RegisteredMatrix>> {
         let entry = self.registry.register_with_class(key, m, class)?;
-        if let Err(e) = self.shards[entry.shard()].backend.prepare(entry.solver()) {
+        let backend = &self.shards[entry.shard()].backend;
+        if let Err(e) = backend.prepare(entry.solver()) {
             // Roll the registration back: a key must not stay routed to
             // a backend that failed to prepare (retries would otherwise
             // hit "already registered" forever).
             let _ = self.registry.remove(key);
             return Err(e.context(format!("prepare backend for matrix {key:?}")));
+        }
+        if let Some(kind) = backend.chosen_scheduler(entry.solver()) {
+            entry.note_scheduler(kind);
         }
         Ok(entry)
     }
@@ -691,11 +757,49 @@ impl ShardedSolveService {
         class: Option<RequestClass>,
     ) -> Result<Arc<RegisteredMatrix>> {
         self.registry.swap_with_class(key, m, class, |entry| {
-            self.shards[entry.shard()]
-                .backend
+            let backend = &self.shards[entry.shard()].backend;
+            backend
                 .prepare(entry.solver())
-                .with_context(|| format!("prepare backend for swapped matrix {key:?}"))
+                .with_context(|| format!("prepare backend for swapped matrix {key:?}"))?;
+            if let Some(kind) = backend.chosen_scheduler(entry.solver()) {
+                entry.note_scheduler(kind);
+            }
+            Ok(())
         })
+    }
+
+    /// Even out the per-shard load after evict churn: plan migrations
+    /// from overloaded to underloaded shards
+    /// ([`MatrixRegistry::rebalance_plan`]), warm each destination
+    /// shard's backend ([`SolverBackend::prepare`] — so a migrated key's
+    /// first request pays zero setup), then publish each move
+    /// ([`MatrixRegistry::migrate`]). Returns the applied moves.
+    ///
+    /// Live-safe: the migrated entry **shares** its lineage counters
+    /// with the entry it replaces, so served/in-flight accounting stays
+    /// exact across the move; requests already queued on the source
+    /// shard finish there on the entry `Arc` they hold, while new
+    /// submits route to the destination. A key evicted or re-registered
+    /// between plan and publish is skipped, not an error; a failed
+    /// destination prepare aborts with the moves applied so far.
+    pub fn rebalance(&self) -> Result<Vec<Migration>> {
+        let moves = self.registry.rebalance_plan();
+        let mut applied = Vec::new();
+        for mv in moves {
+            self.shards[mv.to]
+                .backend
+                .prepare(mv.entry().solver())
+                .with_context(|| {
+                    format!(
+                        "prepare destination shard {} for migrated matrix {:?}",
+                        mv.to, mv.key
+                    )
+                })?;
+            if self.registry.migrate(&mv).is_ok() {
+                applied.push(mv);
+            }
+        }
+        Ok(applied)
     }
 
     /// Route one request to the shard owning its matrix, applying the
@@ -771,6 +875,7 @@ impl ShardedSolveService {
             reply: req.reply,
             guard,
             class,
+            enqueued_at: Instant::now(),
         };
         match shard.queue.push(job) {
             Enqueue::Admitted { depth } => {
@@ -847,7 +952,11 @@ impl ShardedSolveService {
         self.shards
             .iter()
             .enumerate()
-            .map(|(i, s)| s.counters.snapshot(i))
+            .map(|(i, s)| {
+                let mut stats = s.counters.snapshot(i);
+                stats.aged_bulk = s.queue.aged_count();
+                stats
+            })
             .collect()
     }
 
@@ -1268,7 +1377,8 @@ mod tests {
         let mb = gen::banded(220, 4, 0.6, GenSeed(72));
         let ea = svc.register("alpha", &ma).unwrap();
         let eb = svc.register("beta", &mb).unwrap();
-        // Two matrices on two shards: round-robin assignment.
+        // Two matrices on two shards: least-loaded placement puts the
+        // second key on the still-empty shard.
         assert_eq!((ea.shard(), eb.shard()), (0, 1));
         let mut expect = Vec::new();
         let mut rxs = Vec::new();
@@ -1649,6 +1759,7 @@ mod tests {
             reply,
             guard: InflightGuard(reg.checkout(key).expect("key registered")),
             class,
+            enqueued_at: Instant::now(),
         }
     }
 
@@ -1661,7 +1772,7 @@ mod tests {
         let reg = Arc::new(MatrixRegistry::new(1, CompilerConfig::default()));
         reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(1))).unwrap();
         let out = model::explore(model::ModelConfig::fast(), move || {
-            let q = Arc::new(ShardQueue::new(1, AdmissionPolicy::Block));
+            let q = Arc::new(ShardQueue::new(1, AdmissionPolicy::Block, None));
             let pushers: Vec<_> = (0..2u32)
                 .map(|i| {
                     let q = Arc::clone(&q);
@@ -1702,7 +1813,7 @@ mod tests {
         let reg = Arc::new(MatrixRegistry::new(1, CompilerConfig::default()));
         reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(2))).unwrap();
         let out = model::explore(model::ModelConfig::fast(), move || {
-            let q = Arc::new(ShardQueue::new(0, AdmissionPolicy::Block));
+            let q = Arc::new(ShardQueue::new(0, AdmissionPolicy::Block, None));
             let admitted = Arc::new(AtomicUsize::new(0));
             let pushers: Vec<_> = (0..2u32)
                 .map(|i| {
@@ -1743,7 +1854,7 @@ mod tests {
     fn queue_pop_orders_latency_first_and_batches_same_entry() {
         let reg = MatrixRegistry::new(1, CompilerConfig::default());
         reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(3))).unwrap();
-        let q = ShardQueue::new(0, AdmissionPolicy::Block);
+        let q = ShardQueue::new(0, AdmissionPolicy::Block, None);
         for tag in [1.0, 2.0] {
             let r = q.push(queue_job(&reg, "q", tag, RequestClass::Bulk));
             assert!(matches!(r, Enqueue::Admitted { .. }));
@@ -1760,5 +1871,104 @@ mod tests {
         }
         let group = q.pop(4, true).unwrap();
         assert_eq!(group.len(), 3, "same-entry jobs fold into one group");
+    }
+
+    /// The aging bound: a bulk job past its window is drained ahead of
+    /// the latency lane. A zero window makes every queued bulk job
+    /// instantly aged — deterministic, no sleeps.
+    #[test]
+    fn aging_window_promotes_the_oldest_bulk_job() {
+        let reg = MatrixRegistry::new(1, CompilerConfig::default());
+        reg.register("q", &gen::banded(4, 1, 1.0, GenSeed(4))).unwrap();
+        let q = ShardQueue::new(0, AdmissionPolicy::ByClass, Some(Duration::ZERO));
+        let r = q.push(queue_job(&reg, "q", 1.0, RequestClass::Bulk));
+        assert!(matches!(r, Enqueue::Admitted { .. }));
+        for tag in [3.0, 4.0] {
+            let r = q.push(queue_job(&reg, "q", tag, RequestClass::Latency));
+            assert!(matches!(r, Enqueue::Admitted { .. }));
+        }
+        let order: Vec<f32> = (0..3).map(|_| q.pop(1, false).unwrap()[0].b[0]).collect();
+        assert_eq!(order, vec![1.0, 3.0, 4.0], "aged bulk jumps the latency lane");
+        assert_eq!(q.aged_count(), 1, "only jumps past waiting latency work count");
+    }
+
+    /// `bulk_aging_ms` plumbs from the config into every shard queue and
+    /// promotions surface as `aged_bulk` in the serving stats.
+    #[test]
+    fn aging_bound_surfaces_in_the_service_stats() {
+        let (backend, started, release) = GatedOrderBackend::new();
+        let svc = ShardedSolveService::start_with_backend(
+            Arc::clone(&backend) as Arc<dyn SolverBackend>,
+            ShardedServiceConfig {
+                workers_per_shard: 1,
+                admission: AdmissionPolicy::ByClass,
+                bulk_aging_ms: 1,
+                ..small_sharded_cfg(1)
+            },
+        );
+        let m = gen::chain(40, GenSeed(150));
+        svc.register("m", &m).unwrap();
+        let gate = svc.submit("m", marker_rhs(m.n, 0.0)).unwrap();
+        started
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("gate request never reached the backend");
+        // A bulk job queues first, a latency job behind it; by the time
+        // the worker frees up, the bulk job is far past the 1 ms window
+        // and drains first despite the waiting latency job.
+        let hb = svc.submit("m", marker_rhs(m.n, 1.0)).unwrap();
+        let hl = svc
+            .submit_class("m", marker_rhs(m.n, 9.0), Some(RequestClass::Latency))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        release.send(()).unwrap();
+        for h in [gate, hb, hl] {
+            h.wait().unwrap();
+        }
+        assert_eq!(backend.order(), vec![0, 1, 9]);
+        let stats = svc.stats();
+        assert_eq!(stats.aged_bulk, 1, "{stats:?}");
+        svc.shutdown();
+    }
+
+    /// [`ShardedSolveService::rebalance`] migrates a key off the loaded
+    /// shard and requests keep landing on it (now via the new shard).
+    #[test]
+    fn rebalance_migrates_and_requests_follow() {
+        let svc = ShardedSolveService::start(small_sharded_cfg(2)).unwrap();
+        let heavy = gen::banded(400, 8, 0.8, GenSeed(160));
+        let light = gen::chain(40, GenSeed(161));
+        svc.register("heavy", &heavy).unwrap();
+        for k in 0..3 {
+            svc.register(&format!("l{k}"), &light).unwrap();
+        }
+        // All light keys stacked opposite the heavy one; the evict
+        // leaves shard 0 empty while shard 1 carries all three.
+        svc.evict("heavy").unwrap();
+        let moved = svc.rebalance().unwrap();
+        assert_eq!(moved.len(), 1, "one light key evens 3-vs-0");
+        assert_eq!((moved[0].from, moved[0].to), (1, 0));
+        let entry = svc.registry().get(&moved[0].key).unwrap();
+        assert_eq!(entry.shard(), 0);
+        let resp = svc.solve(&moved[0].key, vec![1.0; light.n]).unwrap();
+        assert_close_to_reference(&light, &vec![1.0; light.n], &resp.x, 1e-3);
+        assert_eq!(entry.served(), 1, "the migrated lineage keeps counting");
+        svc.shutdown();
+    }
+
+    /// Registration records the backend's per-matrix scheduler pick so
+    /// `mgd serve` can report it.
+    #[test]
+    fn registration_records_the_backends_scheduler_choice() {
+        use crate::runtime::SchedulerKind;
+        let svc = ShardedSolveService::start(small_sharded_cfg(1)).unwrap();
+        // A pure chain recommends Mgd at any thread count (its level
+        // path pays one barrier per row).
+        let deep = gen::chain(200, GenSeed(170));
+        let entry = svc.register("deep", &deep).unwrap();
+        assert_eq!(entry.scheduler_choice(), Some(SchedulerKind::Mgd));
+        // And the swap re-records for the replacement entry.
+        let swapped = svc.swap("deep", &gen::chain(220, GenSeed(171))).unwrap();
+        assert_eq!(swapped.scheduler_choice(), Some(SchedulerKind::Mgd));
+        svc.shutdown();
     }
 }

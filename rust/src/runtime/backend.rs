@@ -54,6 +54,18 @@ pub trait SolverBackend: Send + Sync {
         Ok(())
     }
 
+    /// The scheduler this backend would execute `plan` with, if the
+    /// concept applies: the native backend reports its per-plan `auto`
+    /// resolution (the cost-model pick of
+    /// [`recommend_scheduler`](super::native::recommend_scheduler)) so
+    /// the coordinator can record — and `mgd serve` report — the choice
+    /// made for each registered matrix. Backends without a scheduler
+    /// seam (PJRT) return `None`, the default.
+    fn chosen_scheduler(&self, plan: &LevelSolver) -> Option<super::SchedulerKind> {
+        let _ = plan;
+        None
+    }
+
     /// Introspection of the backend's persistent worker pool, if it has
     /// one: worker/live-thread counts, sessions served, and the session
     /// concurrency high-water mark. The serving runtime folds this into

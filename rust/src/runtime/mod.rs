@@ -20,8 +20,9 @@
 //!     and independent solves overlap as concurrent slot-leased
 //!     sessions); bitwise identical to the serial reference for any
 //!     thread count;
-//!   - `auto` — picks per plan from level-width statistics (deep/narrow
-//!     DAGs go barrier-free).
+//!   - `auto` — picks per plan from the cost model
+//!     ([`recommend_scheduler`]): modeled barriered vs barrier-free
+//!     execution cost (deep/narrow DAGs go barrier-free).
 //! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled
 //!   JAX/Pallas level kernels from `artifacts/*.hlo.txt` and executes
 //!   them through PJRT. Python runs only at build time (`make
@@ -53,7 +54,10 @@ pub use backend::{create_backend, BackendConfig, BackendKind, SolverBackend};
 pub use level_exec::{LevelPlan, LevelSolver};
 pub use mgd_exec::MgdExecStats;
 pub use mgd_plan::{MgdPlan, MgdPlanConfig};
-pub use native::{MgdStats, NativeBackend, NativeConfig, NativeStats, SchedulerKind};
+pub use native::{
+    recommend_mgd_budget, recommend_scheduler, MgdStats, NativeBackend, NativeConfig, NativeStats,
+    SchedulerKind,
+};
 pub use pool::{MgdPool, MgdPoolStats, RequestClass};
 
 #[cfg(feature = "pjrt")]

@@ -5,9 +5,10 @@
 //! [`mgd_exec`](super::mgd_exec), running on the backend's persistent
 //! [`MgdPool`] — workers spawn once, park between solves, and are shared
 //! across every solve and matrix this backend serves).
-//! [`SchedulerKind::Auto`] picks per plan from its level-width
-//! statistics: deep/narrow DAGs — where barriers serialize everything —
-//! go to `mgd`, wide/shallow ones to `level`.
+//! [`SchedulerKind::Auto`] picks per plan by comparing modeled execution
+//! costs ([`recommend_scheduler`] — the same cost model the coordinator's
+//! `MatrixCost` exposes): deep/narrow DAGs — where barriers serialize
+//! everything — go to `mgd`, wide/shallow ones to `level`.
 //!
 //! The level scheduler mirrors the structure of the PJRT level kernels so
 //! both backends share the plan layout and the numeric contract:
@@ -143,6 +144,73 @@ fn resolve_threads_from(configured: usize, env_override: Option<&str>) -> usize 
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(2)
+}
+
+/// Modeled cost of one level barrier, in row-execution units (condvar
+/// broadcast + cache-line ping-pong of the rendezvous — amortized, a
+/// barrier costs roughly as much as a handful of row solves).
+const LEVEL_BARRIER_COST: u64 = 4;
+
+/// Cost-model scheduler recommendation shared by [`NativeBackend`]'s
+/// `Auto` resolution and the coordinator's per-matrix cost model
+/// (`coordinator::cost::MatrixCost`). Compares, in row-execution units:
+///
+/// - **barriered level cost** — each level runs `ceil(width/threads)`
+///   chunk waves and then pays one barrier ([`LEVEL_BARRIER_COST`]);
+/// - **barrier-free mgd cost** — the total work spread over the workers,
+///   floored by the critical path (the level count), plus ~25% node
+///   scheduling overhead (readiness counters, deque traffic).
+///
+/// Deep/narrow DAGs are barrier-dominated and go `Mgd`; wide/shallow
+/// ones amortize their few barriers and go `Level`. Ties go `Mgd` (the
+/// paper's path).
+pub fn recommend_scheduler<I>(level_widths: I, threads: usize) -> SchedulerKind
+where
+    I: IntoIterator<Item = usize>,
+{
+    let t = threads.max(1) as u64;
+    let (mut rows, mut depth, mut waves) = (0u64, 0u64, 0u64);
+    for w in level_widths {
+        rows += w as u64;
+        depth += 1;
+        waves += (w as u64).div_ceil(t);
+    }
+    let level_cost = waves + LEVEL_BARRIER_COST * depth;
+    let mgd_cost = rows.div_ceil(t).max(depth) * 5 / 4;
+    if mgd_cost <= level_cost {
+        SchedulerKind::Mgd
+    } else {
+        SchedulerKind::Level
+    }
+}
+
+/// Node-budget recommendation from the parallelism profile: starts from
+/// [`MgdPlanConfig::auto`]'s average-width sizing and additionally caps
+/// the row budget so the *widest* level can split across every worker —
+/// a DAG with one fat level and a narrow tail no longer ends up with a
+/// handful of oversized nodes starving the pool. Node sizing is a
+/// performance knob only; every budget yields bitwise-identical
+/// solutions (see [`MgdPlan`](super::mgd_plan::MgdPlan)).
+pub fn recommend_mgd_budget<I>(n: usize, level_widths: I, threads: usize) -> MgdPlanConfig
+where
+    I: IntoIterator<Item = usize>,
+{
+    let (mut depth, mut max_width) = (0usize, 0usize);
+    for w in level_widths {
+        depth += 1;
+        max_width = max_width.max(w);
+    }
+    let base = MgdPlanConfig::auto(n, depth, threads);
+    if max_width <= 2 {
+        // Serial-ish DAG: no row parallelism to preserve — keep the
+        // large amortization cap.
+        return base;
+    }
+    let split = (max_width / threads.max(1)).max(8);
+    MgdPlanConfig {
+        max_node_rows: base.max_node_rows.min(split),
+        max_node_edges: base.max_node_edges,
+    }
 }
 
 /// Effective rows-per-chunk for one level: at least the configured
@@ -338,21 +406,29 @@ impl NativeBackend {
         self.scheduler
     }
 
-    /// The scheduler `Auto` resolves to for `plan`: barrier-free `mgd`
-    /// when the average level is too narrow to keep the workers busy
-    /// between barriers, the `level` path otherwise.
+    /// The scheduler `Auto` resolves to for `plan`: the cost-model
+    /// comparison of [`recommend_scheduler`] — barrier-free `mgd` when
+    /// the modeled barrier cost dominates (deep/narrow DAGs), the
+    /// `level` path when the DAG is wide enough to amortize its few
+    /// barriers.
     pub fn resolve_scheduler(&self, plan: &LevelSolver) -> SchedulerKind {
         match self.scheduler {
-            SchedulerKind::Auto => {
-                let avg_width = plan.n().max(1) / plan.num_levels().max(1);
-                if avg_width < 4 * self.threads.max(1) {
-                    SchedulerKind::Mgd
-                } else {
-                    SchedulerKind::Level
-                }
-            }
+            SchedulerKind::Auto => recommend_scheduler(
+                plan.plans().iter().map(|p| p.rows.len()),
+                self.threads,
+            ),
             pinned => pinned,
         }
+    }
+
+    /// The node budget the mgd path builds its cached plan with: the
+    /// parallelism-profile sizing of [`recommend_mgd_budget`].
+    fn mgd_budget(&self, plan: &LevelSolver) -> MgdPlanConfig {
+        recommend_mgd_budget(
+            plan.n(),
+            plan.plans().iter().map(|p| p.rows.len()),
+            self.threads,
+        )
     }
 
     /// Level-scheduler execution counters since construction.
@@ -388,8 +464,7 @@ impl NativeBackend {
         bs: &[B],
         class: RequestClass,
     ) -> Result<Vec<Vec<f32>>> {
-        let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
-        let mgd = plan.mgd_plan(cfg);
+        let mgd = plan.mgd_plan(self.mgd_budget(plan));
         // Serial plans (par_width 1, e.g. pure chains) never touch — and
         // never lazily spawn — the pool; they run inline on this thread.
         let pool = (mgd.par_width > 1).then(|| self.mgd_worker_pool()).flatten();
@@ -551,13 +626,16 @@ impl SolverBackend for NativeBackend {
         // plans (par_width 1) skip the pool spawn — solves of such a
         // matrix never engage it (see `execute_mgd`).
         if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            let cfg = MgdPlanConfig::auto(plan.n(), plan.num_levels(), self.threads);
-            let mgd = plan.mgd_plan(cfg);
+            let mgd = plan.mgd_plan(self.mgd_budget(plan));
             if mgd.par_width > 1 {
                 let _ = self.mgd_worker_pool();
             }
         }
         Ok(())
+    }
+
+    fn chosen_scheduler(&self, plan: &LevelSolver) -> Option<SchedulerKind> {
+        Some(self.resolve_scheduler(plan))
     }
 
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
@@ -727,6 +805,42 @@ mod tests {
             assert_eq!(nb.resolve_scheduler(&chain), pin);
             assert_eq!(nb.resolve_scheduler(&shallow), pin);
         }
+    }
+
+    #[test]
+    fn cost_model_recommendation_matches_dag_shape() {
+        // Pure chain: every level width 1 — barrier cost dominates, the
+        // barrier-free path wins by a wide margin.
+        assert_eq!(
+            recommend_scheduler(std::iter::repeat(1usize).take(200), 4),
+            SchedulerKind::Mgd
+        );
+        // A few very wide levels amortize their barriers — level wins.
+        assert_eq!(
+            recommend_scheduler([500usize, 500, 500, 500], 4),
+            SchedulerKind::Level
+        );
+        // Budget tuning: one fat level among narrow ones caps the row
+        // budget so the fat level splits across every worker...
+        let mut widths = vec![400usize];
+        widths.extend(std::iter::repeat(36usize).take(100));
+        let cfg = recommend_mgd_budget(4000, widths.iter().copied(), 4);
+        assert_eq!(cfg.max_node_rows, 100);
+        // ...while a serial chain keeps the large amortization cap.
+        let chain = recommend_mgd_budget(200, std::iter::repeat(1usize).take(200), 4);
+        assert_eq!(chain.max_node_rows, 128);
+    }
+
+    #[test]
+    fn backend_reports_its_chosen_scheduler() {
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            ..NativeConfig::default()
+        });
+        let chain = LevelSolver::new(&gen::chain(200, GenSeed(31)));
+        assert_eq!(nb.chosen_scheduler(&chain), Some(SchedulerKind::Mgd));
+        let shallow = LevelSolver::new(&gen::shallow(2000, 0.4, GenSeed(32)));
+        assert_eq!(nb.chosen_scheduler(&shallow), Some(SchedulerKind::Level));
     }
 
     #[test]
