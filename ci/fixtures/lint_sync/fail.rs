@@ -16,4 +16,11 @@ impl Counter {
         // Rule C: no safety comment anywhere near this block.
         unsafe { *(&self.0 as *const _ as *const u64) }
     }
+
+    fn first(&self, xs: &[u64]) -> u64 {
+        // Rule D: unchecked indexing outside runtime/kir/ — the SAFETY
+        // comment satisfies rule C but not the location requirement.
+        // SAFETY: the caller promises xs is non-empty.
+        unsafe { *xs.get_unchecked(0) }
+    }
 }

@@ -1,0 +1,10 @@
+//! Rule-D violation fixture for ci/lint_sync.py --selftest: unchecked
+//! indexing inside runtime/kir/ whose SAFETY comment does not name the
+//! verifier, so the bounds obligation is undischarged. Must trip exactly
+//! the [kir] rule (the SAFETY marker keeps rule C satisfied). Never
+//! compiled — lint input only.
+
+fn gather(scratch: &[f32], src: u32) -> f32 {
+    // SAFETY: trust me, the index is fine.
+    unsafe { *scratch.get_unchecked(src as usize) }
+}

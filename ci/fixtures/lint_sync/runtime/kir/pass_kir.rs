@@ -1,0 +1,9 @@
+//! Clean rule-D fixture for ci/lint_sync.py --selftest: unchecked
+//! indexing inside runtime/kir/ with a SAFETY comment naming the
+//! verifier lemma that discharges it. Never compiled — lint input only.
+
+fn gather(scratch: &[f32], src: u32) -> f32 {
+    // SAFETY: kir::verify lemma mac-window proves src < scratch.len()
+    // for every program the interpreter is allowed to execute.
+    unsafe { *scratch.get_unchecked(src as usize) }
+}

@@ -5,7 +5,7 @@ Usage:
     python3 ci/lint_sync.py             # lint the tree (exit 1 on violations)
     python3 ci/lint_sync.py --selftest  # run against ci/fixtures/lint_sync/
 
-Three rules, all enforced on rust/src/**/*.rs (tests under rust/tests/
+Four rules, all enforced on rust/src/**/*.rs (tests under rust/tests/
 and benches are exempt — they model *external* users of the library):
 
 A. Facade discipline. The instrumented primitives must flow through
@@ -26,6 +26,13 @@ B. Relaxed justification. `Ordering::Relaxed` is free in the whitelisted
 
 C. Safety comments. Every line containing an `unsafe` token must have a
    `SAFETY:` comment on the same line or within the 5 preceding lines.
+
+D. Verifier-gated unchecked indexing. `get_unchecked`/`get_unchecked_mut`
+   is the kernel-IR interpreter's privilege: it may appear only under
+   rust/src/runtime/kir/, and each use must sit within 5 lines of a
+   `SAFETY:` comment whose window also names the verifier (`verify`) —
+   the abstract-interpretation lemma that discharges the bounds
+   obligation. Anywhere else, unchecked indexing is an error outright.
 
 The lint is intentionally line-based and dependency-free: it runs on the
 stock python3 of the CI image, before any cargo build.
@@ -68,6 +75,11 @@ MARKER_WINDOW = 5
 UNSAFE = re.compile(r"\bunsafe\b")
 SAFETY_MARKER = "SAFETY:"
 CFG_TEST = re.compile(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+
+# Unchecked slice indexing: only the verifier-gated kernel-IR interpreter
+# may use it (rule D).
+UNCHECKED = re.compile(r"\bget_unchecked(?:_mut)?\b")
+KIR_DIR = "runtime/kir/"
 
 
 def rel(path):
@@ -135,6 +147,28 @@ def lint_file(path, violations):
                     f"comment within {MARKER_WINDOW} lines: {line.strip()}"
                 )
 
+        # Rule D: unchecked indexing only inside the verifier-gated
+        # kernel-IR interpreter, and there only under a SAFETY window
+        # that cites the verifier.
+        if UNCHECKED.search(code):
+            if KIR_DIR not in relpath:
+                violations.append(
+                    f"{relpath}:{i + 1}: [kir] unchecked indexing outside "
+                    f"{KIR_DIR} — only the verifier-gated kernel-IR "
+                    f"interpreter may skip bounds checks: {line.strip()}"
+                )
+            else:
+                window = lines[max(0, i - MARKER_WINDOW) : i + 1]
+                if not (
+                    any(SAFETY_MARKER in w for w in window)
+                    and any("verify" in w for w in window)
+                ):
+                    violations.append(
+                        f"{relpath}:{i + 1}: [kir] unchecked indexing without "
+                        f"a `SAFETY:` comment naming the verifier lemma "
+                        f"within {MARKER_WINDOW} lines: {line.strip()}"
+                    )
+
 
 def lint_tree(root):
     violations = []
@@ -144,26 +178,37 @@ def lint_tree(root):
 
 
 def selftest():
-    """The fixture contract: fail.rs trips every rule, pass.rs none."""
+    """The fixture contract: fail.rs trips every rule, pass.rs none;
+    the runtime/kir/ fixtures pin rule D's location-sensitive halves
+    (fail_kir.rs trips exactly [kir], pass_kir.rs is clean)."""
     fail_path = FIXTURES / "fail.rs"
     pass_path = FIXTURES / "pass.rs"
     failures = []
     lint_file(fail_path, failures)
     tags = {v.split("[", 1)[1].split("]", 1)[0] for v in failures}
-    want = {"facade", "relaxed", "safety"}
+    want = {"facade", "relaxed", "safety", "kir"}
     if tags != want:
         print(f"selftest FAILED: fail.rs tripped {sorted(tags)}, want {sorted(want)}")
         for v in failures:
             print(" ", v)
         return 1
+    kir_failures = []
+    lint_file(FIXTURES / "runtime" / "kir" / "fail_kir.rs", kir_failures)
+    kir_tags = {v.split("[", 1)[1].split("]", 1)[0] for v in kir_failures}
+    if kir_tags != {"kir"}:
+        print(f"selftest FAILED: fail_kir.rs tripped {sorted(kir_tags)}, want ['kir']")
+        for v in kir_failures:
+            print(" ", v)
+        return 1
     passes = []
     lint_file(pass_path, passes)
+    lint_file(FIXTURES / "runtime" / "kir" / "pass_kir.rs", passes)
     if passes:
-        print("selftest FAILED: pass.rs tripped rules:")
+        print("selftest FAILED: pass fixtures tripped rules:")
         for v in passes:
             print(" ", v)
         return 1
-    print(f"selftest OK: fail.rs tripped {sorted(want)}; pass.rs is clean")
+    print(f"selftest OK: fail fixtures tripped {sorted(want)}; pass fixtures are clean")
     return 0
 
 

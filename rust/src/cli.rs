@@ -5,8 +5,10 @@
 //! mgd sim      <matrix>                                 — compile + simulate + verify
 //! mgd check    <matrix> [--corrupt deps|cycle|ext-order|par-width]
 //!                                                       — static MGD plan audit
+//! mgd check-ir <matrix> [--corrupt oob|double-write|csr-order|dead-slot|zero-diag|deps]
+//!                                                       — kernel-IR lowering audit
 //! mgd solve    <matrix> [--rhs ones|ramp] [--backend native|pjrt|auto]
-//!                        [--scheduler level|mgd|auto] [--artifacts DIR]
+//!                        [--scheduler level|mgd|kir|auto] [--artifacts DIR]
 //! mgd serve    --matrices <spec,spec,...> [--shards N] [--workers N]
 //!                        [--requests N] [--swap-every N] [--backend ...]
 //!                        [--scheduler ...] [--queue-cap N]
@@ -29,12 +31,13 @@ use crate::graph::{Dag, DagStats, Levels};
 use crate::matrix::gen::{self, GenSeed};
 use crate::matrix::{io, CsrMatrix};
 use crate::runtime::{
-    BackendConfig, BackendKind, MgdPlan, MgdPlanConfig, NativeConfig, SchedulerKind,
+    kir, mgd_exec, BackendConfig, BackendKind, MgdPlan, MgdPlanConfig, NativeConfig, SchedulerKind,
 };
 use crate::sim::Accelerator;
 use crate::util::Table;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Parse a matrix argument: a MatrixMarket path or `gen:<family>:<n>:<seed>`.
 pub fn load_matrix(spec: &str) -> Result<CsrMatrix> {
@@ -192,6 +195,35 @@ fn run_inner() -> Result<()> {
                 plan.num_dep_edges(),
                 plan.roots.len(),
                 plan.par_width,
+            );
+        }
+        "check-ir" => {
+            let m = load_matrix(args.get(1).context("matrix argument")?)?;
+            let plan = Arc::new(MgdPlan::build(&m, MgdPlanConfig::default()));
+            let mut prog = kir::lower(&plan);
+            if let Some(kind) = flag_value(&args, "--corrupt") {
+                let kind: kir::CorruptKind = kind.parse()?;
+                kir::corrupt_program(&mut prog, kind)?;
+                println!("seeded `{kind}` corruption into the lowered program");
+            }
+            kir::verify(&prog, &plan).context("kernel-IR audit")?;
+            // A clean audit also proves the gated tier end to end: run the
+            // verified interpreter once and require bitwise equality with
+            // the serial reference.
+            let kernel = kir::VerifiedKernel::build(&plan)?;
+            let b = vec![1.0f32; m.n];
+            let (xs, _) = mgd_exec::execute_kernel(&kernel, &[b.clone()], 2)?;
+            let x_ref = crate::matrix::triangular::solve_serial(&m, &b);
+            if xs[0].iter().zip(&x_ref).any(|(a, r)| a.to_bits() != r.to_bits()) {
+                bail!("verified interpreter diverged from the serial reference");
+            }
+            println!(
+                "kir OK: n={} nodes={} ops={} gathers={} — verified interpreter \
+                 bitwise-equal to the serial reference",
+                plan.n,
+                prog.nodes.len(),
+                prog.num_ops(),
+                prog.num_gathers(),
             );
         }
         "solve" => {
@@ -449,8 +481,14 @@ fn print_usage() {
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 static MGD plan audit without executing (the same\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 verifier debug builds run at register/swap); --corrupt\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 seeds one defect to demonstrate the rejection path\n\
+         \x20 mgd check-ir <matrix> [--corrupt oob|double-write|csr-order|\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 dead-slot|zero-diag|deps]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 lower the MGD plan to kernel-IR bytecode, run the\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 abstract-interpretation verifier, and (when clean)\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 check the unchecked interpreter against the serial\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 reference bitwise; --corrupt seeds one bytecode defect\n\
          \x20 mgd solve   <matrix> [--rhs ramp] [--backend native|pjrt|auto]\n\
-         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|auto] [--artifacts DIR]\n\
+         \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler level|mgd|kir|auto] [--artifacts DIR]\n\
          \x20 mgd serve   --matrices <spec,spec,...> [--shards N] [--workers N]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--requests N] [--swap-every N] [--backend ...]\n\
          \x20\x20\x20\x20\x20\x20\x20\x20\x20\x20\x20 [--scheduler ...] [--queue-cap N]\n\
@@ -476,8 +514,10 @@ fn print_usage() {
          families: circuit banded grid powerlaw shallow chain\n\
          backend: native (default serve path), pjrt (needs --features pjrt + artifacts), auto\n\
          scheduler (native backend): level (barriered reference), mgd (barrier-free\n\
-         \x20 medium-granularity dataflow), auto (per-matrix cost model: barriered vs\n\
-         \x20 barrier-free cycle comparison over the level-width profile)\n\
+         \x20 medium-granularity dataflow), kir (mgd with statically verified kernel-IR\n\
+         \x20 node bodies; falls back to mgd if verification fails), auto (per-matrix\n\
+         \x20 cost model: barriered vs barrier-free cycle comparison over the\n\
+         \x20 level-width profile; never picks kir — the unchecked tier is opt-in)\n\
          experiments: fig9a fig9bc fig9def fig10 fig11 fig12 table2 table3 table4\n\
          \x20 backends schedulers serving concurrency admission streaming skew"
     );
@@ -744,5 +784,18 @@ mod tests {
         }
         let mut plan = MgdPlan::build(&m, MgdPlanConfig::default());
         assert!(corrupt_plan(&mut plan, "nope").is_err(), "unknown kind errors");
+    }
+
+    #[test]
+    fn check_ir_corruption_kinds_are_all_rejected() {
+        let m = gen::banded(200, 4, 0.7, GenSeed(5));
+        let plan = Arc::new(MgdPlan::build(&m, MgdPlanConfig::default()));
+        for kind in ["oob", "double-write", "csr-order", "dead-slot", "zero-diag", "deps"] {
+            let mut prog = kir::lower(&plan);
+            kir::verify(&prog, &plan).expect("freshly lowered program verifies");
+            kir::corrupt_program(&mut prog, kind.parse().unwrap()).unwrap();
+            assert!(kir::verify(&prog, &plan).is_err(), "{kind} corruption must be rejected");
+        }
+        assert!("nope".parse::<kir::CorruptKind>().is_err(), "unknown kind errors");
     }
 }

@@ -144,6 +144,29 @@ impl RegisteredMatrix {
         &self.cost
     }
 
+    /// Debug-build static audit of the plan this entry **actually
+    /// serves**: re-runs
+    /// [`MgdPlan::verify`](crate::runtime::MgdPlan::verify) *and* the
+    /// kernel-IR round trip ([`kir::lower`](crate::runtime::kir::lower)
+    /// + [`kir::verify`](crate::runtime::kir::verify())) against the
+    /// medium-granularity plan the backend cached during its
+    /// registration-time
+    /// [`prepare`](crate::runtime::SolverBackend::prepare) warmup. Reads
+    /// the cache only ([`LevelSolver::cached_mgd_plan`]) — it never
+    /// builds a plan, so it cannot poison the backend-owned
+    /// first-config-wins cache — and is a no-op when no plan was cached
+    /// (level-only or pool-less backends).
+    pub fn audit_served_plan(&self) -> Result<()> {
+        let Some(plan) = self.solver.cached_mgd_plan() else {
+            return Ok(());
+        };
+        let key = &self.key;
+        plan.verify()
+            .with_context(|| format!("static plan audit for matrix {key:?}"))?;
+        crate::runtime::kir::verify(&crate::runtime::kir::lower(&plan), &plan)
+            .with_context(|| format!("kernel-IR audit for matrix {key:?}"))
+    }
+
     /// The scheduler the serving backend resolved for this matrix, if
     /// the backend reported one (the native backend always does; PJRT
     /// has no scheduler seam). Recorded by the service after the
@@ -340,16 +363,6 @@ impl MatrixRegistry {
             .with_context(|| format!("double-entry check for matrix {key:?}"))?;
         let metrics = SolveMetrics::from_run(&run.stats, &self.compiler.arch, program.flops());
         let solver = Arc::new(LevelSolver::new(m));
-        // Debug builds statically audit a freshly built medium-granularity
-        // plan at every registration and swap — the static tier of the
-        // verification ladder (`MgdPlan::verify`, also exposed as `mgd
-        // check`). Built standalone on purpose: `LevelSolver::mgd_plan`
-        // caches its first config, and the backend — not the registry —
-        // owns the thread-count choice that picks the served plan's shape.
-        #[cfg(debug_assertions)]
-        crate::runtime::MgdPlan::build(m, crate::runtime::MgdPlanConfig::default())
-            .verify()
-            .with_context(|| format!("static plan audit for matrix {key:?}"))?;
         let cost = MatrixCost::from_plan(&solver).with_measured_cycles(metrics.cycles);
         Ok((program, metrics, solver, cost))
     }
@@ -461,6 +474,12 @@ impl MatrixRegistry {
             scheduler_choice: OnceLock::new(),
         });
         warm(&entry)?;
+        // Debug builds re-audit the plan the replacement will actually
+        // serve — the medium-granularity invariants plus the kernel-IR
+        // lowering round trip — against whatever the warm step cached. A
+        // failed audit aborts before publish; the old entry keeps serving.
+        #[cfg(debug_assertions)]
+        entry.audit_served_plan()?;
         let mut map = self.inner.write().unwrap();
         // Publish only into the lineage the replacement was built from
         // (same shared counters). `contains_key` would be an ABA hole: an

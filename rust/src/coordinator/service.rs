@@ -714,6 +714,15 @@ impl ShardedSolveService {
             let _ = self.registry.remove(key);
             return Err(e.context(format!("prepare backend for matrix {key:?}")));
         }
+        // Debug builds statically audit the plan the backend just cached
+        // (`MgdPlan::verify` + the kernel-IR lowering round trip) — the
+        // static tier of the verification ladder, run against the plan
+        // actually being served rather than a rebuilt default-config copy.
+        #[cfg(debug_assertions)]
+        if let Err(e) = entry.audit_served_plan() {
+            let _ = self.registry.remove(key);
+            return Err(e);
+        }
         if let Some(kind) = backend.chosen_scheduler(entry.solver()) {
             entry.note_scheduler(kind);
         }

@@ -5,10 +5,11 @@
 //! sides. Two implementations exist:
 //!
 //! - [`NativeBackend`](super::NativeBackend) (always available): pure
-//!   Rust, the default request path. Executes through one of two
-//!   schedulers chosen by [`NativeConfig::scheduler`]
-//!   (`SchedulerKind::{Level, Mgd, Auto}`): the barriered level pool or
-//!   the barrier-free medium-granularity DAG executor.
+//!   Rust, the default request path. Executes through a scheduler chosen
+//!   by [`NativeConfig::scheduler`]
+//!   (`SchedulerKind::{Level, Mgd, Kir, Auto}`): the barriered level
+//!   pool, the barrier-free medium-granularity DAG executor, or the
+//!   latter with verified kernel-IR node bodies.
 //! - `PjrtBackend` (behind the `pjrt` cargo feature): dispatches the
 //!   AOT-compiled JAX/Pallas level kernels through PJRT, one compiled
 //!   executable per `(batch, edge_budget)` variant.

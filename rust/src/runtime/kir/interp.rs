@@ -1,0 +1,96 @@
+//! The unchecked interpreter tier: executes verifier-accepted
+//! [`NodeProgram`]s with unchecked indexing.
+//!
+//! Reachable only through [`VerifiedKernel`](super::VerifiedKernel) (the
+//! executor entry points in [`mgd_exec`](crate::runtime::mgd_exec) accept
+//! nothing else), so every program running here has passed
+//! [`verify`](super::verify()). Each `unsafe` block cites the verifier
+//! lemma that discharges it — see the lemma list in `kir::verify`'s
+//! module docs. The memory-ordering protocol is unchanged from the
+//! checked `run_node` path: same Relaxed data accesses ordered by the
+//! scheduler's Release/Acquire dependency counters (runtime/atomics.md).
+
+use super::{KOp, NodeProgram};
+use crate::runtime::sync::atomic::{AtomicU32, Ordering};
+
+/// Execute one node program for every RHS in `bs`. Drop-in replacement
+/// for `mgd_exec::run_node` on the same scheduler: identical arithmetic
+/// in identical order (the verifier's CSR-order obligation), so results
+/// stay bitwise equal to the serial reference.
+///
+/// Callers guarantee `b.len() == n` for every RHS and `x.len() == bs.len()
+/// * n` (checked once per solve in `mgd_exec::execute_impl`); the
+/// verifier guarantees every baked index below.
+pub(crate) fn run_node_program<B: AsRef<[f32]>>(
+    n: usize,
+    node: &NodeProgram,
+    bs: &[B],
+    x: &[AtomicU32],
+    scratch: &mut Vec<f32>,
+    local: &mut Vec<f32>,
+) {
+    let scratch_len = node.scratch_len as usize;
+    let rows = node.rows as usize;
+    for (k, b) in bs.iter().enumerate() {
+        let b = b.as_ref();
+        debug_assert_eq!(b.len(), n);
+        let xk = &x[k * n..(k + 1) * n];
+        scratch.clear();
+        scratch.resize(scratch_len, 0.0);
+        local.clear();
+        local.resize(rows, 0.0);
+        // The three interpreter registers: the row accumulator, the
+        // divisor loaded by LoadDiag, and the row result produced by Div.
+        let mut acc = 0f32;
+        let mut dreg = 0f32;
+        let mut t = 0f32;
+        for op in &node.ops {
+            match *op {
+                KOp::Gather { src_row, dst } => {
+                    // SAFETY: kir::verify lemma gather-window — src_row < n
+                    // == xk.len() and dst < scratch_len == scratch.len().
+                    // relaxed: the Release decrement + Acquire fence on this
+                    // node's dependency counter ordered the producers'
+                    // stores (same protocol as run_node).
+                    let v = unsafe { xk.get_unchecked(src_row as usize) }.load(Ordering::Relaxed);
+                    // SAFETY: kir::verify lemma gather-window (dst half).
+                    unsafe { *scratch.get_unchecked_mut(dst as usize) = f32::from_bits(v) };
+                }
+                KOp::MacExt { coeff, src } => {
+                    // SAFETY: kir::verify lemmas mac-window + def-before-use
+                    // — src < scratch_len and a Gather defined the slot.
+                    acc += coeff * unsafe { *scratch.get_unchecked(src as usize) };
+                }
+                KOp::MacLocal { coeff, src } => {
+                    // SAFETY: kir::verify lemmas mac-window + def-before-use
+                    // — src < rows and an earlier row's StorePsum defined
+                    // the slot.
+                    acc += coeff * unsafe { *local.get_unchecked(src as usize) };
+                }
+                KOp::LoadDiag { diag } => dreg = diag,
+                KOp::Div { row } => {
+                    // SAFETY: kir::verify lemma row-window — row lies in the
+                    // node's window and the window inside the order, so
+                    // row < n == b.len(); lemma diag-nonzero keeps the
+                    // divide finite (dreg was loaded by the row's LoadDiag).
+                    t = (unsafe { *b.get_unchecked(row as usize) } - acc) / dreg;
+                    acc = 0.0;
+                }
+                KOp::StorePsum { dst } => {
+                    // SAFETY: kir::verify lemma psum-window (with
+                    // def-before-use's single-write) — dst < rows ==
+                    // local.len().
+                    unsafe { *local.get_unchecked_mut(dst as usize) = t };
+                }
+                KOp::StoreX { row } => {
+                    // SAFETY: kir::verify lemma row-window — row < n ==
+                    // xk.len().
+                    // relaxed: published to consumers by the Release
+                    // decrement of their dependency counters in
+                    // mgd_exec::complete (same protocol as run_node).
+                    unsafe { xk.get_unchecked(row as usize) }.store(t.to_bits(), Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}

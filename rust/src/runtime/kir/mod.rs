@@ -1,0 +1,514 @@
+//! Verified kernel IR: per-matrix bytecode lowered from an [`MgdPlan`],
+//! statically verified, then executed by an unchecked interpreter.
+//!
+//! This is the first rung of the roadmap's JIT ladder: instead of walking
+//! the plan's SoA layout at run time (bounds checks, `LOCAL_BIT` branch
+//! per edge), [`lower`] flattens every medium node into a straight-line
+//! [`NodeProgram`] with all indices and coefficients baked in. The node
+//! DAG, dependency counters and pool scheduling are untouched — only the
+//! per-node inner loop changes tier.
+//!
+//! An unchecked fast path is only shippable behind a proof, so the module
+//! is structured as verify-then-trust (the same shape as
+//! [`MgdPlan::verify`] and the sync model checker):
+//!
+//! 1. [`lower`] — `MgdPlan` → [`KernelProgram`], pure data transform;
+//! 2. [`verify`] — a static abstract interpreter that replays every
+//!    program against the plan and proves, per node: all loads/stores in
+//!    bounds of their SoA windows, def-before-use and single-write per
+//!    psum slot and per `x[row]`, divides only by the plan's finite
+//!    nonzero diagonal, the CSR reduction order preserved per row (the
+//!    bitwise-vs-serial obligation), and the gather list identical to the
+//!    plan's ICR external-row list so the cross-node effects match the
+//!    predecessor counters and successor lists exactly;
+//! 3. the interpreter (`interp`, crate-private) — executes with unchecked
+//!    indexing, every `unsafe` discharged by a named verifier lemma.
+//!
+//! [`VerifiedKernel`] is the gate between 2 and 3: the only constructor
+//! runs `lower` + `verify`, and the unchecked executor entry points
+//! ([`execute_kernel`](crate::runtime::mgd_exec::execute_kernel)) accept
+//! nothing else. A verification failure is an `Err` the caller maps to a
+//! fallback onto the checked `mgd` tier — never a panic, never UB.
+//!
+//! Seeded corruptions ([`corrupt_program`], `mgd check-ir --corrupt ...`)
+//! prove each obligation is actually load-bearing: every kind must be
+//! rejected with a distinct message.
+//!
+//! # Example
+//!
+//! ```
+//! use std::sync::Arc;
+//! use mgd_sptrsv::matrix::gen::{self, GenSeed};
+//! use mgd_sptrsv::matrix::triangular::solve_serial;
+//! use mgd_sptrsv::runtime::kir::VerifiedKernel;
+//! use mgd_sptrsv::runtime::{mgd_exec, MgdPlan, MgdPlanConfig};
+//!
+//! let m = gen::circuit(300, 4, 0.8, GenSeed(7));
+//! let plan = Arc::new(MgdPlan::build(&m, MgdPlanConfig::default()));
+//!
+//! // Lower + statically verify once, then execute on the unchecked tier.
+//! let kernel = VerifiedKernel::build(&plan).unwrap();
+//! let b: Vec<f32> = (0..m.n).map(|i| (i % 5) as f32 - 2.0).collect();
+//! let (xs, _) = mgd_exec::execute_kernel(&kernel, &[b.clone()], 4).unwrap();
+//!
+//! let want = solve_serial(&m, &b);
+//! for i in 0..m.n {
+//!     assert_eq!(xs[0][i].to_bits(), want[i].to_bits());
+//! }
+//! ```
+
+mod interp;
+mod verify;
+
+pub(crate) use self::interp::run_node_program;
+pub use self::verify::verify;
+
+use super::mgd_plan::{LOCAL_BIT, MgdPlan};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// One bytecode instruction of a [`NodeProgram`]. All indices and
+/// coefficients are baked at lowering time; the verified interpreter
+/// executes them with unchecked indexing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KOp {
+    /// Load `x[src_row]` from the shared slab into scratch slot `dst`
+    /// (one entry of the node's ICR-ordered external gather).
+    Gather {
+        /// Absolute source row in the shared `x` slab (`< n`).
+        src_row: u32,
+        /// Destination scratch slot (`< scratch_len`).
+        dst: u32,
+    },
+    /// `acc += coeff * scratch[src]` — an external-operand MAC.
+    MacExt {
+        /// Baked edge coefficient (`L_ij` in CSR order).
+        coeff: f32,
+        /// Scratch slot holding the gathered external operand.
+        src: u32,
+    },
+    /// `acc += coeff * psum[src]` — an intra-node MAC.
+    MacLocal {
+        /// Baked edge coefficient (`L_ij` in CSR order).
+        coeff: f32,
+        /// Node-local psum slot of the operand row.
+        src: u32,
+    },
+    /// Load the row's baked diagonal into the divisor register.
+    LoadDiag {
+        /// Baked diagonal value (finite and nonzero, proven by `verify`).
+        diag: f32,
+    },
+    /// `t = (b[row] - acc) / diag; acc = 0` — close the row reduction.
+    Div {
+        /// Absolute row of the RHS entry (`first_row + r`).
+        row: u32,
+    },
+    /// Park the row result in the node-local psum slab.
+    StorePsum {
+        /// Node-local psum slot (`== r` for in-node row `r`).
+        dst: u32,
+    },
+    /// Publish the row result to the shared `x` slab.
+    StoreX {
+        /// Absolute destination row (`first_row + r`).
+        row: u32,
+    },
+}
+
+/// Straight-line bytecode for one medium node: the external gathers, then
+/// per row its CSR-ordered MACs, diagonal load, divide and the two
+/// stores. Same window as the plan node it was lowered from.
+#[derive(Debug, Clone)]
+pub struct NodeProgram {
+    /// First absolute row of the node's contiguous window.
+    pub first_row: u32,
+    /// Rows in the window.
+    pub rows: u32,
+    /// Scratch slots the gathers fill (`== ext.len()` of the plan node).
+    pub scratch_len: u32,
+    /// The instruction sequence.
+    pub ops: Vec<KOp>,
+}
+
+/// A lowered [`MgdPlan`]: one [`NodeProgram`] per medium node, same node
+/// ids, same DAG. Produced by [`lower`]; trusted for unchecked execution
+/// only behind [`VerifiedKernel`].
+#[derive(Debug, Clone)]
+pub struct KernelProgram {
+    /// Matrix order (`== plan.n`).
+    pub n: usize,
+    /// One program per plan node, index-aligned with `plan.nodes`.
+    pub nodes: Vec<NodeProgram>,
+}
+
+impl KernelProgram {
+    /// Total instruction count across all node programs.
+    pub fn num_ops(&self) -> usize {
+        self.nodes.iter().map(|p| p.ops.len()).sum()
+    }
+
+    /// Total external gathers across all node programs.
+    pub fn num_gathers(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|p| {
+                p.ops
+                    .iter()
+                    .filter(|o| matches!(o, KOp::Gather { .. }))
+                    .count()
+            })
+            .sum()
+    }
+}
+
+/// Lower every medium node of `plan` into straight-line bytecode with all
+/// indices baked. Pure data transform — the result is only trusted for
+/// unchecked execution after [`verify`] accepts it
+/// ([`VerifiedKernel::build`] does both).
+pub fn lower(plan: &MgdPlan) -> KernelProgram {
+    let nodes = plan
+        .nodes
+        .iter()
+        .map(|nd| {
+            let rows = nd.rows as usize;
+            let mut ops = Vec::with_capacity(nd.ext.len() + nd.edge_val.len() + 4 * rows);
+            for (i, &src_row) in nd.ext.iter().enumerate() {
+                ops.push(KOp::Gather {
+                    src_row,
+                    dst: i as u32,
+                });
+            }
+            for r in 0..rows {
+                let lo = nd.edge_ptr[r] as usize;
+                let hi = nd.edge_ptr[r + 1] as usize;
+                for e in lo..hi {
+                    let slot = nd.edge_slot[e];
+                    let coeff = nd.edge_val[e];
+                    if slot & LOCAL_BIT != 0 {
+                        ops.push(KOp::MacLocal {
+                            coeff,
+                            src: slot & !LOCAL_BIT,
+                        });
+                    } else {
+                        ops.push(KOp::MacExt { coeff, src: slot });
+                    }
+                }
+                ops.push(KOp::LoadDiag { diag: nd.diag[r] });
+                ops.push(KOp::Div {
+                    row: nd.first_row + r as u32,
+                });
+                ops.push(KOp::StorePsum { dst: r as u32 });
+                ops.push(KOp::StoreX {
+                    row: nd.first_row + r as u32,
+                });
+            }
+            NodeProgram {
+                first_row: nd.first_row,
+                rows: nd.rows,
+                scratch_len: nd.ext.len() as u32,
+                ops,
+            }
+        })
+        .collect();
+    KernelProgram { n: plan.n, nodes }
+}
+
+/// A [`KernelProgram`] proven safe by [`verify`], paired with the plan it
+/// was lowered from. This type is the gate in front of the unchecked
+/// interpreter: its only constructor runs the verifier, the interpreter
+/// itself is crate-private, and the executor entry points
+/// ([`execute_kernel`](crate::runtime::mgd_exec::execute_kernel),
+/// [`execute_kernel_on_class`](crate::runtime::mgd_exec::execute_kernel_on_class))
+/// accept only `&VerifiedKernel`.
+pub struct VerifiedKernel {
+    plan: Arc<MgdPlan>,
+    program: KernelProgram,
+}
+
+impl VerifiedKernel {
+    /// Lower `plan` and statically verify the result. The `Err` carries
+    /// the verifier's rejection; callers treat it as "stay on the checked
+    /// `mgd` tier", never as a fatal solve error.
+    pub fn build(plan: &Arc<MgdPlan>) -> Result<Self> {
+        let program = lower(plan);
+        verify(&program, plan).context("kernel-IR verification")?;
+        Ok(Self {
+            plan: Arc::clone(plan),
+            program,
+        })
+    }
+
+    /// The plan the program was lowered from (node DAG, dependency
+    /// counters and pool sizing still come from here).
+    pub fn plan(&self) -> &Arc<MgdPlan> {
+        &self.plan
+    }
+
+    /// The verified bytecode.
+    pub fn program(&self) -> &KernelProgram {
+        &self.program
+    }
+}
+
+/// Seeded corruption kinds for `mgd check-ir --corrupt` and the rejection
+/// tests: each targets one verifier obligation and must be rejected with
+/// a distinct message (the PR-6 acceptance style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptKind {
+    /// Point a MAC at an out-of-window operand slot.
+    Oob,
+    /// Duplicate a `StoreX`, violating single-write per `x[row]`.
+    DoubleWrite,
+    /// Swap two adjacent MACs, breaking the CSR reduction order.
+    CsrOrder,
+    /// Drop a `Gather`, leaving a scratch slot read undefined.
+    DeadSlot,
+    /// Bake a zero diagonal into a `LoadDiag`.
+    ZeroDiag,
+    /// Re-point a `Gather` at the wrong source row, diverging from the
+    /// plan's ICR gather list (the cross-node dependency set).
+    Deps,
+}
+
+impl FromStr for CorruptKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "oob" => Self::Oob,
+            "double-write" => Self::DoubleWrite,
+            "csr-order" => Self::CsrOrder,
+            "dead-slot" => Self::DeadSlot,
+            "zero-diag" => Self::ZeroDiag,
+            "deps" => Self::Deps,
+            other => bail!(
+                "unknown corruption {other:?} (expected \
+                 oob|double-write|csr-order|dead-slot|zero-diag|deps)"
+            ),
+        })
+    }
+}
+
+impl fmt::Display for CorruptKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Oob => "oob",
+            Self::DoubleWrite => "double-write",
+            Self::CsrOrder => "csr-order",
+            Self::DeadSlot => "dead-slot",
+            Self::ZeroDiag => "zero-diag",
+            Self::Deps => "deps",
+        })
+    }
+}
+
+/// Mutate `prog` with one seeded `kind` corruption (for `mgd check-ir
+/// --corrupt` and the rejection tests). Errors if the program offers no
+/// site for the kind — e.g. no node gathers two external rows for
+/// [`CorruptKind::Deps`].
+pub fn corrupt_program(prog: &mut KernelProgram, kind: CorruptKind) -> Result<()> {
+    match kind {
+        CorruptKind::Oob => {
+            for np in &mut prog.nodes {
+                for op in &mut np.ops {
+                    if let KOp::MacExt { src, .. } | KOp::MacLocal { src, .. } = op {
+                        *src = u32::MAX;
+                        return Ok(());
+                    }
+                }
+            }
+            bail!("matrix too small to corrupt: no MAC to point out of its window");
+        }
+        CorruptKind::DoubleWrite => {
+            for np in &mut prog.nodes {
+                if let Some(pos) = np.ops.iter().position(|o| matches!(o, KOp::StoreX { .. })) {
+                    let dup = np.ops[pos];
+                    np.ops.insert(pos + 1, dup);
+                    return Ok(());
+                }
+            }
+            bail!("matrix too small to corrupt: no StoreX to duplicate");
+        }
+        CorruptKind::CsrOrder => {
+            fn is_mac(op: &KOp) -> bool {
+                matches!(op, KOp::MacExt { .. } | KOp::MacLocal { .. })
+            }
+            for np in &mut prog.nodes {
+                for i in 0..np.ops.len().saturating_sub(1) {
+                    // Adjacent MACs always belong to the same row (rows end
+                    // in LoadDiag/Div/stores); an equal pair would swap into
+                    // a no-op, so require a distinguishable pair.
+                    if is_mac(&np.ops[i]) && is_mac(&np.ops[i + 1]) && np.ops[i] != np.ops[i + 1] {
+                        np.ops.swap(i, i + 1);
+                        return Ok(());
+                    }
+                }
+            }
+            bail!("matrix too small to corrupt: no row reduces two distinct edges");
+        }
+        CorruptKind::DeadSlot => {
+            for np in &mut prog.nodes {
+                // Drop the node's last gather: the plan references every
+                // ext entry from at least one edge, so some MacExt now
+                // reads the slot before anything defines it.
+                if let Some(last) = np.ops.iter().rposition(|o| matches!(o, KOp::Gather { .. })) {
+                    np.ops.remove(last);
+                    return Ok(());
+                }
+            }
+            bail!("matrix too small to corrupt: no Gather to drop");
+        }
+        CorruptKind::ZeroDiag => {
+            for np in &mut prog.nodes {
+                for op in &mut np.ops {
+                    if let KOp::LoadDiag { diag } = op {
+                        *diag = 0.0;
+                        return Ok(());
+                    }
+                }
+            }
+            bail!("matrix too small to corrupt: no LoadDiag to zero");
+        }
+        CorruptKind::Deps => {
+            for np in &mut prog.nodes {
+                let gathers: Vec<usize> = np
+                    .ops
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, o)| matches!(o, KOp::Gather { .. }))
+                    .map(|(i, _)| i)
+                    .collect();
+                if gathers.len() >= 2 {
+                    let KOp::Gather { src_row: wrong, .. } = np.ops[gathers[1]] else {
+                        unreachable!("filtered to gathers above");
+                    };
+                    // The ext list is strictly ascending, so pointing the
+                    // first gather at the second's row always diverges.
+                    if let KOp::Gather { src_row, .. } = &mut np.ops[gathers[0]] {
+                        *src_row = wrong;
+                    }
+                    return Ok(());
+                }
+            }
+            bail!("matrix too small to corrupt: no node gathers two external rows");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gen;
+    use crate::matrix::triangular::solve_serial;
+    use crate::runtime::mgd_exec;
+    use crate::runtime::mgd_plan::MgdPlanConfig;
+
+    fn rhs_batch(n: usize, count: usize) -> Vec<Vec<f32>> {
+        (0..count)
+            .map(|k| (0..n).map(|i| ((i + 3 * k) % 9) as f32 - 4.0).collect())
+            .collect()
+    }
+
+    /// Lowering is total and verified over the whole generator suite, and
+    /// the op census matches the plan exactly: one gather per ext entry,
+    /// one MAC per packed edge, and a fixed 4-op row epilogue.
+    #[test]
+    fn lowering_is_verified_across_generators() {
+        for (name, m) in &gen::test_suite() {
+            let plan = MgdPlan::build(m, MgdPlanConfig::default());
+            let prog = lower(&plan);
+            verify(&prog, &plan).unwrap_or_else(|e| panic!("{name}: rejected: {e:#}"));
+            assert_eq!(prog.n, m.n);
+            assert_eq!(prog.nodes.len(), plan.num_nodes());
+            let edges: usize = plan.nodes.iter().map(|nd| nd.edge_val.len()).sum();
+            let exts: usize = plan.nodes.iter().map(|nd| nd.ext.len()).sum();
+            assert_eq!(prog.num_gathers(), exts, "{name}: gather census");
+            assert_eq!(prog.num_ops(), exts + edges + 4 * m.n, "{name}: op census");
+        }
+    }
+
+    /// Property test (tentpole acceptance): the verified interpreter is
+    /// **bitwise identical** to the serial reference for all 8 generator
+    /// families × threads {1, 2, 8} × RHS batches {1, 3, 11}.
+    #[test]
+    fn kir_interpreter_matches_reference() {
+        for (name, m) in &gen::test_suite() {
+            let plan = Arc::new(MgdPlan::build(m, MgdPlanConfig::default()));
+            let kernel = VerifiedKernel::build(&plan)
+                .unwrap_or_else(|e| panic!("{name}: verifier rejected lowered plan: {e:#}"));
+            for threads in [1usize, 2, 8] {
+                for count in [1usize, 3, 11] {
+                    let bs = rhs_batch(m.n, count);
+                    let (xs, stats) = mgd_exec::execute_kernel(&kernel, &bs, threads).unwrap();
+                    assert_eq!(xs.len(), count);
+                    assert_eq!(stats.nodes_executed, plan.num_nodes() as u64);
+                    for (b, x) in bs.iter().zip(&xs) {
+                        let want = solve_serial(m, b);
+                        for i in 0..m.n {
+                            assert_eq!(
+                                x[i].to_bits(),
+                                want[i].to_bits(),
+                                "{name}: threads={threads} batch={count} row {i}: \
+                                 {} != {}",
+                                x[i],
+                                want[i],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Every seeded corruption kind is rejected, and each with its own
+    /// distinct message (so `mgd check-ir --corrupt` failures are
+    /// diagnosable). Some kinds need structure (two gathers in one node,
+    /// two distinct edges in one row) that not every generator offers, so
+    /// each kind scans the suite for its first viable site.
+    #[test]
+    fn corruption_kinds_are_rejected_with_distinct_messages() {
+        let suite = gen::test_suite();
+        let kinds: [(CorruptKind, &str); 6] = [
+            (CorruptKind::Oob, "out of bounds"),
+            (CorruptKind::DoubleWrite, "written twice"),
+            (CorruptKind::CsrOrder, "CSR reduction order"),
+            (CorruptKind::DeadSlot, "defines it"),
+            (CorruptKind::ZeroDiag, "finite and nonzero"),
+            (CorruptKind::Deps, "ICR gather list"),
+        ];
+        for (kind, needle) in kinds {
+            let mut rejected = false;
+            for (name, m) in &suite {
+                let plan = MgdPlan::build(m, MgdPlanConfig::default());
+                let mut prog = lower(&plan);
+                if corrupt_program(&mut prog, kind).is_err() {
+                    continue; // no site for this kind in this matrix
+                }
+                let err = verify(&prog, &plan)
+                    .expect_err(&format!("{name}: verifier accepted '{kind}' corruption"));
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains(needle),
+                    "{name}: '{kind}' rejection {msg:?} lacks needle {needle:?}"
+                );
+                rejected = true;
+                break;
+            }
+            assert!(rejected, "no suite matrix offered a '{kind}' corruption site");
+        }
+    }
+
+    #[test]
+    fn corrupt_kind_parses_and_displays() {
+        use CorruptKind::*;
+        for kind in [Oob, DoubleWrite, CsrOrder, DeadSlot, ZeroDiag, Deps] {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<CorruptKind>().unwrap(), kind, "{s}");
+        }
+        let err = "nope".parse::<CorruptKind>().unwrap_err();
+        assert!(format!("{err}").contains("expected oob|double-write"));
+    }
+}

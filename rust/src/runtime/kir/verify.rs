@@ -1,0 +1,319 @@
+//! The static abstract interpreter gating the unchecked tier.
+//!
+//! [`verify`] replays every [`NodeProgram`] symbolically against the
+//! [`MgdPlan`] it claims to implement and discharges the lemmas the
+//! interpreter's `unsafe` blocks cite:
+//!
+//! - `gather-window` — every `Gather` reads `src_row < n` and writes
+//!   `dst < scratch_len`;
+//! - `mac-window` — every MAC reads inside its scratch / psum window;
+//! - `def-before-use` — every scratch read is preceded by its `Gather`,
+//!   every psum read by the producing row's `StorePsum`; psum slots and
+//!   `x[row]` are written exactly once (single-write);
+//! - `row-window` — every `Div` / `StoreX` row lies in the node's
+//!   window, and the window lies inside the matrix order;
+//! - `diag-nonzero` — every `LoadDiag` bakes a finite nonzero value that
+//!   is bit-identical to the plan's diagonal;
+//! - CSR order — each row's MAC sequence is exactly the plan's packed
+//!   edge list, in CSR order with bit-identical coefficients (the
+//!   bitwise-vs-serial obligation);
+//! - cross-node effects — the gather sequence is exactly the plan's
+//!   ICR-ordered `ext` list and every window row is published, so the
+//!   program's external reads and writes match the predecessor counters
+//!   and successor lists the DAG schedule was built from.
+//!
+//! The verifier is pure and runs off the hot path (once per matrix at
+//! registration); rejection messages are stable substrings the CLI and
+//! tests assert on.
+
+use super::super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
+use super::{KOp, KernelProgram, NodeProgram};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Where the abstract interpreter stands inside the current row's
+/// mandatory epilogue (`LoadDiag` → `Div` → `StorePsum` → `StoreX`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stage {
+    /// Accumulating the row's MACs (or between rows / in the gather
+    /// prefix).
+    Macs,
+    /// Diagonal loaded, divide pending.
+    Diaged,
+    /// Row solved into the accumulator register, stores pending.
+    Dived,
+    /// Psum parked; the publishing `StoreX` must follow.
+    PsumStored,
+}
+
+/// Statically verify that `prog` is a faithful, in-bounds lowering of
+/// `plan`. `Ok(())` is the proof the unchecked interpreter relies on;
+/// `Err` carries the first violated obligation (distinct message per
+/// corruption kind).
+pub fn verify(prog: &KernelProgram, plan: &MgdPlan) -> Result<()> {
+    ensure!(
+        prog.n == plan.n,
+        "program order {} != plan order {}",
+        prog.n,
+        plan.n
+    );
+    ensure!(
+        prog.nodes.len() == plan.nodes.len(),
+        "program has {} node programs, plan has {} nodes",
+        prog.nodes.len(),
+        plan.nodes.len()
+    );
+    for (k, (np, nd)) in prog.nodes.iter().zip(&plan.nodes).enumerate() {
+        verify_node(np, nd, plan.n).with_context(|| {
+            format!(
+                "node {k} (rows {}..{})",
+                nd.first_row,
+                nd.first_row as usize + nd.rows as usize
+            )
+        })?;
+    }
+    Ok(())
+}
+
+fn verify_node(np: &NodeProgram, nd: &MgdNode, n: usize) -> Result<()> {
+    ensure!(
+        np.first_row == nd.first_row && np.rows == nd.rows,
+        "program window {}+{} != plan window {}+{}",
+        np.first_row,
+        np.rows,
+        nd.first_row,
+        nd.rows
+    );
+    let first = nd.first_row as usize;
+    let rows = nd.rows as usize;
+    let ext_len = nd.ext.len();
+    ensure!(
+        np.scratch_len as usize == ext_len,
+        "scratch window {} != plan ICR gather list length {ext_len}",
+        np.scratch_len
+    );
+    // Lemma row-window (outer half): the node's whole row window lies
+    // inside the matrix order, so any in-window row index is `< n`.
+    ensure!(
+        first + rows <= n,
+        "row window {first}..{} out of bounds of order {n}",
+        first + rows
+    );
+
+    let mut stage = Stage::Macs;
+    let mut gathers = 0usize; // gather prefix length consumed so far
+    let mut rows_done = 0usize;
+    let mut edge = 0usize; // MACs seen in the current row
+    let mut scratch_def = vec![false; ext_len];
+    let mut psum_def = vec![false; rows];
+    let mut x_def = vec![false; rows];
+
+    for (pc, op) in np.ops.iter().enumerate() {
+        match *op {
+            KOp::Gather { src_row, dst } => {
+                ensure!(
+                    stage == Stage::Macs && rows_done == 0 && edge == 0,
+                    "op {pc}: Gather after row work began — gathers must prefix the program"
+                );
+                // Lemma gather-window: both halves checked before the
+                // slot is marked defined.
+                ensure!(
+                    (dst as usize) < ext_len,
+                    "op {pc}: Gather dst slot {dst} out of bounds of scratch window {ext_len}"
+                );
+                ensure!(
+                    (src_row as usize) < n,
+                    "op {pc}: Gather source row {src_row} out of bounds of order {n}"
+                );
+                ensure!(
+                    dst as usize == gathers,
+                    "op {pc}: Gather dst {dst} out of ICR order (expected slot {gathers})"
+                );
+                ensure!(
+                    src_row == nd.ext[gathers],
+                    "op {pc}: Gather {gathers} loads row {src_row} but the plan's ICR gather \
+                     list names row {} — the cross-node dependency set would diverge from \
+                     the predecessor counters",
+                    nd.ext[gathers]
+                );
+                scratch_def[gathers] = true;
+                gathers += 1;
+            }
+            KOp::MacExt { coeff, src } => {
+                ensure!(
+                    stage == Stage::Macs,
+                    "op {pc}: MacExt inside a row epilogue ({stage:?})"
+                );
+                ensure!(rows_done < rows, "op {pc}: MacExt after the window's last row");
+                // Lemma mac-window, then lemma def-before-use — bounds
+                // first so the def lookup itself cannot trap.
+                ensure!(
+                    (src as usize) < ext_len,
+                    "op {pc}: MacExt scratch slot {src} out of bounds of gather window {ext_len}"
+                );
+                ensure!(
+                    scratch_def[src as usize],
+                    "op {pc}: MacExt reads scratch slot {src} before any Gather defines it"
+                );
+                check_edge(nd, rows_done, edge, false, src, coeff)
+                    .with_context(|| format!("op {pc}"))?;
+                edge += 1;
+            }
+            KOp::MacLocal { coeff, src } => {
+                ensure!(
+                    stage == Stage::Macs,
+                    "op {pc}: MacLocal inside a row epilogue ({stage:?})"
+                );
+                ensure!(rows_done < rows, "op {pc}: MacLocal after the window's last row");
+                ensure!(
+                    (src as usize) < rows,
+                    "op {pc}: MacLocal psum slot {src} out of bounds of node window {rows}"
+                );
+                ensure!(
+                    psum_def[src as usize],
+                    "op {pc}: MacLocal reads psum slot {src} before any row defines it"
+                );
+                check_edge(nd, rows_done, edge, true, src, coeff)
+                    .with_context(|| format!("op {pc}"))?;
+                edge += 1;
+            }
+            KOp::LoadDiag { diag } => {
+                ensure!(
+                    stage == Stage::Macs,
+                    "op {pc}: LoadDiag inside a row epilogue ({stage:?})"
+                );
+                ensure!(rows_done < rows, "op {pc}: LoadDiag after the window's last row");
+                let lo = nd.edge_ptr[rows_done] as usize;
+                let hi = nd.edge_ptr[rows_done + 1] as usize;
+                ensure!(
+                    edge == hi - lo,
+                    "op {pc}: row {rows_done} reduces {edge} edges but the plan's CSR row \
+                     has {} — the CSR reduction order is not preserved",
+                    hi - lo
+                );
+                // Lemma diag-nonzero precedes the bit comparison so a
+                // zeroed bake gets its own message, not a mismatch one.
+                ensure!(
+                    diag.is_finite() && diag != 0.0,
+                    "op {pc}: baked diagonal {diag} must be finite and nonzero"
+                );
+                ensure!(
+                    diag.to_bits() == nd.diag[rows_done].to_bits(),
+                    "op {pc}: baked diagonal {diag} != plan diagonal {}",
+                    nd.diag[rows_done]
+                );
+                stage = Stage::Diaged;
+            }
+            KOp::Div { row } => {
+                ensure!(
+                    stage == Stage::Diaged,
+                    "op {pc}: Div without a preceding LoadDiag ({stage:?})"
+                );
+                // Lemma row-window (inner half): the divide reads
+                // `b[row]` for exactly the current in-window row.
+                ensure!(
+                    row as usize == first + rows_done,
+                    "op {pc}: Div row {row} != expected row {}",
+                    first + rows_done
+                );
+                stage = Stage::Dived;
+            }
+            KOp::StorePsum { dst } => {
+                ensure!(
+                    (dst as usize) < rows,
+                    "op {pc}: StorePsum slot {dst} out of bounds of node window {rows}"
+                );
+                ensure!(
+                    !psum_def[dst as usize],
+                    "op {pc}: psum slot {dst} written twice — single-write per slot violated"
+                );
+                ensure!(
+                    stage == Stage::Dived,
+                    "op {pc}: StorePsum before the row's Div ({stage:?})"
+                );
+                ensure!(
+                    dst as usize == rows_done,
+                    "op {pc}: StorePsum slot {dst} != current row {rows_done}"
+                );
+                psum_def[dst as usize] = true;
+                stage = Stage::PsumStored;
+            }
+            KOp::StoreX { row } => {
+                let r = match (row as usize).checked_sub(first) {
+                    Some(r) if r < rows => r,
+                    _ => bail!(
+                        "op {pc}: StoreX row {row} out of bounds of window {first}..{}",
+                        first + rows
+                    ),
+                };
+                ensure!(
+                    !x_def[r],
+                    "op {pc}: x[{row}] written twice — single-write per row violated"
+                );
+                ensure!(
+                    stage == Stage::PsumStored,
+                    "op {pc}: StoreX before the row's psum store ({stage:?})"
+                );
+                ensure!(
+                    r == rows_done,
+                    "op {pc}: StoreX row {row} != current row {}",
+                    first + rows_done
+                );
+                x_def[r] = true;
+                rows_done += 1;
+                edge = 0;
+                stage = Stage::Macs;
+            }
+        }
+    }
+
+    ensure!(stage == Stage::Macs, "node program ends mid-row ({stage:?})");
+    // Cross-node effects, read side: the gather prefix consumed the
+    // plan's ICR gather list exactly (order and rows already matched op
+    // by op above — this closes the length).
+    ensure!(
+        gathers == ext_len,
+        "only {gathers} of the plan's {ext_len} ICR gather list entries are loaded — the \
+         cross-node dependency set would diverge from the predecessor counters"
+    );
+    // Write side: every window row published, so successors decremented
+    // by this node observe every operand they gather.
+    ensure!(
+        rows_done == rows,
+        "only {rows_done} of {rows} window rows are solved and published"
+    );
+    Ok(())
+}
+
+/// One MAC checked against the plan's packed edge list: same operand
+/// kind, same slot, bit-identical coefficient, exactly at CSR position
+/// `edge` of row `row` — any divergence breaks the bitwise-vs-serial
+/// reduction-order contract.
+fn check_edge(
+    nd: &MgdNode,
+    row: usize,
+    edge: usize,
+    local: bool,
+    src: u32,
+    coeff: f32,
+) -> Result<()> {
+    let lo = nd.edge_ptr[row] as usize;
+    let hi = nd.edge_ptr[row + 1] as usize;
+    ensure!(
+        lo + edge < hi,
+        "row {row} reduces more than the plan's {} CSR edges — the CSR reduction order is \
+         not preserved",
+        hi - lo
+    );
+    let want_slot = nd.edge_slot[lo + edge];
+    let want_local = want_slot & LOCAL_BIT != 0;
+    let want_src = want_slot & !LOCAL_BIT;
+    let want_coeff = nd.edge_val[lo + edge];
+    ensure!(
+        local == want_local && src == want_src && coeff.to_bits() == want_coeff.to_bits(),
+        "row {row} edge {edge} ({} slot {src}, coeff {coeff}) diverges from the plan's CSR \
+         reduction order ({} slot {want_src}, coeff {want_coeff})",
+        if local { "local" } else { "ext" },
+        if want_local { "local" } else { "ext" }
+    );
+    Ok(())
+}

@@ -14,6 +14,7 @@
 //! like the L2 python mirror; the native backend reproduces the same
 //! budget/carry split in pure Rust.
 
+use super::kir::VerifiedKernel;
 use super::mgd_plan::{MgdPlan, MgdPlanConfig};
 use crate::graph::{Dag, Levels};
 use crate::matrix::CsrMatrix;
@@ -38,6 +39,10 @@ pub struct LevelSolver {
     /// Lazily-built medium-granularity plan (the `mgd` scheduler's input),
     /// cached so repeated solves share one preprocessing pass.
     mgd: OnceLock<Arc<MgdPlan>>,
+    /// Lazily lowered + verified kernel IR (the `kir` scheduler's input).
+    /// `Some` caches a verified kernel; `None` caches a verification
+    /// failure so the fallback to `mgd` is decided once, off the hot path.
+    kir: OnceLock<Option<Arc<VerifiedKernel>>>,
 }
 
 impl LevelSolver {
@@ -60,6 +65,7 @@ impl LevelSolver {
             matrix: Arc::new(m.clone()),
             plans: Arc::new(plans),
             mgd: OnceLock::new(),
+            kir: OnceLock::new(),
         }
     }
 
@@ -73,6 +79,35 @@ impl LevelSolver {
             self.mgd
                 .get_or_init(|| Arc::new(MgdPlan::build(&self.matrix, cfg))),
         )
+    }
+
+    /// The verified kernel IR of this matrix (the `kir` scheduler tier),
+    /// lowered from [`Self::mgd_plan`] and statically verified on first
+    /// use, then cached — including a cached `None` when verification
+    /// fails, so callers decide the fallback to the checked `mgd` tier
+    /// once per matrix instead of re-verifying per solve.
+    pub fn kir_kernel(&self, cfg: MgdPlanConfig) -> Option<Arc<VerifiedKernel>> {
+        self.kir
+            .get_or_init(|| {
+                let plan = self.mgd_plan(cfg);
+                VerifiedKernel::build(&plan).ok().map(Arc::new)
+            })
+            .clone()
+    }
+
+    /// The cached medium-granularity plan, if any caller built one yet.
+    /// Audit/introspection hook (e.g. the registry's debug-build static
+    /// audit): never builds, so it cannot poison the first-config-wins
+    /// cache the backend owns.
+    pub fn cached_mgd_plan(&self) -> Option<Arc<MgdPlan>> {
+        self.mgd.get().cloned()
+    }
+
+    /// Test hook: pre-poison the kir cache with a verification failure so
+    /// fallback paths can be exercised deterministically.
+    #[cfg(test)]
+    pub(crate) fn fail_kir_for_tests(&self) {
+        let _ = self.kir.set(None);
     }
 
     /// Matrix order.

@@ -35,6 +35,12 @@
 //! per-solve-spawn baseline that `mgd bench serving` compares the
 //! persistent pool against.
 //!
+//! The same scheduler also drives the verified kernel-IR tier
+//! ([`execute_kernel`] / [`execute_kernel_on_class`]): each node runs as
+//! statically verified bytecode ([`runtime::kir`](super::kir)) instead of
+//! the checked SoA walk — same reduction order, same bits, no per-edge
+//! bounds checks or `LOCAL_BIT` branches.
+//!
 //! # Example
 //!
 //! One-shot and pooled execution of the same plan; both are bitwise equal
@@ -64,6 +70,7 @@
 //! }
 //! ```
 
+use super::kir::{KernelProgram, VerifiedKernel};
 use super::mgd_plan::{LOCAL_BIT, MgdNode, MgdPlan};
 use super::pool::{MgdPool, RequestClass};
 use super::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -85,6 +92,11 @@ pub struct MgdExecStats {
 /// staging copy.
 struct Run<'a, B: AsRef<[f32]> + Sync> {
     plan: &'a MgdPlan,
+    /// Verified bytecode for each node when this run executes on the
+    /// unchecked kir tier; `None` runs the checked [`run_node`] walk.
+    /// Only ever `Some` for a program that came out of a
+    /// [`VerifiedKernel`] (see [`execute_kernel_on_class`]).
+    kernel: Option<&'a KernelProgram>,
     bs: &'a [B],
     /// `f32` bits of the solution, `(rhs, n)` row-major.
     x: &'a [AtomicU32],
@@ -165,6 +177,50 @@ pub fn execute_on_class<B: AsRef<[f32]> + Sync>(
     threads: usize,
     class: RequestClass,
 ) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    execute_impl(plan, None, bs, pool, threads, class)
+}
+
+/// [`execute`] on the verified kernel-IR tier: one-shot convenience that
+/// spawns a transient pool and runs every node through the unchecked
+/// bytecode interpreter (`runtime::kir`). Bitwise identical to the
+/// checked paths — the verifier proved the programs preserve the CSR
+/// reduction order.
+pub fn execute_kernel<B: AsRef<[f32]> + Sync>(
+    kernel: &VerifiedKernel,
+    bs: &[B],
+    threads: usize,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    let extra = effective_workers(kernel.plan(), threads).saturating_sub(1);
+    let pool = MgdPool::new(extra);
+    execute_kernel_on_class(kernel, bs, &pool, threads, RequestClass::Bulk)
+}
+
+/// [`execute_on_class`] on the verified kernel-IR tier: the same
+/// barrier-free node scheduling (counters, deques, steals — all driven by
+/// the kernel's plan), with each node's inner loop executed by the
+/// unchecked interpreter instead of the checked SoA walk. Accepting only
+/// [`VerifiedKernel`] is what keeps the unchecked tier gated behind
+/// `kir::verify`.
+pub fn execute_kernel_on_class<B: AsRef<[f32]> + Sync>(
+    kernel: &VerifiedKernel,
+    bs: &[B],
+    pool: &MgdPool,
+    threads: usize,
+    class: RequestClass,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
+    execute_impl(kernel.plan(), Some(kernel.program()), bs, pool, threads, class)
+}
+
+/// Shared body of the checked and kernel-IR execution paths: identical
+/// scheduling, per-node compute tier chosen by `kernel`.
+fn execute_impl<B: AsRef<[f32]> + Sync>(
+    plan: &MgdPlan,
+    kernel: Option<&KernelProgram>,
+    bs: &[B],
+    pool: &MgdPool,
+    threads: usize,
+    class: RequestClass,
+) -> Result<(Vec<Vec<f32>>, MgdExecStats)> {
     let n = plan.n;
     let r = bs.len();
     if r == 0 {
@@ -187,8 +243,17 @@ pub fn execute_on_class<B: AsRef<[f32]> + Sync>(
         // Serial path: node ids are topological, no scheduling needed.
         let mut scratch = Vec::new();
         let mut local = Vec::new();
-        for node in &plan.nodes {
-            run_node(n, node, bs, &x, &mut scratch, &mut local);
+        match kernel {
+            Some(prog) => {
+                for np in &prog.nodes {
+                    super::kir::run_node_program(n, np, bs, &x, &mut scratch, &mut local);
+                }
+            }
+            None => {
+                for node in &plan.nodes {
+                    run_node(n, node, bs, &x, &mut scratch, &mut local);
+                }
+            }
         }
         let stats = MgdExecStats {
             nodes_executed: num_nodes as u64,
@@ -198,6 +263,7 @@ pub fn execute_on_class<B: AsRef<[f32]> + Sync>(
     }
     let run = Run {
         plan,
+        kernel,
         bs,
         x: &x,
         counters: plan
@@ -288,14 +354,7 @@ fn worker_loop<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) {
         // Catch panics so one bad node cannot strand the other workers in
         // their idle loops; the poison flag turns it into a solve error.
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_node(
-                run.plan.n,
-                &run.plan.nodes[nid as usize],
-                run.bs,
-                run.x,
-                &mut scratch,
-                &mut local,
-            );
+            exec_node(run, nid, &mut scratch, &mut local);
         }))
         .is_ok();
         if !ok {
@@ -305,6 +364,36 @@ fn worker_loop<B: AsRef<[f32]> + Sync>(run: &Run<'_, B>, w: usize) {
             return;
         }
         complete(run, w, nid);
+    }
+}
+
+/// Run one node on whichever compute tier the run was launched with: the
+/// verified bytecode interpreter when a kernel is present, the checked
+/// reference walk otherwise. Per-node results are bitwise identical, so
+/// the scheduler above never needs to know the tier.
+fn exec_node<B: AsRef<[f32]> + Sync>(
+    run: &Run<'_, B>,
+    nid: u32,
+    scratch: &mut Vec<f32>,
+    local: &mut Vec<f32>,
+) {
+    match run.kernel {
+        Some(prog) => super::kir::run_node_program(
+            run.plan.n,
+            &prog.nodes[nid as usize],
+            run.bs,
+            run.x,
+            scratch,
+            local,
+        ),
+        None => run_node(
+            run.plan.n,
+            &run.plan.nodes[nid as usize],
+            run.bs,
+            run.x,
+            scratch,
+            local,
+        ),
     }
 }
 

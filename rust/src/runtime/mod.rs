@@ -7,8 +7,8 @@
 //! right-hand side:
 //!
 //! - [`NativeBackend`] — the default: pure Rust, no FFI, no build
-//!   artifacts. It owns two schedulers selected by
-//!   [`SchedulerKind`] (`--scheduler level|mgd|auto`):
+//!   artifacts. It owns the schedulers selected by
+//!   [`SchedulerKind`] (`--scheduler level|mgd|kir|auto`):
 //!   - `level` — the simple/reference path: a `std::thread` worker pool
 //!     with one barrier per level set and adaptive chunk sizing;
 //!   - `mgd` — the paper's medium-granularity dataflow on the serve
@@ -20,9 +20,14 @@
 //!     and independent solves overlap as concurrent slot-leased
 //!     sessions); bitwise identical to the serial reference for any
 //!     thread count;
+//!   - `kir` — the `mgd` scheduler with each node's inner loop lowered
+//!     to statically verified, index-baked bytecode run by an unchecked
+//!     interpreter ([`kir`]); falls back to `mgd` per matrix if the
+//!     verifier rejects the lowered program;
 //!   - `auto` — picks per plan from the cost model
 //!     ([`recommend_scheduler`]): modeled barriered vs barrier-free
-//!     execution cost (deep/narrow DAGs go barrier-free).
+//!     execution cost (deep/narrow DAGs go barrier-free). `auto` never
+//!     picks `kir` — the unchecked tier is opt-in.
 //! - `PjrtBackend` (cargo feature `pjrt`) — loads the AOT-compiled
 //!   JAX/Pallas level kernels from `artifacts/*.hlo.txt` and executes
 //!   them through PJRT. Python runs only at build time (`make
@@ -30,7 +35,7 @@
 //!   is on *and* the artifacts load.
 //!
 //! Construct backends through [`create_backend`]; the coordinator, CLI
-//! (`--backend native|pjrt|auto --scheduler level|mgd|auto`) and bench
+//! (`--backend native|pjrt|auto --scheduler level|mgd|kir|auto`) and bench
 //! harness all route through it.
 //!
 //! The cross-thread memory-ordering contract shared by both native
@@ -41,6 +46,7 @@
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod client;
+pub mod kir;
 pub mod level_exec;
 pub mod mgd_exec;
 pub mod mgd_plan;
@@ -51,12 +57,13 @@ pub mod sync;
 pub(crate) mod xla_shim;
 
 pub use backend::{create_backend, BackendConfig, BackendKind, SolverBackend};
+pub use kir::{KernelProgram, VerifiedKernel};
 pub use level_exec::{LevelPlan, LevelSolver};
 pub use mgd_exec::MgdExecStats;
 pub use mgd_plan::{MgdPlan, MgdPlanConfig};
 pub use native::{
-    recommend_mgd_budget, recommend_scheduler, MgdStats, NativeBackend, NativeConfig, NativeStats,
-    SchedulerKind,
+    recommend_mgd_budget, recommend_scheduler, KirStats, MgdStats, NativeBackend, NativeConfig,
+    NativeStats, SchedulerKind,
 };
 pub use pool::{MgdPool, MgdPoolStats, RequestClass};
 

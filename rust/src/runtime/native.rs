@@ -53,6 +53,12 @@ pub enum SchedulerKind {
     Level,
     /// Barrier-free medium-granularity node scheduling with work stealing.
     Mgd,
+    /// The `mgd` scheduler with node bodies lowered to statically
+    /// verified, index-baked bytecode run unchecked
+    /// ([`runtime::kir`](super::kir)). Opt-in (`Auto` never resolves to
+    /// it); falls back to `Mgd` per matrix when the verifier rejects the
+    /// lowered program.
+    Kir,
 }
 
 impl FromStr for SchedulerKind {
@@ -63,7 +69,8 @@ impl FromStr for SchedulerKind {
             "auto" => Ok(Self::Auto),
             "level" => Ok(Self::Level),
             "mgd" => Ok(Self::Mgd),
-            other => bail!("unknown scheduler {other:?} (expected level|mgd|auto)"),
+            "kir" => Ok(Self::Kir),
+            other => bail!("unknown scheduler {other:?} (expected level|mgd|kir|auto)"),
         }
     }
 }
@@ -74,6 +81,7 @@ impl std::fmt::Display for SchedulerKind {
             Self::Auto => "auto",
             Self::Level => "level",
             Self::Mgd => "mgd",
+            Self::Kir => "kir",
         })
     }
 }
@@ -315,6 +323,16 @@ pub struct MgdStats {
     pub steals: u64,
 }
 
+/// Counters of the verified kernel-IR (`kir`) tier since construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KirStats {
+    /// Solves executed through the verified unchecked interpreter.
+    pub solves: u64,
+    /// Solves routed to `kir` that fell back to the checked `mgd` tier
+    /// because the matrix's lowered program failed verification.
+    pub fallbacks: u64,
+}
+
 /// The native solver backend (level or mgd scheduler).
 pub struct NativeBackend {
     threads: usize,
@@ -341,6 +359,8 @@ pub struct NativeBackend {
     mgd_solves: AtomicU64,
     mgd_nodes: AtomicU64,
     mgd_steals: AtomicU64,
+    kir_solves: AtomicU64,
+    kir_fallbacks: AtomicU64,
 }
 
 impl NativeBackend {
@@ -363,6 +383,8 @@ impl NativeBackend {
             mgd_solves: AtomicU64::new(0),
             mgd_nodes: AtomicU64::new(0),
             mgd_steals: AtomicU64::new(0),
+            kir_solves: AtomicU64::new(0),
+            kir_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -451,6 +473,16 @@ impl NativeBackend {
         }
     }
 
+    /// Kernel-IR tier counters since construction: verified-interpreter
+    /// solves and per-solve fallbacks onto the checked `mgd` tier.
+    pub fn kir_stats(&self) -> KirStats {
+        KirStats {
+            // relaxed: monotonic telemetry counters (runtime/atomics.md).
+            solves: self.kir_solves.load(Ordering::Relaxed),
+            fallbacks: self.kir_fallbacks.load(Ordering::Relaxed),
+        }
+    }
+
     /// Barrier-free path: execute the plan's cached
     /// [`MgdPlan`](super::mgd_plan::MgdPlan) (built on first use, sized by
     /// [`MgdPlanConfig::auto`]) through [`mgd_exec::execute_on_class`] on
@@ -476,6 +508,40 @@ impl NativeBackend {
         self.mgd_solves.fetch_add(1, Ordering::Relaxed);
         self.mgd_nodes.fetch_add(stats.nodes_executed, Ordering::Relaxed);
         self.mgd_steals.fetch_add(stats.steals, Ordering::Relaxed);
+        Ok(xs)
+    }
+
+    /// Verified kernel-IR path: the same barrier-free scheduling as
+    /// [`Self::execute_mgd`], with each node's inner loop executed as the
+    /// plan's cached, verifier-accepted bytecode
+    /// ([`LevelSolver::kir_kernel`] lowers + verifies once per matrix,
+    /// off the hot path). A matrix whose lowered program failed
+    /// verification is served on the checked `mgd` tier instead — the
+    /// unchecked interpreter runs verified programs or not at all — with
+    /// the fallback recorded in [`KirStats`].
+    fn execute_kir<B: AsRef<[f32]> + Sync>(
+        &self,
+        plan: &LevelSolver,
+        bs: &[B],
+        class: RequestClass,
+    ) -> Result<Vec<Vec<f32>>> {
+        let Some(kernel) = plan.kir_kernel(self.mgd_budget(plan)) else {
+            // relaxed: monotonic telemetry counter, read only by kir_stats.
+            self.kir_fallbacks.fetch_add(1, Ordering::Relaxed);
+            return self.execute_mgd(plan, bs, class);
+        };
+        // Same pool policy as the mgd path: serial plans never spawn it.
+        let pool = (kernel.plan().par_width > 1)
+            .then(|| self.mgd_worker_pool())
+            .flatten();
+        let (xs, _stats) = match pool {
+            Some(pool) => {
+                mgd_exec::execute_kernel_on_class(&kernel, bs, pool, self.threads, class)?
+            }
+            None => mgd_exec::execute_kernel(&kernel, bs, 1)?,
+        };
+        // relaxed: monotonic telemetry counter, read only by kir_stats.
+        self.kir_solves.fetch_add(1, Ordering::Relaxed);
         Ok(xs)
     }
 
@@ -624,18 +690,40 @@ impl SolverBackend for NativeBackend {
         // spawn the persistent pool now, so the first request pays
         // neither the preprocessing nor the thread-spawn cost. Serial
         // plans (par_width 1) skip the pool spawn — solves of such a
-        // matrix never engage it (see `execute_mgd`).
-        if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            let mgd = plan.mgd_plan(self.mgd_budget(plan));
-            if mgd.par_width > 1 {
-                let _ = self.mgd_worker_pool();
+        // matrix never engage it (see `execute_mgd`). The kir tier
+        // additionally lowers + verifies the kernel here, so the
+        // verification verdict (and any fallback) is settled before the
+        // first request.
+        match self.resolve_scheduler(plan) {
+            SchedulerKind::Mgd => {
+                let mgd = plan.mgd_plan(self.mgd_budget(plan));
+                if mgd.par_width > 1 {
+                    let _ = self.mgd_worker_pool();
+                }
             }
+            SchedulerKind::Kir => {
+                let par_width = match plan.kir_kernel(self.mgd_budget(plan)) {
+                    Some(kernel) => kernel.plan().par_width,
+                    None => plan.mgd_plan(self.mgd_budget(plan)).par_width,
+                };
+                if par_width > 1 {
+                    let _ = self.mgd_worker_pool();
+                }
+            }
+            SchedulerKind::Level | SchedulerKind::Auto => {}
         }
         Ok(())
     }
 
     fn chosen_scheduler(&self, plan: &LevelSolver) -> Option<SchedulerKind> {
-        Some(self.resolve_scheduler(plan))
+        let chosen = self.resolve_scheduler(plan);
+        // A kir matrix whose lowered program failed verification is
+        // actually served on the checked mgd tier (see `execute_kir`);
+        // report the tier that runs, not the one that was asked for.
+        if chosen == SchedulerKind::Kir && plan.kir_kernel(self.mgd_budget(plan)).is_none() {
+            return Some(SchedulerKind::Mgd);
+        }
+        Some(chosen)
     }
 
     fn solve(&self, plan: &LevelSolver, b: &[f32]) -> Result<Vec<f32>> {
@@ -652,10 +740,10 @@ impl SolverBackend for NativeBackend {
         // needs for its shared-ownership staging. The class only matters
         // on the mgd path — the level scheduler's pool has no lease
         // lanes.
-        let mut out = if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            self.execute_mgd(plan, &[b], class)?
-        } else {
-            self.execute(plan, vec![b.to_vec()])?
+        let mut out = match self.resolve_scheduler(plan) {
+            SchedulerKind::Mgd => self.execute_mgd(plan, &[b], class)?,
+            SchedulerKind::Kir => self.execute_kir(plan, &[b], class)?,
+            _ => self.execute(plan, vec![b.to_vec()])?,
         };
         Ok(out.pop().expect("one RHS in, one solution out"))
     }
@@ -666,10 +754,11 @@ impl SolverBackend for NativeBackend {
         bs: &[Vec<f32>],
         class: RequestClass,
     ) -> Result<Vec<Vec<f32>>> {
-        if self.resolve_scheduler(plan) == SchedulerKind::Mgd {
-            return self.execute_mgd(plan, bs, class);
+        match self.resolve_scheduler(plan) {
+            SchedulerKind::Mgd => self.execute_mgd(plan, bs, class),
+            SchedulerKind::Kir => self.execute_kir(plan, bs, class),
+            _ => self.execute(plan, bs.to_vec()),
         }
-        self.execute(plan, bs.to_vec())
     }
 }
 
@@ -775,9 +864,15 @@ mod tests {
     fn scheduler_kind_parses_and_displays() {
         assert_eq!("level".parse::<SchedulerKind>().unwrap(), SchedulerKind::Level);
         assert_eq!("mgd".parse::<SchedulerKind>().unwrap(), SchedulerKind::Mgd);
+        assert_eq!("kir".parse::<SchedulerKind>().unwrap(), SchedulerKind::Kir);
         assert_eq!("auto".parse::<SchedulerKind>().unwrap(), SchedulerKind::Auto);
         assert!("coarse".parse::<SchedulerKind>().is_err());
-        for k in [SchedulerKind::Auto, SchedulerKind::Level, SchedulerKind::Mgd] {
+        for k in [
+            SchedulerKind::Auto,
+            SchedulerKind::Level,
+            SchedulerKind::Mgd,
+            SchedulerKind::Kir,
+        ] {
             assert_eq!(k.to_string().parse::<SchedulerKind>().unwrap(), k);
         }
     }
@@ -873,6 +968,73 @@ mod tests {
         assert!(stats.nodes_executed > 0, "{stats:?}");
         // The level-path counters stay untouched on the mgd path.
         assert_eq!(nb.stats(), NativeStats::default());
+    }
+
+    /// The `kir` tier through the full backend surface: verified at
+    /// prepare time, bitwise-serial solves through the unchecked
+    /// interpreter, solves counted in [`KirStats`], no fallback.
+    #[test]
+    fn kir_scheduler_is_bitwise_serial_through_the_backend() {
+        use crate::matrix::triangular::solve_serial;
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Kir,
+            ..NativeConfig::default()
+        });
+        let m = gen::circuit(700, 5, 0.8, GenSeed(33));
+        let plan = LevelSolver::new(&m);
+        nb.prepare(&plan).unwrap();
+        assert_eq!(nb.chosen_scheduler(&plan), Some(SchedulerKind::Kir));
+        let bs: Vec<Vec<f32>> = (0..3)
+            .map(|k| (0..m.n).map(|i| ((i + k) % 7) as f32 - 3.0).collect())
+            .collect();
+        let xs = nb.solve_multi(&plan, &bs).unwrap();
+        for (b, x) in bs.iter().zip(&xs) {
+            let want = solve_serial(&m, b);
+            for i in 0..m.n {
+                assert_eq!(x[i].to_bits(), want[i].to_bits(), "row {i}");
+            }
+        }
+        let x0 = nb.solve(&plan, &bs[0]).unwrap();
+        let want = solve_serial(&m, &bs[0]);
+        for i in 0..m.n {
+            assert_eq!(x0[i].to_bits(), want[i].to_bits(), "scalar row {i}");
+        }
+        let stats = nb.kir_stats();
+        assert_eq!(stats.solves, 2, "{stats:?}");
+        assert_eq!(stats.fallbacks, 0, "{stats:?}");
+        // Neither the level- nor the mgd-path counters moved.
+        assert_eq!(nb.stats(), NativeStats::default());
+        assert_eq!(nb.mgd_stats().solves, 0);
+    }
+
+    /// A matrix whose kernel failed verification is served on the checked
+    /// `mgd` tier: correct results, fallback recorded in [`KirStats`],
+    /// and `chosen_scheduler` reports the tier that actually runs.
+    #[test]
+    fn kir_verification_failure_falls_back_to_mgd() {
+        use crate::matrix::triangular::solve_serial;
+        let nb = NativeBackend::new(NativeConfig {
+            threads: 4,
+            scheduler: SchedulerKind::Kir,
+            ..NativeConfig::default()
+        });
+        let m = gen::circuit(400, 5, 0.8, GenSeed(34));
+        let plan = LevelSolver::new(&m);
+        // Poison the per-matrix kernel cache with a verification failure.
+        plan.fail_kir_for_tests();
+        assert_eq!(nb.chosen_scheduler(&plan), Some(SchedulerKind::Mgd));
+        let b: Vec<f32> = (0..m.n).map(|i| (i % 11) as f32 - 5.0).collect();
+        let x = nb.solve(&plan, &b).unwrap();
+        let want = solve_serial(&m, &b);
+        for i in 0..m.n {
+            assert_eq!(x[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+        let stats = nb.kir_stats();
+        assert_eq!(stats.solves, 0, "{stats:?}");
+        assert_eq!(stats.fallbacks, 1, "{stats:?}");
+        // The fallback really ran the checked mgd tier.
+        assert_eq!(nb.mgd_stats().solves, 1);
     }
 
     #[test]
